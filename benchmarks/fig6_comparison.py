@@ -1,0 +1,98 @@
+"""Reproduces paper Fig. 6: ODIN vs CPU-32b/CPU-8b/ISAAC± execution time
+and energy, normalized to ODIN, for CNN1/2 (MNIST) and VGG1/2 (ImageNet).
+
+Paper bands (abstract + §VI-B):
+  vs ISAAC:  VGG 5.8× faster / 1554× more energy-efficient,
+             CNN 90.8× faster / 23.2× more energy-efficient.
+  vs CPUs:   up to 438× (VGG) / 569× (CNN) faster,
+             up to 1530× (VGG) / 30.6× (CNN) more energy-efficient.
+
+Energy accounting (EXPERIMENTS.md §Fig6): with *literature* PCRAM array
+energies (0.5 pJ/bit read / 5 pJ/bit write, 14 nm-scaled [29][30]) ODIN's
+VGG energy is ~430 mJ — 12× MORE than the ISAAC model, so the paper's
+1554× band is unreachable: it implies array access below ~0.2 fJ/bit.  The
+paper prints no PCRAM energy constants; its band is reproducible only under
+ADD-ON-ONLY accounting (Table 3 CMOS energy, array access free).  We report
+BOTH: ``literature`` (default, physically grounded) and ``paper_implied``
+(add-on only, reproduces the paper's bands) — a documented calibration, not
+a fudge.
+"""
+from dataclasses import replace
+
+from repro.pim.baselines import CPU32, CPU8, ISAAC_PIPE, ISAAC_UNPIPE
+from repro.pim.geometry import OdinModule, PCRAMEnergy
+from repro.pim.trace import PAPER_TOPOLOGIES, trace_topology
+
+SYSTEMS = [CPU32, CPU8, ISAAC_PIPE, ISAAC_UNPIPE]
+
+MODULES = {
+    "literature": OdinModule(),
+    "paper_implied": OdinModule(energy=PCRAMEnergy(e_read_pj=0.0, e_write_pj=0.0)),
+}
+
+
+def _one_accounting(mod: OdinModule):
+    out = {}
+    for name, topo in PAPER_TOPOLOGIES.items():
+        odin_cost = trace_topology(topo, mod, accounting="full")
+        odin_t = odin_cost.total_latency_ns * 1e-9
+        odin_e = odin_cost.total_energy_pj * 1e-12
+        rec = {"odin_time_s": odin_t, "odin_energy_j": odin_e, "speedup": {},
+               "energy_ratio": {}}
+        for sys_ in SYSTEMS:
+            t, e = sys_.execute(topo)
+            rec["speedup"][sys_.name] = t / odin_t
+            rec["energy_ratio"][sys_.name] = e / odin_e
+        out[name] = rec
+    return out
+
+
+def run(verbose: bool = True):
+    results = {k: _one_accounting(m) for k, m in MODULES.items()}
+
+    def band(res, names, syss, field):
+        vals = [res[n][field][s.name] for n in names for s in syss]
+        return min(vals), max(vals)
+
+    lit, imp = results["literature"], results["paper_implied"]
+    vgg, cnn = ("VGG1", "VGG2"), ("CNN1", "CNN2")
+    isaac = (ISAAC_PIPE, ISAAC_UNPIPE)
+    cpus = (CPU32, CPU8)
+    bands = {
+        # speed is energy-accounting-independent
+        "isaac_speed_vgg": band(lit, vgg, isaac, "speedup"),
+        "isaac_speed_cnn": band(lit, cnn, isaac, "speedup"),
+        "cpu_speed_max": band(lit, vgg + cnn, cpus, "speedup")[1],
+        "isaac_energy_vgg_lit": band(lit, vgg, isaac, "energy_ratio"),
+        "isaac_energy_vgg_implied": band(imp, vgg, isaac, "energy_ratio"),
+        "isaac_energy_cnn_implied": band(imp, cnn, isaac, "energy_ratio"),
+        "cpu_energy_max_lit": band(lit, vgg + cnn, cpus, "energy_ratio")[1],
+        "paper": dict(isaac_speed_vgg=5.8, isaac_speed_cnn=90.8,
+                      isaac_energy_vgg=1554, isaac_energy_cnn=23.2,
+                      cpu_speed_max=(438, 569), cpu_energy_max=(30.6, 1530)),
+    }
+    bands["checks"] = dict(
+        odin_always_faster=bands["isaac_speed_vgg"][0] > 1
+        and bands["cpu_speed_max"] > 1,
+        isaac_speed_vgg_scale=2 < bands["isaac_speed_vgg"][0] < 30,
+        isaac_speed_cnn_scale=10 < bands["isaac_speed_cnn"][1] < 200,
+        paper_energy_band_needs_addon_only=(
+            bands["isaac_energy_vgg_lit"][1] < 23.2
+            and bands["isaac_energy_vgg_implied"][1] > 23.2
+        ),
+    )
+    if verbose:
+        for acct, res in results.items():
+            print(f"\n# Fig. 6 [{acct}] — normalized to ODIN (>1 = ODIN wins)")
+            for name, r in res.items():
+                print(f"{name}: ODIN {r['odin_time_s']*1e3:.3f} ms / "
+                      f"{r['odin_energy_j']*1e3:.4f} mJ")
+                for s in SYSTEMS:
+                    print(f"   vs {s.name:17s} speed {r['speedup'][s.name]:8.1f}×   "
+                          f"energy {r['energy_ratio'][s.name]:10.1f}×")
+        print("\nbands:", {k: v for k, v in bands.items() if k != "paper"})
+    return {"results": results, "bands": bands}
+
+
+if __name__ == "__main__":
+    run()

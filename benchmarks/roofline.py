@@ -1,0 +1,54 @@
+"""§Roofline table: per (arch × shape × mesh) three-term roofline from the
+cached dry-run artifacts (experiments/dryrun/*.json).
+
+Terms (per chip, per step):  compute = FLOPs/peak,  memory = bytes/HBM-BW,
+collective = wire-bytes/ICI-BW.  MODEL_FLOPS = 6·N_active·D (train) or
+2·N_active·D (inference); useful-flops ratio flags remat/redundancy waste.
+Run ``python -m repro.launch.dryrun --all --multi-pod both`` first (or let
+run.py use whatever cells are cached).
+"""
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_records(dryrun_dir: str = DRYRUN_DIR):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return [r for r in recs if r.get("status") == "OK"]
+
+
+def run(verbose: bool = True, dryrun_dir: str = DRYRUN_DIR):
+    recs = load_records(dryrun_dir)
+    rows = []
+    for r in recs:
+        t = r["roofline"]
+        rows.append(dict(
+            arch=r["arch"], shape=r["shape"], mesh="pod2" if r["multi_pod"] else "pod1",
+            compute_s=t["compute_s"], memory_s=t["memory_s"],
+            collective_s=t["collective_s"], bottleneck=t["bottleneck"],
+            useful=t["useful_flops_ratio"], mfu_ub=t["mfu_upper_bound"],
+            mem_gb=r["memory"]["total_bytes"] / 1e9, fits=r["fits_hbm"],
+        ))
+    rows.sort(key=lambda x: (x["arch"], x["shape"], x["mesh"]))
+    if verbose:
+        print("\n# §Roofline — per-cell terms (seconds/step/chip) from the dry-run")
+        print(f"{'arch':22} {'shape':12} {'mesh':5} {'compute':>10} {'memory':>10} "
+              f"{'coll':>10} {'bound':>10} {'useful':>7} {'MFU-UB':>7} {'GB/dev':>7} fits")
+        for x in rows:
+            print(f"{x['arch']:22} {x['shape']:12} {x['mesh']:5} "
+                  f"{x['compute_s']:10.3e} {x['memory_s']:10.3e} "
+                  f"{x['collective_s']:10.3e} {x['bottleneck']:>10} "
+                  f"{x['useful']:7.3f} {x['mfu_ub']:7.4f} {x['mem_gb']:7.2f} "
+                  f"{'Y' if x['fits'] else 'N'}")
+        if not rows:
+            print("(no cached dry-run cells — run python -m repro.launch.dryrun --all)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

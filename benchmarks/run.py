@@ -1,0 +1,44 @@
+"""Benchmark aggregator — one section per paper table/figure + beyond-paper.
+
+  table1  — PIMC command latencies (paper Table 1, exact)
+  table2  — topology memory/read/write counts (paper Table 2)
+  table3  — add-on logic overhead roll-up (paper Table 3)
+  fig6    — ODIN vs CPU/ISAAC time+energy, dual energy accounting (Fig. 6)
+  odin_lm — the ODIN cost model on the 10 assigned LM archs (beyond paper)
+  kernels — Pallas kernel microbench + structural TPU model
+  roofline— per-cell roofline terms from the cached dry-run artifacts
+"""
+import sys
+import traceback
+
+from benchmarks import (fig6_comparison, kernel_bench, odin_lm_cost, roofline,
+                        table1_commands, table2_topologies, table3_overheads)
+
+SECTIONS = [
+    ("table1", table1_commands.run),
+    ("table2", table2_topologies.run),
+    ("table3", table3_overheads.run),
+    ("fig6", fig6_comparison.run),
+    ("odin_lm", odin_lm_cost.run),
+    ("kernels", kernel_bench.run),
+    ("roofline", roofline.run),
+]
+
+
+def main() -> None:
+    failures = []
+    for name, fn in SECTIONS:
+        print(f"\n{'='*72}\n== {name}\n{'='*72}")
+        try:
+            fn(verbose=True)
+        except Exception:  # report all sections even if one breaks
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"\nFAILED sections: {failures}")
+        sys.exit(1)
+    print("\nall benchmark sections completed")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,33 @@
+"""Reproduces paper Table 1: PIMC command reads/writes/latency (exact)."""
+from repro.pim.commands import TABLE1_EXPECTED, command_set
+from repro.pim.geometry import OdinModule
+
+
+def run(verbose: bool = True):
+    mod = OdinModule()
+    cs = command_set()
+    rows = []
+    ok = True
+    for name, exp in TABLE1_EXPECTED.items():
+        c = cs[name]
+        lat = c.latency_ns(mod)
+        match = (c.reads == exp["reads"] and c.writes == exp["writes"]
+                 and abs(lat - exp["latency_ns"]) < 1e-9)
+        ok &= match
+        rows.append(dict(command=name, reads=c.reads, writes=c.writes,
+                         latency_ns=lat, paper_latency_ns=exp["latency_ns"],
+                         energy_pj=round(c.energy_pj(mod), 1),
+                         match="EXACT" if match else "MISMATCH"))
+    if verbose:
+        print("\n# Table 1 — ODIN PIMC commands (derived t_R=48ns, t_W=60ns)")
+        print(f"{'command':10} {'R':>3} {'W':>3} {'lat(ns)':>9} {'paper':>7} "
+              f"{'E(pJ)':>10} match")
+        for r in rows:
+            print(f"{r['command']:10} {r['reads']:3d} {r['writes']:3d} "
+                  f"{r['latency_ns']:9.0f} {r['paper_latency_ns']:7d} "
+                  f"{r['energy_pj']:10.1f} {r['match']}")
+    return {"rows": rows, "all_exact": ok}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Reproduces paper Table 2: per-topology memory, reads, writes.
+
+Paper cells that parse cleanly from the OCR'd table are compared directly;
+the CNN/conv columns are mangled in the source, so we print our first-
+principles derivation beside whatever is comparable and flag the rest
+(DESIGN.md §6.2).
+"""
+from repro.pim.geometry import OdinModule
+from repro.pim.trace import PAPER_TOPOLOGIES, trace_topology
+
+# cleanly parseable cells of paper Table 2 (reads/writes ×1e6, memory Gb)
+PAPER = {
+    "VGG1": dict(fc_mem_gbit=1.93, fc_reads=247e6, fc_writes=248e6,
+                 conv_reads=58.8e6, conv_writes=30.3e6),
+    "VGG2": dict(fc_mem_gbit=1.96, fc_reads=251e6, fc_writes=252e6,
+                 conv_reads=60.01e6, conv_writes=30.9e6),
+    "CNN1": dict(fc_mem_gbit=0.00095 * 8, fc_reads=1.22e6, fc_writes=1.226e6),
+    "CNN2": dict(fc_mem_gbit=0.00098 * 8, fc_reads=1.254e6, fc_writes=1.257e6),
+}
+
+
+def run(verbose: bool = True):
+    mod = OdinModule()
+    out = {}
+    for name, topo in PAPER_TOPOLOGIES.items():
+        cost = trace_topology(topo, mod, accounting="paper")
+        full = trace_topology(topo, mod, accounting="full")
+        rec = dict(
+            fc_mem_gbit=cost.fc_mem_gbit, conv_mem_gbit=cost.conv_mem_gbit,
+            fc_reads=cost.fc_reads, fc_writes=cost.fc_writes,
+            conv_reads=cost.conv_reads, conv_writes=cost.conv_writes,
+            total_macs=cost.total_macs,
+            latency_ms_full=full.total_latency_ns / 1e6,
+            energy_mj_full=full.total_energy_pj / 1e9,
+        )
+        paper = PAPER.get(name, {})
+        rec["vs_paper"] = {
+            k: round(rec[k] / v, 3) for k, v in paper.items() if v and k in rec
+        }
+        out[name] = rec
+    if verbose:
+        print("\n# Table 2 — topology costs on ODIN (ours / paper ratio)")
+        for name, r in out.items():
+            print(f"{name}: fc_mem {r['fc_mem_gbit']:.4f} Gb | "
+                  f"fc R/W {r['fc_reads']/1e6:.1f}/{r['fc_writes']/1e6:.1f} M | "
+                  f"conv R/W {r['conv_reads']/1e6:.2f}/{r['conv_writes']/1e6:.2f} M | "
+                  f"lat {r['latency_ms_full']:.3f} ms | E {r['energy_mj_full']:.3f} mJ")
+            if r["vs_paper"]:
+                print(f"   ratio vs paper: {r['vs_paper']}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

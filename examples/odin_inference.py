@@ -1,0 +1,96 @@
+"""End-to-end ODIN inference: train CNN1 on synthetic digits, quantize to
+8-bit, run inference in all three execution modes (fp32 / int8 / bit-faithful
+stochastic), and report the accuracy gaps + the PCRAM execution cost.
+
+This is the paper's core experiment (Table 2 accuracy column + Fig. 6 cost)
+on the offline-synthesizable stand-in task (DESIGN.md §6.4: we validate the
+quantization/SC *gap*, not absolute MNIST numbers).
+
+    PYTHONPATH=src python examples/odin_inference.py [--steps 300]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.odin_linear import OdinConfig
+from repro.data.synthetic import digits_batch
+from repro.nn.cnn import RUNNABLE_CNN1, cnn_forward, cnn_loss, cnn_param_spec
+from repro.nn.module import materialize
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.pim.geometry import OdinModule
+from repro.pim.trace import trace_topology
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--sc-eval-batches", type=int, default=2)
+    args = ap.parse_args()
+
+    topo = RUNNABLE_CNN1
+    params = materialize(cnn_param_spec(topo), jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(moment_dtype="float32", weight_decay=0.0)
+    opt = adamw_init(params, opt_cfg)
+
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, m), g = jax.value_and_grad(cnn_loss, has_aux=True)(params, batch, topo)
+        params, opt = adamw_update(g, params, opt, 1e-3, opt_cfg)
+        return params, opt, m
+
+    print(f"== training CNN1 ({args.steps} steps on synthetic digits)")
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = digits_batch(0, i, batch=args.batch)
+        params, opt, m = step(params, opt, batch)
+        if i % 50 == 0 or i == args.steps - 1:
+            print(f"   step {i:4d}  loss {float(m['loss']):.3f}  "
+                  f"acc {float(m['acc']):.3f}")
+    print(f"   trained in {time.time()-t0:.1f}s")
+
+    def evaluate(odin, n_batches, bs=64):
+        correct = total = 0
+        for i in range(n_batches):
+            b = digits_batch(1, 10_000 + i, batch=bs)
+            logits = cnn_forward(params, b["image"], topo, odin=odin)
+            correct += int((jnp.argmax(logits, -1) == b["label"]).sum())
+            total += bs
+        return correct / total
+
+    print("== held-out accuracy per execution mode")
+    acc_fp = evaluate(None, 8)
+    acc_i8 = evaluate(OdinConfig(mode="int8", signed_activations=True), 8)
+    # hybrid SC: per-block MUX subtree + popcount + binary accumulate; the
+    # block size is the position of ODIN's hybrid binary/stochastic boundary
+    # (32 = the PCRAM row/command operand granularity)
+    nb, bs = args.sc_eval_batches, 16
+    acc_sc32 = evaluate(OdinConfig(mode="sc", signed_activations=False, sc_block_k=32), nb, bs)
+    acc_sc8 = evaluate(OdinConfig(mode="sc", signed_activations=False, sc_block_k=8), nb, bs)
+    # naive full-tree SC: one MUX tree over all K inputs — at K=784 the
+    # 1/K̂ stream subsampling destroys the signal (documented finding)
+    acc_sc_full = evaluate(OdinConfig(mode="sc", signed_activations=True, sc_block_k=0),
+                           1, bs=16)
+    print(f"   fp32           : {acc_fp:.3f}")
+    print(f"   int8           : {acc_i8:.3f}   (gap {100*(acc_fp-acc_i8):+.1f} pp)")
+    print(f"   sc (hybrid/32) : {acc_sc32:.3f}   (gap {100*(acc_fp-acc_sc32):+.1f} pp — "
+          f"paper's row granularity)")
+    print(f"   sc (hybrid/8)  : {acc_sc8:.3f}   (gap {100*(acc_fp-acc_sc8):+.1f} pp — "
+          f"finer popcount boundary)")
+    print(f"   sc (full tree) : {acc_sc_full:.3f}   (collapses at K=784 — a 256-bit "
+          f"stream cannot survive a 1024-deep MUX tree)")
+    print("   ⇒ the hybrid-boundary position is THE accuracy/energy knob: the "
+          "paper's 'minimal loss' claim needs popcounts at ≤32-operand blocks.")
+
+    print("== in-situ PCRAM cost for one inference (transaction model)")
+    cost = trace_topology(topo, OdinModule())
+    print(f"   latency {cost.total_latency_ns/1e3:.1f} µs, "
+          f"energy {cost.total_energy_pj/1e9:.3f} mJ, "
+          f"MACs {cost.total_macs/1e3:.0f}k")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Batched KV-cache serving example (deliverable b, serving flavor).
+
+Prefills a batch of synthetic prompts through a smoke-size config of any
+assigned architecture and decodes greedily — the same prefill/decode step
+functions the production dry-run lowers at decode_32k / long_500k.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch hymba-1.5b
+"""
+import argparse
+
+import numpy as np
+
+from repro.launch.serve import serve
+from repro.models import registry
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi4-mini-3.8b", choices=registry.ARCH_IDS)
+    ap.add_argument("--full", action="store_true",
+                    help="full config (CPU: slow!) instead of smoke")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = registry.get_config(args.arch) if args.full else registry.get_smoke(args.arch)
+    generated, tps = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
+                           gen=args.gen)
+    print(f"arch={args.arch} ({'full' if args.full else 'smoke'})")
+    for i in range(min(args.batch, 3)):
+        print(f"  request {i}: {np.asarray(generated)[i].ravel()[:20]}")
+
+
+if __name__ == "__main__":
+    main()

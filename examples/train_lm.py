@@ -1,0 +1,54 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps with
+checkpoint-restart fault tolerance (deliverable b).
+
+Uses a 4-layer, d=512 dense transformer (phi4-family block) on the
+deterministic synthetic token task; loss should fall from ~ln(V) toward ~1
+within a few hundred steps.  Interrupt it and re-run with --resume to see
+exact continuation.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300 [--resume]
+"""
+import argparse
+
+from repro.configs.base import AttnConfig, BlockConfig, ModelConfig
+from repro.launch.train import train_loop
+from repro.optim.adamw import AdamWConfig
+
+# ~100M params: 12L × d=768, 12 heads, GQA kv=4, SwiGLU ff=2048, vocab 8192
+CFG_100M = ModelConfig(
+    name="demo-100m",
+    d_model=768,
+    vocab=8_192,
+    blocks=(
+        BlockConfig(
+            kind="dense", n_layers=12,
+            attn=AttnConfig(kind="gqa", n_heads=12, n_kv_heads=4, d_head=64),
+            d_ff=2_048,
+        ),
+    ),
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/train_lm_100m")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--int8-moments", action="store_true",
+                    help="8-bit optimizer states (the paper's 8-bit theme)")
+    args = ap.parse_args()
+
+    opt_cfg = AdamWConfig(moment_dtype="int8" if args.int8_moments else "float32")
+    state, losses = train_loop(
+        CFG_100M, steps=args.steps, batch=args.batch, seq=args.seq,
+        ckpt_dir=args.ckpt_dir, resume=args.resume, save_every=50,
+        opt_cfg=opt_cfg, base_lr=1e-3, log_every=20,
+    )
+    print(f"first-10 mean loss {sum(losses[:10])/max(len(losses[:10]),1):.3f} → "
+          f"last-10 mean loss {sum(losses[-10:])/max(len(losses[-10:]),1):.3f}")
+
+
+if __name__ == "__main__":
+    main()

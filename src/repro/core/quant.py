@@ -1,0 +1,58 @@
+"""8-bit quantization — the paper's "fixed 8-bit operand" adjustment (§IV-B.1).
+
+ODIN's SN format is *unipolar* (densities in [0, 1]); the paper fixes operands
+to 8 bits and notes results always lie in [0, 1].  Real ANN weights are signed,
+which the paper leaves implicit.  We complete the design the standard SC way
+(two-rail): split a signed weight matrix into its positive and negative parts,
+run two unipolar MAC trees, and subtract in the *binary* domain (inside the
+same add-on block that applies ReLU) — consistent with ODIN's hybrid
+binary/stochastic boundary.  Activations after ReLU are naturally unipolar.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["QuantParams", "quantize_unipolar", "quantize_signed_tworail", "dequantize"]
+
+
+@dataclass(frozen=True)
+class QuantParams:
+    scale: jax.Array          # per-tensor ([]) or per-channel ([C]) fp32
+    n_levels: int = 256
+
+
+def _amax(x: jax.Array, axis) -> jax.Array:
+    m = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    return jnp.maximum(m, 1e-12)
+
+
+def quantize_unipolar(x: jax.Array, n_levels: int = 256, axis=None) -> Tuple[jax.Array, QuantParams]:
+    """Quantize non-negative ``x`` to integers in [0, n_levels-1].
+
+    ``x ≈ q * scale`` with ``scale = max(x)/(n_levels-1)``.
+    """
+    scale = _amax(x, axis) / (n_levels - 1)
+    q = jnp.clip(jnp.round(x / scale), 0, n_levels - 1).astype(jnp.uint8)
+    return q, QuantParams(jnp.squeeze(scale) if axis is None else scale, n_levels)
+
+
+def quantize_signed_tworail(
+    w: jax.Array, n_levels: int = 256, axis=None
+) -> Tuple[jax.Array, jax.Array, QuantParams]:
+    """Split signed ``w`` into unipolar (pos, neg) integer rails.
+
+    ``w ≈ (q_pos - q_neg) * scale``; exactly one rail is nonzero per element.
+    """
+    scale = _amax(w, axis) / (n_levels - 1)
+    q = jnp.clip(jnp.round(w / scale), -(n_levels - 1), n_levels - 1)
+    q_pos = jnp.clip(q, 0, None).astype(jnp.uint8)
+    q_neg = jnp.clip(-q, 0, None).astype(jnp.uint8)
+    return q_pos, q_neg, QuantParams(jnp.squeeze(scale) if axis is None else scale, n_levels)
+
+
+def dequantize(q: jax.Array, params: QuantParams) -> jax.Array:
+    return q.astype(jnp.float32) * params.scale

@@ -1,0 +1,242 @@
+"""Stochastic-number (SN) arithmetic — the heart of ODIN (paper §III-C, §IV-B).
+
+An 8-bit binary operand ``v`` (``0 <= v < n_levels``) is represented as a
+``stream_len``-bit pseudorandom bitstream whose density (fraction of ones) is
+``v / n_levels``.  In this format
+
+* multiplication  = bit-parallel AND                       (paper Fig. 2a)
+* scaled addition = bit-parallel MUX, ``c = s·a + s̄·b``   (paper Fig. 2b, s = 0.5)
+* B→S conversion  = LUT lookup (paper's 256×256 SRAM LUT)
+* S→B conversion  = popcount   (paper's PISO + level counter)
+
+TPU adaptation (DESIGN.md §2): streams are packed little-endian into ``uint32``
+words so a 256-bit PCRAM row block becomes 8 lanes of a vector register; the
+bit-parallel PCRAM row ops become VPU bitwise ops.  The PISO serialization of
+the paper's pop counter is *not* ported — ``lax.population_count`` is parallel.
+
+Stream-generation model ("comparator SNG"): each LUT draws one random
+permutation ``perm`` of stream positions; position ``i`` of row ``v`` is set
+iff ``rank(i) < v``.  Hence row ``v`` has *exactly* ``v`` ones (popcount is
+exact: ``s_to_b(b_to_s(v)) == v``), rows are nested, and two *independent*
+LUTs give ``E[popcount(AND)] = a·b/n_levels`` exactly with hypergeometric
+variance.  The paper does not specify its LUT contents; this is the minimal
+completion that makes AND a product (a single shared LUT would compute
+``min(a, b)`` — see tests).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+
+__all__ = [
+    "StreamSpec",
+    "make_lut",
+    "make_select_streams",
+    "b_to_s",
+    "s_to_b",
+    "sc_mul",
+    "sc_mux",
+    "sc_not",
+    "sc_mac_tree",
+    "sc_matmul",
+    "expected_matmul",
+    "pack_bits",
+    "unpack_bits",
+]
+
+
+@dataclass(frozen=True)
+class StreamSpec:
+    """Geometry of the stochastic representation.
+
+    ``stream_len`` — bits per stream (paper: 256 = one PCRAM row block).
+    ``n_levels``   — quantization levels (paper: 256 = 8-bit operands).
+    """
+
+    stream_len: int = 256
+    n_levels: int = 256
+
+    def __post_init__(self):
+        if self.stream_len % WORD_BITS:
+            raise ValueError(f"stream_len must be a multiple of {WORD_BITS}")
+        if self.n_levels > self.stream_len + 1:
+            raise ValueError("n_levels cannot exceed stream_len + 1 (density is k/stream_len)")
+
+    @property
+    def n_words(self) -> int:
+        return self.stream_len // WORD_BITS
+
+
+# ---------------------------------------------------------------------------
+# packing helpers
+# ---------------------------------------------------------------------------
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """Pack a little-endian bool/int array ``[..., L]`` into ``uint32 [..., L/32]``."""
+    *lead, L = bits.shape
+    assert L % WORD_BITS == 0, L
+    b = bits.astype(jnp.uint32).reshape(*lead, L // WORD_BITS, WORD_BITS)
+    weights = (jnp.uint32(1) << jnp.arange(WORD_BITS, dtype=jnp.uint32))
+    return (b * weights).sum(axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_bits` — ``uint32 [..., W]`` → bool ``[..., W*32]``."""
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(*words.shape[:-1], words.shape[-1] * WORD_BITS).astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# LUT construction (the paper's 256x256 SRAM block)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _make_lut(key: jax.Array, stream_len: int, n_levels: int) -> jax.Array:
+    ranks = jax.random.permutation(key, stream_len)          # rank of each position
+    levels = jnp.arange(n_levels)[:, None]                   # [V, 1]
+    bits = ranks[None, :] < levels                           # [V, L] row v has v ones
+    return pack_bits(bits)
+
+
+def make_lut(key: jax.Array, spec: StreamSpec = StreamSpec()) -> jax.Array:
+    """Build one B→S lookup table: ``uint32 [n_levels, n_words]``.
+
+    Weights and activations must use LUTs built from *different* keys
+    (decorrelation — DESIGN.md §2).  8 KB at the paper's geometry: trivially
+    VMEM-resident on TPU, exactly like the paper's per-bank SRAM block.
+    """
+    return _make_lut(key, spec.stream_len, spec.n_levels)
+
+
+def make_select_streams(key: jax.Array, depth: int, spec: StreamSpec = StreamSpec()) -> jax.Array:
+    """Per-tree-level ``s = 0.5`` select streams, ``uint32 [depth, n_words]``.
+
+    The paper pre-stores S and S' in two Compute-Partition rows; we generate
+    one independent half-density stream per MUX-tree level (exactly
+    ``stream_len/2`` ones) so each level's subsampling is unbiased.
+    """
+    keys = jax.random.split(key, depth)
+    half = StreamSpec(spec.stream_len, 2)  # level-1 threshold unused; build manually
+
+    def one(k):
+        ranks = jax.random.permutation(k, spec.stream_len)
+        return pack_bits(ranks < spec.stream_len // 2)
+
+    return jax.vmap(one)(keys)
+
+
+# ---------------------------------------------------------------------------
+# conversions
+# ---------------------------------------------------------------------------
+
+def b_to_s(values: jax.Array, lut: jax.Array) -> jax.Array:
+    """Binary → stochastic: gather LUT rows. ``values`` int in [0, n_levels)."""
+    return lut[values]
+
+
+def s_to_b(streams: jax.Array) -> jax.Array:
+    """Stochastic → binary: popcount over packed words (paper's PISO+counter)."""
+    return jax.lax.population_count(streams).sum(axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# arithmetic (bit-parallel, over packed words)
+# ---------------------------------------------------------------------------
+
+def sc_mul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Stochastic multiply: bitwise AND (paper Fig. 2a)."""
+    return jnp.bitwise_and(a, b)
+
+
+def sc_not(a: jax.Array) -> jax.Array:
+    return jnp.bitwise_not(a)
+
+
+def sc_mux(a: jax.Array, b: jax.Array, select: jax.Array) -> jax.Array:
+    """Stochastic scaled add ``0.5·a + 0.5·b``: MUX = (S∧a) ∨ (S̄∧b) (Fig. 2b).
+
+    This is exactly the paper's ANN_ACC decomposition: two bit-parallel ANDs
+    followed by one bit-parallel OR (PINATUBO row ops).
+    """
+    return jnp.bitwise_or(jnp.bitwise_and(select, a), jnp.bitwise_and(jnp.bitwise_not(select), b))
+
+
+def sc_mac_tree(streams: jax.Array, select_streams: jax.Array) -> jax.Array:
+    """Balanced MUX tree over ``streams [K, W]`` → one stream ``[W]``.
+
+    Computes a stream of density ``(1/K̂)·Σ densities`` where ``K̂`` is K
+    rounded up to a power of two (zero-padded).  ``select_streams [depth, W]``
+    must have ``depth >= ceil(log2 K)`` levels.
+    """
+    K = streams.shape[-2]
+    depth = max(1, int(np.ceil(np.log2(max(K, 2)))))
+    pad = (1 << depth) - K
+    if pad:
+        streams = jnp.concatenate(
+            [streams, jnp.zeros((*streams.shape[:-2], pad, streams.shape[-1]), streams.dtype)],
+            axis=-2,
+        )
+    for level in range(depth):
+        half = streams.shape[-2] // 2
+        sel = select_streams[level]
+        streams = sc_mux(streams[..., 0::2, :], streams[..., 1::2, :], sel)
+        assert streams.shape[-2] == half
+    return streams[..., 0, :]
+
+
+def tree_depth(k: int) -> int:
+    return max(1, int(np.ceil(np.log2(max(int(k), 2)))))
+
+
+# ---------------------------------------------------------------------------
+# full stochastic GEMM (reference semantics; the Pallas kernel fuses this)
+# ---------------------------------------------------------------------------
+
+def sc_matmul(
+    a_q: jax.Array,          # uint8/int32 [M, K] quantized unipolar activations
+    w_q: jax.Array,          # uint8/int32 [K, N] quantized unipolar weights
+    lut_a: jax.Array,
+    lut_w: jax.Array,
+    select_streams: jax.Array,
+    spec: StreamSpec = StreamSpec(),
+) -> jax.Array:
+    """ODIN MAC array in SN format.  Returns int32 popcounts ``[M, N]``.
+
+    out[m, n] = popcount( MUXtree_k( AND(lut_a[a[m,k]], lut_w[w[k,n]]) ) )
+
+    so ``out/stream_len ≈ (1/K̂)·Σ_k (a/L)(w/L)``.  Materializes streams —
+    intended for reference/tests; large shapes go through the fused Pallas
+    kernel (kernels/sc_mac) or the ``expected`` surrogate.
+    """
+    sa = b_to_s(a_q.astype(jnp.int32), lut_a)                # [M, K, W]
+    sw = b_to_s(w_q.astype(jnp.int32), lut_w)                # [K, N, W]
+    prod = sc_mul(sa[:, None, :, :], jnp.moveaxis(sw, 0, 1)[None, :, :, :])  # [M,N,K,W]
+    acc = sc_mac_tree(prod, select_streams)                  # [M, N, W]
+    return s_to_b(acc)
+
+
+def expected_matmul(
+    a_q: jax.Array,
+    w_q: jax.Array,
+    spec: StreamSpec = StreamSpec(),
+) -> jax.Array:
+    """Deterministic expected value of :func:`sc_matmul` (DESIGN.md §2).
+
+    E[popcount] = stream_len · (1/K̂) · Σ_k (a_k/L)(w_k/L).  Computed as an
+    integer dot (MXU int8 path on TPU) with the same scaling semantics, so the
+    quantization boundary is bit-identical between the two execution modes.
+    """
+    K = a_q.shape[-1]
+    khat = 1 << tree_depth(K)
+    dot = jnp.matmul(
+        a_q.astype(jnp.int32), w_q.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+    scale = spec.stream_len / (khat * spec.n_levels * spec.n_levels)
+    return dot.astype(jnp.float32) * scale

@@ -1,0 +1,2 @@
+from repro.kernels.act_pool.ops import act_pool
+from repro.kernels.act_pool.ref import act_pool_ref

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused activation + pooling kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["act_pool_ref"]
+
+
+def act_pool_ref(x, pool: int = 2, act: str = "relu", pool_kind: str = "max"):
+    """int32 NHWC → 8-bit activation then p×p pooling (stride p)."""
+    B, H, W, C = x.shape
+    if act == "tanh":
+        r = jnp.clip(jnp.round(255.0 * jnp.tanh(x.astype(jnp.float32) / 64.0)),
+                     0, 255).astype(jnp.int32)
+    else:
+        r = jnp.clip(x, 0, 255)
+    r = r.reshape(B, H // pool, pool, W // pool, pool, C)
+    if pool_kind == "avg":
+        return jnp.round(r.sum(axis=(2, 4)).astype(jnp.float32) / (pool * pool)).astype(jnp.int32)
+    return r.max(axis=(2, 4))

@@ -1,0 +1,2 @@
+from repro.kernels.int8_mm.ops import int8_mm_pallas, int8_matmul
+from repro.kernels.int8_mm.ref import int8_mm_ref

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the int8 GEMM + dequant kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["int8_mm_ref"]
+
+
+def int8_mm_ref(a, w, scale_a, scale_w):
+    """int8 [M,K] · int8 [K,N], exact int32 accumulate, fp32 dequant."""
+    acc = jnp.matmul(a.astype(jnp.int32), w.astype(jnp.int32),
+                     preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * (scale_a.reshape(-1, 1) * scale_w.reshape(1, -1))

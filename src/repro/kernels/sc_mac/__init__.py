@@ -1,0 +1,2 @@
+from repro.kernels.sc_mac.ops import sc_matmul_pallas
+from repro.kernels.sc_mac.ref import sc_matmul_tree_ref, sc_matmul_hybrid_ref, ranks_from_lut

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for the sc_mac kernel.
+
+Two semantics, matching the kernel's two operating regimes:
+
+* ``sc_matmul_tree_ref``   — single-K-tile full MUX tree.  Bit-identical to
+  ``repro.core.stochastic.sc_matmul`` (re-derivation, used as the kernel
+  oracle so the test does not compare a function with itself).
+* ``sc_matmul_hybrid_ref`` — K tiled into ``block_k`` chunks; each chunk is
+  reduced by its own depth-log2(block_k) MUX tree and popcounted; chunk
+  popcounts accumulate in int32 (the kernel's cross-tile binary accumulate).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stochastic as sc
+
+__all__ = ["sc_matmul_tree_ref", "sc_matmul_hybrid_ref", "ranks_from_lut"]
+
+
+def ranks_from_lut(lut: jax.Array, n_levels: int) -> jax.Array:
+    """Recover the SNG permutation ranks from a packed LUT.
+
+    Bit ``i`` is set in rows ``v > rank_i`` ⇒ column popcount over rows is
+    ``(L-1) - min(rank_i, L-1)``.  Ranks ≥ L-1 are indistinguishable from
+    L-1 for every comparison with v < L, so the capped recovery is exact for
+    stream generation.  Returned as int32 ``[W, 32]`` (word, bit) layout.
+    """
+    bits = sc.unpack_bits(lut)                       # [L, stream_len]
+    counts = bits.sum(axis=0).astype(jnp.int32)      # [stream_len]
+    ranks = (n_levels - 1) - counts
+    W = lut.shape[-1]
+    return ranks.reshape(W, 32)
+
+
+def _streams(values: jax.Array, ranks_w32: jax.Array) -> jax.Array:
+    """Comparator SNG: int [..] → packed uint32 [.., W] (same math as kernel)."""
+    cmp = values[..., None, None] > ranks_w32        # [.., W, 32]
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return (cmp.astype(jnp.uint32) * weights).sum(axis=-1, dtype=jnp.uint32)
+
+
+def sc_matmul_tree_ref(a_q, w_q, lut_a, lut_w, selects, spec: sc.StreamSpec):
+    """Full-tree oracle (== core.stochastic.sc_matmul, independent derivation)."""
+    ra = ranks_from_lut(lut_a, spec.n_levels)
+    rw = ranks_from_lut(lut_w, spec.n_levels)
+    sa = _streams(a_q.astype(jnp.int32), ra)                         # [M, K, W]
+    sw = _streams(w_q.astype(jnp.int32), rw)                         # [K, N, W]
+    prod = sa[:, None] & jnp.moveaxis(sw, 0, 1)[None]                # [M, N, K, W]
+    acc = sc.sc_mac_tree(prod, selects)
+    return sc.s_to_b(acc)
+
+
+def sc_matmul_hybrid_ref(a_q, w_q, lut_a, lut_w, selects, spec: sc.StreamSpec,
+                         block_k: int):
+    """Tiled-hybrid oracle: per-K-tile MUX subtree + int32 popcount accumulate."""
+    M, K = a_q.shape
+    _, N = w_q.shape
+    pad = (-K) % block_k
+    a_p = jnp.pad(a_q.astype(jnp.int32), ((0, 0), (0, pad)))
+    w_p = jnp.pad(w_q.astype(jnp.int32), ((0, pad), (0, 0)))
+    Kp = K + pad
+    out = jnp.zeros((M, N), jnp.int32)
+    depth = int(np.log2(block_k))
+    assert 1 << depth == block_k
+    ra = ranks_from_lut(lut_a, spec.n_levels)
+    rw = ranks_from_lut(lut_w, spec.n_levels)
+    for t in range(Kp // block_k):
+        a_t = a_p[:, t * block_k:(t + 1) * block_k]
+        w_t = w_p[t * block_k:(t + 1) * block_k]
+        sa = _streams(a_t, ra)
+        sw = _streams(w_t, rw)
+        prod = sa[:, None] & jnp.moveaxis(sw, 0, 1)[None]            # [M,N,bk,W]
+        x = prod
+        for level in range(depth):
+            sel = selects[level]
+            x = (sel & x[..., 0::2, :]) | (~sel & x[..., 1::2, :])
+        out = out + jax.lax.population_count(x[..., 0, :]).astype(jnp.int32).sum(-1)
+    return out

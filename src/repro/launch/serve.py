@@ -1,0 +1,88 @@
+"""Batched KV-cache serving driver: prefill → decode loop.
+
+Serves a model over a batch of synthetic requests: one jitted prefill step
+fills the caches for the prompt, then a jitted decode step generates tokens
+greedily.  The same step functions are what the dry-run lowers at the
+decode_32k / long_500k cells, so this driver is the runnable witness that
+the serving path works end to end.
+
+Continuous-batching shape discipline: prompts are right-aligned into a fixed
+[B, S_prompt] window and generation always runs the same [B, 1] step, so one
+compiled executable serves every request mix (no recompiles mid-flight).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShapeConfig
+from repro.launch import specs as specs_mod
+from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.models import lm, registry
+from repro.nn import module as nnmod
+
+__all__ = ["serve", "main"]
+
+
+def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
+          params=None, verbose: bool = True):
+    """Returns (generated [B, gen] int32, tokens/s)."""
+    if params is None:
+        params = nnmod.materialize(lm.param_spec(cfg), jax.random.PRNGKey(seed))
+    max_len = prompt_len + gen
+    shape = ShapeConfig("serve", prompt_len, batch, "prefill")
+    batch_data = specs_mod.concrete_batch(cfg, shape, seed, 0)
+
+    prefill = jax.jit(make_prefill_step(cfg, max_len=max_len))
+    decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+
+    t0 = time.time()
+    last_logits, caches = prefill(params, batch_data)
+    if cfg.n_codebooks > 1:
+        tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)[:, :, None]  # [B,K,1]
+    else:
+        tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)[:, None]     # [B,1]
+    t_prefill = time.time() - t0
+
+    outs = []
+    t1 = time.time()
+    for _ in range(gen):
+        outs.append(tok)
+        tok, caches = decode(params, caches, tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t1
+
+    gen_axis = -1
+    generated = jnp.concatenate(outs, axis=gen_axis)
+    tps = batch * gen / max(t_decode, 1e-9)
+    if verbose:
+        print(f"[serve] prefill {batch}×{prompt_len} in {t_prefill*1e3:.0f} ms; "
+              f"decode {gen} steps in {t_decode*1e3:.0f} ms  ({tps:.1f} tok/s)")
+    return generated, tps
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, choices=registry.ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    cfg = registry.get_smoke(args.arch) if args.smoke else registry.get_config(args.arch)
+    generated, tps = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
+                           gen=args.gen, seed=args.seed)
+    print("[serve] first request tokens:", np.asarray(generated)[0].ravel()[:16])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,235 @@
+"""Abstract input/state specs and sharding trees per (arch × shape) cell.
+
+``input_specs`` returns ``jax.ShapeDtypeStruct`` stand-ins for every model
+input of a cell — weak-type-correct, shardable, zero device allocation — so
+the dry-run lowers full-size cells (671B params, 500k contexts) on a laptop.
+``concrete_batch`` produces the matching real batch for runnable sizes
+(smoke tests, examples) from the deterministic pipeline.
+
+Sharding trees: batch-bearing leaves shard their leading batch axis over the
+data(+pod) mesh axes; decode caches shard sequence over ``model``
+(flash-decode) and batch over data.  Any axis that does not divide its mesh
+axes is left unsharded (the ``long_500k`` B=1 cell).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import LM_SHAPES, ModelConfig, ShapeConfig
+from repro.models import lm, registry
+
+__all__ = [
+    "input_specs",
+    "concrete_batch",
+    "batch_pspecs",
+    "cache_pspecs",
+    "abstract_caches",
+    "DRYRUN_ACCUM",
+]
+
+# Gradient-accumulation factor per arch for the train_4k cell: keeps saved
+# layer-boundary activations under the 16 GB/chip budget (DESIGN.md §4).
+# batch 256 = accum × microbatch; napkin: saved acts ≈ L·tokens·d·2B/chips,
+# but accum > 1 adds an fp32 grad buffer (params·4B/chips) — so the MoE
+# giants (671B/235B: fp32 grads alone ≥ 10 GB/chip) run accum=1 and rely on
+# remat + expert sharding instead, while dense 405B takes accum=16
+# (fp32 grad buffer 6.3 GB + activations 0.5 GB fits).
+DRYRUN_ACCUM = {
+    "deepseek-v3-671b": 1,
+    "qwen3-moe-235b-a22b": 1,
+    "llama3-405b": 4,
+    "nemotron-4-15b": 4,
+    "phi3-medium-14b": 4,
+    "phi4-mini-3.8b": 2,
+    "qwen2-vl-2b": 1,
+    "hymba-1.5b": 1,
+    "musicgen-medium": 1,
+    "xlstm-350m": 1,
+}
+
+# Accumulation dtype per arch: bf16 halves the per-layer dW reduce payload
+# and the carry (the 405B cell does not fit 16 GB/chip with an fp32 carry;
+# EXPERIMENTS.md §Perf records the fp32-baseline vs bf16 numbers).
+DRYRUN_ACCUM_DTYPE = {
+    "llama3-405b": "bfloat16",
+}
+
+
+def _fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    axes = (axes,) if isinstance(axes, str) else axes
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _maybe(mesh: Mesh, dim: int, axes):
+    """Shard ``dim`` over ``axes`` only when divisible (else replicate)."""
+    return axes if dim % max(1, _axis_size(mesh, axes)) == 0 else None
+
+
+# ---------------------------------------------------------------------------
+# batch specs
+# ---------------------------------------------------------------------------
+
+def _batch_shapes(cfg: ModelConfig, shape: ShapeConfig, accum: int) -> Dict[str, Tuple]:
+    """Shape tuples of the training/prefill batch for this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    lead = (accum, B // accum) if accum > 1 else (B,)
+    shapes: Dict[str, Tuple] = {}
+    if cfg.n_codebooks > 1:
+        shapes["tokens"] = (*lead, cfg.n_codebooks, S)
+        shapes["labels"] = (*lead, cfg.n_codebooks, S)
+    else:
+        shapes["tokens"] = (*lead, S)
+        shapes["labels"] = (*lead, S)
+    if cfg.vision_stub:
+        side = max(1, int(np.sqrt(min(1024, S // 4))))   # square patch grid
+        shapes["patch_embeds"] = (*lead, side * side, cfg.d_model)
+        shapes["pos3d"] = (*lead, S, 3)
+    return shapes
+
+
+def _batch_dtypes(name: str):
+    return jnp.float32 if name == "patch_embeds" else jnp.int32
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, accum: int) -> Dict[str, P]:
+    fsdp = _fsdp_axes(mesh)
+    out = {}
+    for name, shp in _batch_shapes(cfg, shape, accum).items():
+        batch_dim = shp[1] if accum > 1 else shp[0]
+        ax = _maybe(mesh, batch_dim, fsdp)
+        if accum > 1:
+            out[name] = P(None, ax, *([None] * (len(shp) - 2)))
+        else:
+            out[name] = P(ax, *([None] * (len(shp) - 1)))
+    return out
+
+
+def _train_specs(cfg: ModelConfig, shape: ShapeConfig, accum: int):
+    return {
+        name: jax.ShapeDtypeStruct(shp, _batch_dtypes(name))
+        for name, shp in _batch_shapes(cfg, shape, accum).items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# cache specs
+# ---------------------------------------------------------------------------
+
+def abstract_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """ShapeDtypeStruct tree of the stacked decode caches (no allocation)."""
+    return jax.eval_shape(
+        functools.partial(lm.init_caches, cfg, batch, max_len, dtype)
+    )
+
+
+def cache_pspecs(cfg: ModelConfig, caches_tpl, mesh: Mesh) -> object:
+    """PartitionSpec tree for the stacked caches.
+
+    Leading axis is always ``layers`` (unsharded); batch shards on
+    data(+pod); the long sequence axis of KV/latent caches shards on
+    ``model`` (flash-decode); head/state minor axes stay local.
+    """
+    fsdp = _fsdp_axes(mesh)
+
+    def leaf_spec(path, leaf):
+        name = jax.tree_util.keystr(path[-1:]).strip("[]'\"")
+        shp = leaf.shape
+        if name == "pos":
+            return P(*([None] * len(shp)))
+        b_ax = _maybe(mesh, shp[1], fsdp) if len(shp) >= 2 else None
+        if name in ("k", "v"):              # [L, B, S, Hkv, D]
+            s_ax = _maybe(mesh, shp[2], "model")
+            return P(None, b_ax, s_ax, None, None)
+        if name in ("c_kv", "k_rope"):      # [L, B, S, r]
+            s_ax = _maybe(mesh, shp[2], "model")
+            return P(None, b_ax, s_ax, None)
+        if name == "h" and len(shp) == 4:    # SSM state [L, B, d_inner, N]
+            d_ax = _maybe(mesh, shp[2], "model")
+            return P(None, b_ax, d_ax, None)
+        if name == "h" and len(shp) == 3:    # sLSTM hidden [L, B, d]
+            return P(None, b_ax, _maybe(mesh, shp[2], "model"))
+        if name == "conv":                   # [L, B, K-1, d_inner]
+            d_ax = _maybe(mesh, shp[3], "model")
+            return P(None, b_ax, None, d_ax)
+        if name == "C":                      # [L, B, H, dk, dv]
+            return P(None, b_ax, _maybe(mesh, shp[2], "model"), None, None)
+        if name in ("n", "m", "c"):
+            rest = [None] * (len(shp) - 2)
+            if len(shp) >= 3:
+                rest[0] = _maybe(mesh, shp[2], "model")
+            return P(None, b_ax, *rest)
+        return P(*([None] * len(shp)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches_tpl)
+    return jax.tree_util.tree_unflatten(treedef, [leaf_spec(p, l) for p, l in flat])
+
+
+# ---------------------------------------------------------------------------
+# public: per-cell abstract inputs
+# ---------------------------------------------------------------------------
+
+def input_specs(arch: str, shape_name: str, *, smoke: bool = False,
+                accum: Optional[int] = None,
+                kv_dtype: Optional[str] = None) -> Dict:
+    """Abstract inputs for one (arch × shape) cell.
+
+    Returns a dict with ``kind`` plus the ShapeDtypeStructs the matching step
+    function lowers against:
+      train   → {batch}
+      prefill → {batch}  (forward-only, fresh caches built inside the step)
+      decode  → {tokens, caches}
+    """
+    cfg = registry.get_smoke(arch) if smoke else registry.get_config(arch)
+    if kv_dtype is not None:
+        cfg = cfg.with_overrides(kv_dtype=kv_dtype)
+    shape = LM_SHAPES[shape_name]
+    if smoke:
+        shape = ShapeConfig(shape.name, min(shape.seq_len, 64), min(shape.global_batch, 4), shape.kind)
+    acc = accum if accum is not None else (DRYRUN_ACCUM.get(arch, 1) if shape.kind == "train" and not smoke else 1)
+
+    if shape.kind == "train":
+        return {"kind": "train", "cfg": cfg, "shape": shape, "accum": acc,
+                "batch": _train_specs(cfg, shape, acc)}
+    if shape.kind == "prefill":
+        return {"kind": "prefill", "cfg": cfg, "shape": shape, "accum": 1,
+                "batch": _train_specs(cfg, shape, 1)}
+    # decode: one new token against a seq_len-deep cache
+    B, S = shape.global_batch, shape.seq_len
+    tok_shape = (B, cfg.n_codebooks, 1) if cfg.n_codebooks > 1 else (B, 1)
+    return {
+        "kind": "decode", "cfg": cfg, "shape": shape, "accum": 1,
+        "tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32),
+        "caches": abstract_caches(cfg, B, S),
+    }
+
+
+def concrete_batch(cfg: ModelConfig, shape: ShapeConfig, seed: int, step: int,
+                   accum: int = 1) -> Dict[str, jax.Array]:
+    """Real batch matching ``_train_specs`` (runnable sizes only)."""
+    from repro.data import synthetic
+
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.vision_stub:
+        out = synthetic.vlm_stub_batch(seed, step, batch=B, seq=S, vocab=cfg.vocab,
+                                       d_model=cfg.d_model,
+                                       n_patches=max(1, min(1024, S // 4)))
+    elif cfg.n_codebooks > 1:
+        out = synthetic.audio_stub_batch(seed, step, batch=B, seq=S,
+                                         vocab=cfg.vocab, n_codebooks=cfg.n_codebooks)
+    else:
+        out = synthetic.lm_batch(seed, step, batch=B, seq=S, vocab=cfg.vocab)
+    if accum > 1:
+        out = jax.tree.map(lambda a: a.reshape(accum, a.shape[0] // accum, *a.shape[1:]), out)
+    return out

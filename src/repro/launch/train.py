@@ -1,0 +1,161 @@
+"""End-to-end training driver with checkpoint-restart fault tolerance.
+
+Runnable on this CPU container for smoke/small configs and the ~100M example
+model; the same code path jits with the production mesh shardings when real
+devices are present.
+
+Fault-tolerance features (DESIGN.md §4):
+  * ``--resume``: picks up the latest complete checkpoint (atomic saves —
+    a crash mid-save never corrupts the run) and replays the *exact* data
+    stream (stateless step-indexed pipeline).
+  * watchdog: if a step exceeds ``--step-deadline`` seconds the driver
+    checkpoints-and-exits with code 75 (temp failure) so a supervisor
+    (launch/supervise.py or any cluster agent) relaunches it — straggler
+    mitigation by restart, the standard large-fleet policy.
+  * ``--max-wall``: graceful preemption — checkpoint and exit 75.
+  * ``--simulate-crash-at``: kills the process *without* checkpointing at a
+    given step (tests/failure injection).
+  * ``--grad-compress``: pure-DP mode routes gradients through the int8
+    stochastic-rounded compressed all-reduce (optim/compress.py).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch xlstm-350m --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/run1 --resume
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs.base import ShapeConfig
+from repro.data import synthetic
+from repro.launch import specs as specs_mod
+from repro.launch.mesh import make_mesh, param_pspecs, sharding_rules
+from repro.launch.steps import make_dp_train_step, make_train_step, optimizer_pspecs
+from repro.models import lm, registry
+from repro.nn import module as nnmod
+from repro.optim.adamw import AdamWConfig, adamw_init
+
+__all__ = ["main", "train_loop"]
+
+
+def build_state(cfg, key, opt_cfg):
+    spec = lm.param_spec(cfg)
+    params = nnmod.materialize(spec, key)
+    opt = adamw_init(params, opt_cfg)
+    return {"params": params, "opt": opt, "data_step": jnp.zeros((), jnp.int32)}
+
+
+def train_loop(cfg, *, steps: int, batch: int, seq: int, ckpt_dir: str,
+               resume: bool = False, accum: int = 1, seed: int = 0,
+               save_every: int = 20, keep: int = 3,
+               opt_cfg: AdamWConfig = AdamWConfig(moment_dtype="float32"),
+               grad_compress: bool = False, mesh=None,
+               step_deadline: float = 0.0, max_wall: float = 0.0,
+               simulate_crash_at: int = -1, log_every: int = 10,
+               base_lr: float = 3e-4, warmup: int = 0):
+    """Returns (final_state, losses).  Exits 75 on watchdog/preemption."""
+    key = jax.random.PRNGKey(seed)
+    state = build_state(cfg, key, opt_cfg)
+    start_step = 0
+    if resume:
+        last = ckpt.latest_step(ckpt_dir)
+        if last is not None:
+            tpl = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), state)
+            state, start_step = ckpt.restore(ckpt_dir, last, tpl)
+            print(f"[train] resumed from step {start_step}")
+
+    shape = ShapeConfig("train", seq, batch, "train")
+    warmup = warmup or max(5, steps // 10)
+    if grad_compress:
+        assert mesh is not None, "--grad-compress needs a device mesh"
+        step_fn = jax.jit(make_dp_train_step(cfg, mesh, opt_cfg, base_lr=base_lr,
+                                             compress=True))
+    else:
+        step_fn = jax.jit(make_train_step(cfg, opt_cfg, accum=accum, base_lr=base_lr,
+                                          warmup=warmup))
+
+    losses = []
+    t_start = time.time()
+    step = start_step
+    for step in range(start_step, steps):
+        data_step = int(state["data_step"])
+        b = specs_mod.concrete_batch(cfg, shape, seed, data_step, accum=accum)
+        t0 = time.time()
+        if grad_compress:
+            k = jax.random.fold_in(jax.random.PRNGKey(seed + 1), step)
+            p, o, metrics = step_fn(state["params"], state["opt"], b, k)
+        else:
+            p, o, metrics = step_fn(state["params"], state["opt"], b)
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        state = {"params": p, "opt": o,
+                 "data_step": state["data_step"] + 1}
+        losses.append(loss)
+        if step % log_every == 0 or step == steps - 1:
+            print(f"[train] step {step:5d}  loss {loss:.4f}  {dt*1e3:.0f} ms")
+
+        if simulate_crash_at == step:
+            print("[train] simulated crash (no checkpoint)!", flush=True)
+            os._exit(137)
+
+        deadline_hit = step_deadline and dt > step_deadline
+        wall_hit = max_wall and (time.time() - t_start) > max_wall
+        if (step + 1) % save_every == 0 or step == steps - 1 or deadline_hit or wall_hit:
+            ckpt.save(ckpt_dir, step + 1, state, keep=keep)
+        if deadline_hit:
+            print(f"[train] watchdog: step took {dt:.1f}s > {step_deadline}s — "
+                  "checkpointed, exiting 75 for relaunch", flush=True)
+            sys.exit(75)
+        if wall_hit:
+            print("[train] wall-clock preemption — checkpointed, exiting 75", flush=True)
+            sys.exit(75)
+    return state, losses
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, choices=registry.ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--save-every", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--mesh", default="", help="e.g. 4x2 (axes data,model)")
+    ap.add_argument("--int8-moments", action="store_true")
+    ap.add_argument("--step-deadline", type=float, default=0.0)
+    ap.add_argument("--max-wall", type=float, default=0.0)
+    ap.add_argument("--simulate-crash-at", type=int, default=-1)
+    args = ap.parse_args()
+
+    cfg = registry.get_smoke(args.arch) if args.smoke else registry.get_config(args.arch)
+    mesh = None
+    if args.mesh:
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+        names = ("data", "model")[: len(dims)] if len(dims) <= 2 else ("pod", "data", "model")
+        mesh = make_mesh(dims, names)
+    opt_cfg = AdamWConfig(moment_dtype="int8" if args.int8_moments else "float32")
+    train_loop(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+               ckpt_dir=args.ckpt_dir, resume=args.resume, accum=args.accum,
+               seed=args.seed, save_every=args.save_every, opt_cfg=opt_cfg,
+               grad_compress=args.grad_compress, mesh=mesh,
+               step_deadline=args.step_deadline, max_wall=args.max_wall,
+               simulate_crash_at=args.simulate_crash_at, base_lr=args.lr)
+
+
+if __name__ == "__main__":
+    main()

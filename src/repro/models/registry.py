@@ -1,0 +1,57 @@
+"""Architecture registry: ``--arch <id>`` → ModelConfig (full or smoke).
+
+Shape-cell skips (DESIGN.md §5): ``long_500k`` requires sub-quadratic
+attention and runs only for the SSM/hybrid archs; every arch is a decoder so
+no other decode skips exist.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List, Tuple
+
+from repro.configs.base import LM_SHAPES, ModelConfig, ShapeConfig
+
+__all__ = ["ARCH_IDS", "get_config", "get_smoke", "cells", "skip_reason"]
+
+_MODULES = {
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b",
+    "nemotron-4-15b": "repro.configs.nemotron_4_15b",
+    "phi3-medium-14b": "repro.configs.phi3_medium_14b",
+    "llama3-405b": "repro.configs.llama3_405b",
+    "phi4-mini-3.8b": "repro.configs.phi4_mini_3_8b",
+    "qwen2-vl-2b": "repro.configs.qwen2_vl_2b",
+    "hymba-1.5b": "repro.configs.hymba_1_5b",
+    "musicgen-medium": "repro.configs.musicgen_medium",
+    "xlstm-350m": "repro.configs.xlstm_350m",
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+# Archs with sub-quadratic sequence mixing (run the long_500k cell).
+SUBQUADRATIC = {"hymba-1.5b", "xlstm-350m"}
+
+
+def get_config(arch: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[arch]).CONFIG
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[arch]).SMOKE
+
+
+def skip_reason(arch: str, shape: str) -> str | None:
+    """None ⇒ the (arch × shape) cell runs; else why it is skipped."""
+    if shape == "long_500k" and arch not in SUBQUADRATIC:
+        return "long_500k needs sub-quadratic attention (full-attention arch; DESIGN.md §5)"
+    return None
+
+
+def cells() -> List[Tuple[str, ShapeConfig]]:
+    """All runnable (arch, shape) dry-run cells (40 assigned minus skips)."""
+    out = []
+    for arch in ARCH_IDS:
+        for shape in LM_SHAPES.values():
+            if skip_reason(arch, shape.name) is None:
+                out.append((arch, shape))
+    return out

@@ -1,0 +1,322 @@
+"""Attention: GQA and MLA (DeepSeek), RoPE/M-RoPE, sliding window, KV caches.
+
+Long sequences use a blockwise flash-style scan (online softmax over KV
+chunks, O(S·C) live memory instead of O(S²)) — required for the 32k-prefill
+cells to fit the dry-run memory budget; short sequences use one einsum.
+Decode (S_q = 1) takes a direct GEMV-shaped path against the cache.
+
+Caches:
+* GQA: full ``k/v [B, S_max, H_kv, D]`` or, when ``window > 0``, a ring
+  buffer of ``window`` entries (Hymba's sliding-window heads ⇒ O(window)
+  state for the 500k-context cell).
+* MLA: *compressed* latent ``c_kv [B, S_max, r]`` + shared ``k_rope`` — the
+  paper-exact DeepSeek-V3 cache; decompression happens per KV chunk.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import AttnConfig
+from repro.core.odin_linear import OdinConfig
+from repro.nn.layers import apply_mrope, apply_rope, linear, linear_spec, norm_spec, rmsnorm
+from repro.nn.module import ParamSpec
+
+__all__ = ["attn_spec", "attention", "init_cache", "DEFAULT_CHUNK", "KV_SCALE"]
+
+DEFAULT_CHUNK = 512
+NEG_INF = -1e30
+# int8 KV-cache fixed-point scale: values quantize as round(x·16) ∈ [-127,127]
+# (range ±7.94, step 1/16) — the ODIN 8-bit-operand adjustment applied to the
+# decode working set.  Post-RoPE K and V magnitudes of trained LMs sit well
+# inside ±8 (they are norm-bounded projections); parity tests bound the error.
+KV_SCALE = 16.0
+
+
+def _cache_write(x: jax.Array, cache_dtype) -> jax.Array:
+    if cache_dtype == jnp.int8:
+        return jnp.clip(jnp.round(x.astype(jnp.float32) * KV_SCALE), -127, 127).astype(jnp.int8)
+    return x.astype(cache_dtype)
+
+
+def _cache_read(x: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    if x.dtype == jnp.int8:
+        return (x.astype(jnp.float32) * (1.0 / KV_SCALE)).astype(compute_dtype)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def attn_spec(cfg: AttnConfig, d_model: int) -> Dict[str, ParamSpec]:
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    if cfg.kind == "mla":
+        qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+        spec = {
+            "kv_down": linear_spec(d_model, cfg.kv_lora_rank + cfg.qk_rope_dim, ("embed", None)),
+            "kv_norm": ParamSpec((cfg.kv_lora_rank,), (None,), jnp.float32, init="ones"),
+            "k_up": linear_spec(cfg.kv_lora_rank, H * cfg.qk_nope_dim, (None, "heads_flat")),
+            "v_up": linear_spec(cfg.kv_lora_rank, H * cfg.v_head_dim, (None, "heads_flat")),
+            "o": linear_spec(H * cfg.v_head_dim, d_model, ("heads_flat", "embed")),
+        }
+        if cfg.q_lora_rank:
+            spec["q_down"] = linear_spec(d_model, cfg.q_lora_rank, ("embed", None))
+            spec["q_norm"] = ParamSpec((cfg.q_lora_rank,), (None,), jnp.float32, init="ones")
+            spec["q_up"] = linear_spec(cfg.q_lora_rank, H * qk_dim, (None, "heads_flat"))
+        else:
+            spec["q"] = linear_spec(d_model, H * qk_dim, ("embed", "heads_flat"))
+        return spec
+    return {
+        "q": linear_spec(d_model, H * D, ("embed", "heads_flat")),
+        "k": linear_spec(d_model, Hkv * D, ("embed", "heads_flat")),
+        "v": linear_spec(d_model, Hkv * D, ("embed", "heads_flat")),
+        "o": linear_spec(H * D, d_model, ("heads_flat", "embed")),
+    }
+
+
+def init_cache(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Abstract-safe cache pytree (works with ShapeDtypeStruct under jit)."""
+    if cfg.kind == "mla":
+        return {
+            "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    size = cfg.window if cfg.window else max_len
+    return {
+        "k": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.d_head), dtype),
+        "v": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.d_head), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# softmax attention cores
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos, k_pos, window: int):
+    """[.., Sq, Sk] additive bias: causal + optional sliding window."""
+    ok = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window:
+        ok &= k_pos[..., None, :] > q_pos[..., :, None] - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _sdpa(q, k, v, bias, scale):
+    """q: [B,Sq,H,D] k/v: [B,Sk,Hkv,Dk/Dv] bias: [B,1,Sq,Sk] or [1,1,Sq,Sk]."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    s = s + bias[:, :, None, :, :]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+def _blockwise(q, k, v, q_pos, k_pos, window: int, scale: float, chunk: int):
+    """Flash-style double loop: outer over Q chunks, inner scan over KV chunks.
+
+    ``q_pos``/``k_pos`` are normalized to [B, S] so training (shared causal
+    positions), prefill-into-cache and ring-buffer decode all take this path.
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    Dv = v.shape[-1]
+    Hkv = k.shape[2]
+    G = H // Hkv
+    cq = min(chunk, Sq)
+    ck = min(chunk, Sk)
+    nq, nk = Sq // cq, Sk // ck
+    assert Sq % cq == 0 and Sk % ck == 0, (Sq, Sk, chunk)
+
+    q_pos = jnp.broadcast_to(q_pos, (B, Sq)) if q_pos.ndim < 2 else q_pos
+    k_pos = jnp.broadcast_to(k_pos, (B, Sk)) if k_pos.ndim < 2 else k_pos
+
+    qc = q.reshape(B, nq, cq, Hkv, G, D)
+    qpc = q_pos.reshape(B, nq, cq)
+    kc = k.reshape(B, nk, ck, Hkv, D)
+    vc = v.reshape(B, nk, ck, Hkv, Dv)
+    kpc = k_pos.reshape(B, nk, ck)
+
+    def q_block(qi, qp):
+        # qi: [B, cq, Hkv, G, D]; qp: [B, cq]; online softmax over kv chunks
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, vi, kp = inp                           # [B,ck,Hkv,D], [B,ck]
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qi.astype(jnp.float32), ki.astype(jnp.float32)) * scale
+            bias = _mask_bias(qp, kp, window)          # [B, cq, ck]
+            s = s + bias[:, None, None]
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum("bhgqk,bkhd->bhgqd", p, vi.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, cq, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kc.swapaxes(0, 1), vc.swapaxes(0, 1), kpc.swapaxes(0, 1)),
+        )
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(o, 3, 1).astype(q.dtype)   # [B, cq, Hkv, G, Dv]
+
+    out = jax.lax.map(lambda t: q_block(t[0], t[1]), (qc.swapaxes(0, 1), qpc.swapaxes(0, 1)))
+    out = out.swapaxes(0, 1).reshape(B, Sq, H, Dv)
+    return out
+
+
+def sdpa(q, k, v, q_pos, k_pos, window: int = 0, chunk: int = DEFAULT_CHUNK,
+         blockwise_threshold: int = 4096):
+    """Dispatch between direct and blockwise attention. Shapes as in _sdpa."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    B = q.shape[0]
+    Sq, Sk = q.shape[1], k.shape[1]
+    if Sq == 1 or (Sq * Sk) <= blockwise_threshold ** 2:
+        qp = q_pos if q_pos.ndim == 2 else jnp.broadcast_to(q_pos, (B, Sq))
+        kp = jnp.broadcast_to(k_pos, (B, Sk)) if k_pos.ndim == 1 else k_pos
+        bias = _mask_bias(qp, kp, window)[:, None]     # [B,1,Sq,Sk]
+        return _sdpa(q, k, v, bias, scale)
+    # blockwise: pad both sequence axes to the chunk size.  Padded K rows get
+    # position 2^30 (causally invisible to every real query); padded Q rows
+    # get 2^29 (see everything real, row results are sliced away).
+    pq = (-Sq) % min(chunk, max(Sq, 1))
+    pk = (-Sk) % min(chunk, max(Sk, 1))
+    if pq or pk:
+        qp = q_pos if q_pos.ndim == 2 else jnp.broadcast_to(q_pos, (B, Sq))
+        kp = k_pos if k_pos.ndim == 2 else jnp.broadcast_to(k_pos, (B, Sk))
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        qp = jnp.pad(qp, ((0, 0), (0, pq)), constant_values=2**29)
+        kp = jnp.pad(kp, ((0, 0), (0, pk)), constant_values=2**30)
+        out = _blockwise(q, k, v, qp, kp, window, scale, chunk)
+        return out[:, :Sq]
+    return _blockwise(q, k, v, q_pos, k_pos, window, scale, chunk)
+
+
+# ---------------------------------------------------------------------------
+# full attention blocks (projection + rope + cache + core + output)
+# ---------------------------------------------------------------------------
+
+def _positions(batch: int, start, seq: int):
+    return start + jnp.arange(seq, dtype=jnp.int32)[None, :] + jnp.zeros((batch, 1), jnp.int32)
+
+
+def _gqa_attention(p, x, cfg: AttnConfig, positions, pos3d, cache, odin):
+    B, S, _ = x.shape
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = linear(x, p["q"], odin).reshape(B, S, H, D)
+    k = linear(x, p["k"], odin).reshape(B, S, Hkv, D)
+    v = linear(x, p["v"], odin).reshape(B, S, Hkv, D)
+    if cfg.rope == "mrope":
+        if pos3d is None:
+            # text-only / decode steps: M-RoPE degenerates to (t, t, t)
+            pos3d = jnp.broadcast_to(positions[..., None], (B, S, 3))
+        q = apply_mrope(q, pos3d, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, pos3d, cfg.mrope_sections, cfg.rope_theta)
+    elif cfg.rope == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        k_pos = positions
+        o = sdpa(q, k, v, positions, k_pos, cfg.window)
+        new_cache = None
+    else:
+        pos = cache["pos"]
+        size = cache["k"].shape[1]
+        cdt = cache["k"].dtype
+        if cfg.window:
+            idx = (pos + jnp.arange(S)) % size
+            ck = cache["k"].at[:, idx].set(_cache_write(k, cdt))
+            cv = cache["v"].at[:, idx].set(_cache_write(v, cdt))
+            k_pos = _ring_positions(pos + S, size)
+            new_cache = {"k": ck, "v": cv, "pos": pos + S}
+            o = sdpa(q, _cache_read(ck, q.dtype), _cache_read(cv, q.dtype),
+                     positions, jnp.broadcast_to(k_pos, (B, size)), cfg.window)
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], _cache_write(k, cdt), pos, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], _cache_write(v, cdt), pos, axis=1)
+            size = ck.shape[1]
+            k_pos = jnp.arange(size, dtype=jnp.int32)
+            # entries beyond pos+S are zeros — mask them via position > current
+            k_pos = jnp.where(k_pos < pos + S, k_pos, jnp.int32(2**30))
+            new_cache = {"k": ck, "v": cv, "pos": pos + S}
+            o = sdpa(q, _cache_read(ck, q.dtype), _cache_read(cv, q.dtype),
+                     positions, jnp.broadcast_to(k_pos, (B, size)), cfg.window)
+    o = o.reshape(B, S, H * D)
+    return linear(o, p["o"], odin), new_cache
+
+
+def _ring_positions(next_pos, size: int):
+    """Absolute position of each ring-buffer slot given ``next_pos`` total written."""
+    slots = jnp.arange(size, dtype=jnp.int32)
+    wrapped = next_pos - 1 - (next_pos - 1 - slots) % size
+    return jnp.where(slots < next_pos, wrapped, jnp.int32(2**30))
+
+
+def _mla_attention(p, x, cfg: AttnConfig, positions, cache, odin):
+    """DeepSeek-V3 multi-head latent attention with compressed KV cache."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+
+    if "q_down" in p:
+        cq = rmsnorm(linear(x, p["q_down"], odin), p["q_norm"])
+        q = linear(cq, p["q_up"], odin).reshape(B, S, H, qk_dim)
+    else:
+        q = linear(x, p["q"], odin).reshape(B, S, H, qk_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = linear(x, p["kv_down"], odin)
+    c_kv, k_rope = jnp.split(kv, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(c_kv, p["kv_norm"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+
+    if cache is not None:
+        pos = cache["pos"]
+        cdt = cache["c_kv"].dtype
+        c_kv_q = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], _cache_write(c_kv, cdt), pos, axis=1)
+        k_rope_q = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], _cache_write(k_rope, cdt), pos, axis=1)
+        new_cache = {"c_kv": c_kv_q, "k_rope": k_rope_q, "pos": pos + S}
+        c_kv = _cache_read(c_kv_q, x.dtype)
+        k_rope = _cache_read(k_rope_q, x.dtype)
+        Sk = c_kv.shape[1]
+        k_pos = jnp.arange(Sk, dtype=jnp.int32)
+        k_pos = jnp.where(k_pos < pos + S, k_pos, jnp.int32(2**30))
+        k_pos = jnp.broadcast_to(k_pos, (B, Sk))
+    else:
+        new_cache = None
+        k_pos = positions
+
+    # decompress latent → per-head K_nope, V (chunk-local inside blockwise core
+    # would be cheaper; baseline decompresses once — hillclimb lever)
+    k_nope = linear(c_kv, p["k_up"], odin).reshape(B, -1, H, cfg.qk_nope_dim)
+    v = linear(c_kv, p["v_up"], odin).reshape(B, -1, H, cfg.v_head_dim)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (*k_nope.shape[:3], cfg.qk_rope_dim))], axis=-1)
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = sdpa(qfull, k, v, positions, k_pos, cfg.window)
+    o = o.reshape(B, S, H * cfg.v_head_dim)
+    return linear(o, p["o"], odin), new_cache
+
+
+def attention(p, x, cfg: AttnConfig, positions=None, pos3d=None, cache=None,
+              odin: Optional[OdinConfig] = None):
+    """Returns (output [B,S,d_model], new_cache)."""
+    B, S, _ = x.shape
+    if positions is None:
+        start = cache["pos"] if cache is not None else jnp.int32(0)
+        positions = _positions(B, start, S)
+    if cfg.kind == "mla":
+        return _mla_attention(p, x, cfg, positions, cache, odin)
+    return _gqa_attention(p, x, cfg, positions, pos3d, cache, odin)

@@ -1,0 +1,114 @@
+"""Core layers: ODIN-aware Linear, norms, embeddings, activations, RoPE."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.odin_linear import OdinConfig, odin_linear
+from repro.nn.module import ParamSpec
+
+__all__ = [
+    "linear_spec", "linear", "norm_spec", "rmsnorm", "layernorm",
+    "embed_spec", "embed", "activation", "rope_freqs", "apply_rope", "apply_mrope",
+]
+
+
+# ---------------------------------------------------------------------------
+# Linear — the ODIN integration point (paper's technique as a drop-in mode)
+# ---------------------------------------------------------------------------
+
+def linear_spec(d_in: int, d_out: int, axes: Tuple[Optional[str], Optional[str]],
+                dtype=jnp.bfloat16, scale: float = 1.0) -> ParamSpec:
+    return ParamSpec((d_in, d_out), axes, dtype, init="fan_in", scale=scale)
+
+
+def linear(x: jax.Array, w: jax.Array, odin: Optional[OdinConfig] = None) -> jax.Array:
+    """``x @ w`` routed through the configured ODIN execution mode.
+
+    ``exact`` stays in the compute dtype (bf16 on TPU ⇒ MXU); ``int8``/``sc``
+    run the paper's quantized pipeline and cast back.
+    """
+    if odin is None or odin.mode == "exact":
+        return jnp.matmul(x, w.astype(x.dtype))
+    y = odin_linear(x.astype(jnp.float32), w.astype(jnp.float32), odin)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / embeddings / activations
+# ---------------------------------------------------------------------------
+
+def norm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), ("embed",), jnp.float32, init="ones")
+
+
+def rmsnorm(x: jax.Array, g: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * g).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, g: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps) * g).astype(x.dtype)
+
+
+def embed_spec(vocab: int, d: int) -> ParamSpec:
+    return ParamSpec((vocab, d), ("vocab", "embed"), jnp.bfloat16, init="normal")
+
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def activation(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "relu2":                      # Nemotron-4 squared ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    return jax.nn.silu(x)                    # swiglu gate handled by caller
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def _rotate(x: jax.Array, angles: jax.Array) -> jax.Array:
+    # x: [..., S, H, D]; angles: broadcastable to [..., S, 1, D/2]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).astype(x.dtype)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10_000.0) -> jax.Array:
+    """x: [B, S, H, D]; positions: [B, S] (int)."""
+    freqs = rope_freqs(x.shape[-1], theta)                       # [D/2]
+    angles = positions[..., None, None].astype(jnp.float32) * freqs  # [B, S, 1, D/2]
+    return _rotate(x, angles)
+
+
+def apply_mrope(x: jax.Array, positions_3d: jax.Array, sections: Tuple[int, ...],
+                theta: float = 10_000.0) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: per-section (t, h, w) position ids.
+
+    x: [B, S, H, D]; positions_3d: [B, S, 3]; sections sum to D/2.
+    """
+    freqs = rope_freqs(x.shape[-1], theta)                       # [D/2]
+    splits = [int(s) for s in np.cumsum(sections)[:-1]]
+    parts = jnp.split(freqs, splits)
+    angle_parts = [
+        positions_3d[..., i, None].astype(jnp.float32) * parts[i][None, None, :]
+        for i in range(len(sections))
+    ]
+    angles = jnp.concatenate(angle_parts, axis=-1)[..., None, :]  # [B, S, 1, D/2]
+    return _rotate(x, angles)

@@ -1,0 +1,128 @@
+"""Mixture-of-Experts: top-k router + capacity-based scatter dispatch.
+
+Dispatch is the sort-based MegaBlocks/MaxText-style static-shape algorithm:
+flatten (token, k) assignments, rank each within its expert via a stable sort,
+drop overflow beyond ``capacity``, scatter into a dense ``[E, C, d]`` buffer,
+run per-expert matmuls (one grouped einsum — experts axis shards on "model"
+for expert parallelism), gather back, and gate-weight the combine.  No
+``[T, E, C]`` one-hot tensors are ever materialized (they would be ~TB-scale
+at the assigned shapes).
+
+Router: softmax over fp32 logits, top-k.  DeepSeek-style extensions: shared
+(always-on) experts and the aux-loss-free bias (a non-learned, per-expert
+bias added to routing scores only for *selection*, not for the gate weight).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.core.odin_linear import OdinConfig
+from repro.nn.layers import activation, linear, linear_spec
+from repro.nn.module import ParamSpec
+from repro.nn.pcontext import constrain
+
+__all__ = ["moe_spec", "moe_block", "dispatch_indices"]
+
+
+def moe_spec(cfg: MoEConfig, d_model: int) -> Dict[str, ParamSpec]:
+    E, F = cfg.n_experts, cfg.d_ff
+    spec = {
+        "router": ParamSpec((d_model, E), ("embed", None), jnp.float32, init="fan_in"),
+        "w_gate": ParamSpec((E, d_model, F), ("experts", "embed", "mlp"), init="fan_in"),
+        "w_up": ParamSpec((E, d_model, F), ("experts", "embed", "mlp"), init="fan_in"),
+        "w_down": ParamSpec((E, F, d_model), ("experts", "mlp", "embed"), init="fan_in"),
+    }
+    if cfg.aux_free_bias:
+        spec["route_bias"] = ParamSpec((E,), (None,), jnp.float32, init="zeros")
+    if cfg.n_shared:
+        S = cfg.n_shared * cfg.d_ff
+        spec["shared_gate"] = linear_spec(d_model, S, ("embed", "mlp"))
+        spec["shared_up"] = linear_spec(d_model, S, ("embed", "mlp"))
+        spec["shared_down"] = linear_spec(S, d_model, ("mlp", "embed"))
+    return spec
+
+
+def dispatch_indices(expert_ids: jax.Array, n_experts: int, capacity: int):
+    """Rank each (token·k) assignment within its expert; static shapes.
+
+    expert_ids: int32 [A].  Returns (slot [A], keep [A]) where
+    ``slot = expert·C + rank`` for kept assignments (rank < capacity) and
+    the out-of-bounds sentinel ``E·C`` for dropped ones — scatters must use
+    ``mode="drop"`` (a 0 sentinel would clobber expert 0's first slot).
+    """
+    A = expert_ids.shape[0]
+    order = jnp.argsort(expert_ids, stable=True)               # assignments grouped by expert
+    sorted_ids = expert_ids[order]
+    # rank within group = index - start index of that expert's run
+    starts = jnp.searchsorted(sorted_ids, jnp.arange(n_experts), side="left")
+    rank_sorted = jnp.arange(A, dtype=jnp.int32) - starts[sorted_ids]
+    rank = jnp.zeros((A,), jnp.int32).at[order].set(rank_sorted)
+    keep = rank < capacity
+    slot = jnp.where(keep, expert_ids * capacity + rank, n_experts * capacity)
+    return slot, keep
+
+
+def moe_block(p, x: jax.Array, cfg: MoEConfig, activation_kind: str = "swiglu",
+              odin: Optional[OdinConfig] = None) -> jax.Array:
+    """x: [B, S, d] → [B, S, d]."""
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])            # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    select_scores = probs + (p["route_bias"][None, :] if "route_bias" in p else 0.0)
+    _, top_idx = jax.lax.top_k(select_scores, cfg.top_k)       # [T, k]
+    gates = jnp.take_along_axis(probs, top_idx, axis=-1)       # gate from *unbiased* probs
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    A = T * cfg.top_k
+    expert_ids = top_idx.reshape(A).astype(jnp.int32)
+    capacity = max(1, int(T * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+    slot, keep = dispatch_indices(expert_ids, cfg.n_experts, capacity)
+
+    token_idx = jnp.repeat(jnp.arange(T, dtype=jnp.int32), cfg.top_k)
+    # Dispatch in GATHER form: scatter only scalar assignment ids into the
+    # slot table, then gather token rows.  A row-wise ``buf.at[slot].set(x)``
+    # scatter lowers to index matrices materialized at [E·C, d] (≈240 GB u32
+    # at the 671B train cell); the scalar scatter is [E·C] ints.
+    slot_to_assign = jnp.full((cfg.n_experts * capacity,), A, jnp.int32)
+    slot_to_assign = slot_to_assign.at[slot].set(
+        jnp.where(keep, jnp.arange(A, dtype=jnp.int32), A), mode="drop")
+    token_for_slot = jnp.concatenate([token_idx, jnp.zeros((1,), jnp.int32)])[slot_to_assign]
+    filled = (slot_to_assign < A)[:, None]
+    buf = jnp.where(filled, xt[token_for_slot], 0)
+    buf = buf.reshape(cfg.n_experts, capacity, d)
+    # EP sharding hint: experts on "model", capacity on data — keeps the
+    # [E, C, d] buffer (≈150 GB at the 671B train cell) distributed instead
+    # of replicated (no-op outside a logical_sharding context).
+    buf = constrain(buf, ("experts", "capacity", None))
+
+    # per-expert FFN — grouped einsums; 'experts' axis shards (EP)
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(x.dtype))
+    if activation_kind == "swiglu":
+        h = jax.nn.silu(g) * u
+    elif activation_kind == "relu2":
+        r = jax.nn.relu(g)
+        h = r * r * u
+    else:
+        h = jax.nn.gelu(g) * u
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+    y = y.reshape(cfg.n_experts * capacity, d)
+
+    # combine: gather each assignment's expert output, weight by gate, sum over k
+    out_per_assign = jnp.where(keep[:, None], y[slot], 0)      # [A, d]
+    out_per_assign = constrain(out_per_assign, ("capacity", None))
+    weighted = out_per_assign * gates.reshape(A, 1).astype(x.dtype)
+    out = jax.ops.segment_sum(weighted, token_idx, num_segments=T)
+    out = constrain(out, ("capacity", None))
+
+    if "shared_gate" in p:
+        sg = jax.nn.silu(linear(xt, p["shared_gate"], odin)) * linear(xt, p["shared_up"], odin)
+        out = out + linear(sg, p["shared_down"], odin)
+    return out.reshape(B, S, d)

@@ -1,0 +1,38 @@
+"""Logical-axis sharding-constraint context.
+
+Layers are mesh-agnostic; drivers that *do* know the mesh activate
+``logical_sharding(mesh, rules)`` and layer code can then pin critical
+intermediates (the MoE dispatch buffer, scanned activations) with
+``constrain(x, logical_axes)``.  Outside the context ``constrain`` is the
+identity, so tests and single-device code never touch sharding machinery.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.nn.module import logical_to_pspec
+
+__all__ = ["logical_sharding", "constrain"]
+
+_ACTIVE: list = []
+
+
+@contextlib.contextmanager
+def logical_sharding(mesh: Mesh, rules: Dict[str, object]):
+    _ACTIVE.append((mesh, rules))
+    try:
+        yield
+    finally:
+        _ACTIVE.pop()
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[Optional[str]]) -> jax.Array:
+    if not _ACTIVE:
+        return x
+    mesh, rules = _ACTIVE[-1]
+    spec = logical_to_pspec(tuple(logical_axes), rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

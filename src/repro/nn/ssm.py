@@ -1,0 +1,107 @@
+"""Selective state-space (Mamba-style) block — used by Hymba's SSM heads.
+
+Recurrence (per channel c, state n):
+    h_t = exp(Δ_t · A) ⊙ h_{t-1} + Δ_t · B_t · x_t
+    y_t = C_t · h_t + D ⊙ x_t
+with input-dependent Δ, B, C (selectivity).  Prefill/train runs a chunked
+``lax.scan`` (small HLO, compile-friendly — the dry-run constraint); decode
+is the natural single-step update carrying ``h [B, d_inner, N]``.  Constant
+O(d_inner·N) state makes this the sub-quadratic path for the 500k cell.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.core.odin_linear import OdinConfig
+from repro.nn.layers import linear, linear_spec
+from repro.nn.module import ParamSpec
+from repro.nn.pcontext import constrain
+from repro.nn.scan_utils import chunked_scan
+
+__all__ = ["ssm_spec", "ssm_block", "init_ssm_state"]
+
+
+def ssm_spec(cfg: SSMConfig, d_model: int) -> Dict[str, ParamSpec]:
+    d_inner = cfg.expand * d_model
+    dt_rank = cfg.dt_rank or max(1, d_model // 16)
+    N = cfg.state_dim
+    return {
+        "in_proj": linear_spec(d_model, 2 * d_inner, ("embed", "mlp")),
+        "conv_w": ParamSpec((cfg.conv_dim, d_inner), (None, "mlp"), init="fan_in"),
+        "x_proj": linear_spec(d_inner, dt_rank + 2 * N, ("mlp", None)),
+        "dt_proj": ParamSpec((dt_rank, d_inner), (None, "mlp"), init="fan_in"),
+        "dt_bias": ParamSpec((d_inner,), ("mlp",), jnp.float32, init="zeros"),
+        "A_log": ParamSpec((d_inner, N), ("mlp", None), jnp.float32, init="zeros"),
+        "D": ParamSpec((d_inner,), ("mlp",), jnp.float32, init="ones"),
+        "out_proj": linear_spec(d_inner, d_model, ("mlp", "embed")),
+    }
+
+
+def init_ssm_state(cfg: SSMConfig, d_model: int, batch: int, dtype=jnp.float32):
+    d_inner = cfg.expand * d_model
+    return {
+        "h": jnp.zeros((batch, d_inner, cfg.state_dim), dtype),
+        "conv": jnp.zeros((batch, cfg.conv_dim - 1, d_inner), dtype),
+    }
+
+
+def _selective_scan(u, dt, A, Bc, Cc, D, h0):
+    """u: [B,S,di]  dt: [B,S,di]  A: [di,N]  Bc/Cc: [B,S,N]  h0: [B,di,N].
+
+    The [B,S,di,N] discretized tensors are never materialized: per-step outer
+    products live inside a chunked, rematerializing scan (scan_utils).
+    """
+
+    def step(h, inp):
+        u_t, dt_t, b_t, c_t = inp                                # [B,di],[B,di],[B,N],[B,N]
+        dA_t = jnp.exp(dt_t[..., None] * A[None])                # [B,di,N]
+        h = dA_t * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h, ys = chunked_scan(
+        step, h0,
+        (u.swapaxes(0, 1), dt.swapaxes(0, 1), Bc.swapaxes(0, 1), Cc.swapaxes(0, 1)),
+    )
+    y = ys.swapaxes(0, 1) + u * D[None, None]
+    return y, h
+
+
+def ssm_block(p, x: jax.Array, cfg: SSMConfig, state=None,
+              odin: Optional[OdinConfig] = None):
+    """x: [B,S,d] → (y [B,S,d], new_state).  ``state`` enables decode."""
+    B, S, d = x.shape
+    d_inner = cfg.expand * d
+    N = cfg.state_dim
+    dt_rank = cfg.dt_rank or max(1, d // 16)
+
+    xz = linear(x, p["in_proj"], odin)
+    u, z = jnp.split(xz, 2, axis=-1)                             # [B,S,di] each
+
+    # depthwise causal conv over time
+    K = cfg.conv_dim
+    if state is not None:
+        ctx = jnp.concatenate([state["conv"].astype(u.dtype), u], axis=1)
+    else:
+        ctx = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    windows = jnp.stack([ctx[:, i : i + S] for i in range(K)], axis=-1)  # [B,S,di,K]
+    u = jax.nn.silu(jnp.einsum("bsdk,kd->bsd", windows, p["conv_w"].astype(u.dtype)))
+
+    proj = linear(u, p["x_proj"], odin).astype(jnp.float32)
+    dt_in, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"] + p["dt_bias"])    # [B,S,di]
+    A = -jnp.exp(p["A_log"])                                     # [di,N], negative
+
+    h0 = state["h"] if state is not None else jnp.zeros((B, d_inner, N), jnp.float32)
+    h0 = constrain(h0, ("batch", "mlp", None))   # pin batch/TP sharding of the carry
+    y, h = _selective_scan(u.astype(jnp.float32), dt, A, Bc, Cc, p["D"], h0)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = linear(y, p["out_proj"], odin)
+    new_state = None
+    if state is not None:
+        new_state = {"h": h, "conv": ctx[:, -(K - 1):].astype(jnp.float32)}
+    return out, new_state

@@ -1,0 +1,216 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM (scalar).
+
+mLSTM keeps a matrix memory ``C [B, H, dk, dv]`` with exponential input/forget
+gates and a max-state stabilizer; sLSTM keeps per-head scalar state.  Both run
+as ``lax.scan`` over time (O(1) state ⇒ the sub-quadratic path for long_500k)
+and expose single-step decode.  Projections route through ODIN linear modes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.odin_linear import OdinConfig
+from repro.nn.layers import linear, linear_spec, norm_spec, rmsnorm
+from repro.nn.module import ParamSpec
+from repro.nn.pcontext import constrain
+from repro.nn.scan_utils import chunked_scan
+
+__all__ = ["mlstm_spec", "mlstm_block", "slstm_spec", "slstm_block", "init_mlstm_state", "init_slstm_state"]
+
+
+def mlstm_spec(n_heads: int, d_model: int) -> Dict[str, ParamSpec]:
+    dh = d_model // n_heads
+    return {
+        "q": linear_spec(d_model, d_model, ("embed", "heads_flat")),
+        "k": linear_spec(d_model, d_model, ("embed", "heads_flat")),
+        "v": linear_spec(d_model, d_model, ("embed", "heads_flat")),
+        "gates": linear_spec(d_model, 2 * n_heads, ("embed", None)),  # i, f per head
+        "o_gate": linear_spec(d_model, d_model, ("embed", "heads_flat")),
+        "out": linear_spec(d_model, d_model, ("heads_flat", "embed")),
+        "out_norm": norm_spec(d_model),
+    }
+
+
+def init_mlstm_state(n_heads: int, d_model: int, batch: int):
+    dh = d_model // n_heads
+    return {
+        "C": jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, dh), jnp.float32),
+        "m": jnp.full((batch, n_heads), -1e30, jnp.float32),
+    }
+
+
+def mlstm_block(p, x: jax.Array, n_heads: int, state=None,
+                odin: Optional[OdinConfig] = None, impl: str = "chunkwise",
+                chunk: int = 512):
+    """``impl``: 'scan' (token-sequential reference) or 'chunkwise'
+    (telescoped per-chunk parallel form — identical math, §Perf lever:
+    state IO drops ÷chunk and the inner work becomes MXU matmuls)."""
+    B, S, d = x.shape
+    dh = d // n_heads
+    q = linear(x, p["q"], odin).reshape(B, S, n_heads, dh).astype(jnp.float32)
+    k = linear(x, p["k"], odin).reshape(B, S, n_heads, dh).astype(jnp.float32) / jnp.sqrt(dh)
+    v = linear(x, p["v"], odin).reshape(B, S, n_heads, dh).astype(jnp.float32)
+    gates = linear(x, p["gates"], odin).astype(jnp.float32).reshape(B, S, n_heads, 2)
+    i_pre, f_pre = gates[..., 0], gates[..., 1]                  # [B,S,H]
+    o_gate = jax.nn.sigmoid(linear(x, p["o_gate"], odin).astype(jnp.float32))
+
+    st = state if state is not None else init_mlstm_state(n_heads, d, B)
+    # pin batch sharding of the matrix-memory carry — a replicated
+    # [B, H, dk, dv] carry is the dominant memory term otherwise
+    st = {k: constrain(v, ("batch",) + (None,) * (v.ndim - 1)) for k, v in st.items()}
+
+    if impl == "chunkwise" and S > 1:
+        (C, n, m), ys = _mlstm_chunkwise(q, k, v, i_pre, f_pre,
+                                         (st["C"], st["n"], st["m"]), chunk)
+        h = ys.reshape(B, S, d).astype(x.dtype) * o_gate.astype(x.dtype)
+        out = linear(rmsnorm(h, p["out_norm"]), p["out"], odin)
+        new_state = {"C": C, "n": n, "m": m} if state is not None else None
+        return out, new_state
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, it, ft = inp                                 # [B,H,dh], [B,H]
+        log_f = -jax.nn.softplus(-ft)                            # log σ(f)
+        m_new = jnp.maximum(log_f + m, it)
+        i_sc = jnp.exp(it - m_new)
+        f_sc = jnp.exp(log_f + m - m_new)
+        C = f_sc[..., None, None] * C + i_sc[..., None, None] * (kt[..., :, None] * vt[..., None, :])
+        n = f_sc[..., None] * n + i_sc[..., None] * kt
+        num = jnp.einsum("bhkv,bhk->bhv", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)), jnp.exp(-m_new))
+        return (C, n, m_new), num / den[..., None]
+
+    (C, n, m), ys = chunked_scan(
+        step,
+        (st["C"], st["n"], st["m"]),
+        (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+         i_pre.swapaxes(0, 1), f_pre.swapaxes(0, 1)),
+        chunk=256,
+    )
+    h = ys.swapaxes(0, 1).reshape(B, S, d).astype(x.dtype) * o_gate.astype(x.dtype)
+    out = linear(rmsnorm(h, p["out_norm"]), p["out"], odin)
+    new_state = {"C": C, "n": n, "m": m} if state is not None else None
+    return out, new_state
+
+
+def _mlstm_chunkwise(q, k, v, i_pre, f_pre, st0, chunk: int):
+    """Chunkwise-parallel mLSTM — exact telescoping of the per-token
+    recurrence (GLA/mLSTM-chunkwise form with max-stabilizer chaining).
+
+    Within a chunk, relative to the chunk-entry state (C₀, n₀, m₀) and the
+    in-chunk cumulative log-forget B_t = Σ_{s≤t} log f_s:
+
+        m_t  = max(B_t + m₀, max_{s≤t}(B_t − B_s + i_s))
+        h_t∝ e^{B_t+m₀−m_t}(q_t·C₀) + Σ_{s≤t} e^{B_t−B_s+i_s−m_t}(q_t·k_s)v_s
+        n_t  = e^{B_t+m₀−m_t} n₀ + Σ_{s≤t} e^{B_t−B_s+i_s−m_t} k_s
+
+    The Σ terms are C×C masked matmuls (MXU); the carry updates once per
+    chunk, so HBM state traffic drops by the chunk length versus the
+    token-sequential scan (the measured 36,000× memory-vs-compute imbalance
+    of the xlstm train cell — EXPERIMENTS.md §Perf-1).
+    """
+    B, S, H, dh = q.shape
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        zq = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v = zq(q), zq(k), zq(v)
+        i_pre = jnp.pad(i_pre, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        f_pre = jnp.pad(f_pre, ((0, 0), (0, pad), (0, 0)), constant_values=30.0)
+    Sp = S + pad
+    nc = Sp // c
+
+    def rs(a):  # [B,Sp,...] → [nc, B, c, ...]
+        return a.reshape(B, nc, c, *a.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = rs(q), rs(k), rs(v)
+    ic, fc = rs(i_pre), rs(f_pre)
+    mask = jnp.tril(jnp.ones((c, c), bool))
+
+    def chunk_step(carry, inp):
+        C0, n0, m0 = carry                       # [B,H,dh,dh], [B,H,dh], [B,H]
+        qt, kt, vt, it, ft = inp                 # [B,c,H,dh], [B,c,H]
+        log_f = -jax.nn.softplus(-ft)            # [B,c,H]
+        Bc = jnp.cumsum(log_f, axis=1)           # B_t
+        # a[t,s] = B_t − B_s + i_s  (valid s ≤ t)
+        a = Bc[:, :, None] - Bc[:, None, :] + it[:, None, :]     # [B,t,s,H]
+        a = jnp.where(mask[None, :, :, None], a, -jnp.inf)
+        m_intra = a.max(axis=2)                                  # [B,c,H]
+        m_t = jnp.maximum(Bc + m0[:, None], m_intra)
+        # decay matrices
+        D = jnp.exp(a - m_t[:, :, None])                         # [B,t,s,H]
+        inter_w = jnp.exp(Bc + m0[:, None] - m_t)                # [B,c,H]
+        scores = jnp.einsum("bthd,bshd->btsh", qt, kt) * D
+        y_intra = jnp.einsum("btsh,bshd->bthd", scores, vt)
+        n_intra = jnp.einsum("btsh,bshd->bthd", D, kt)
+        y_inter = jnp.einsum("bthd,bhde->bthe", qt, C0) * inter_w[..., None]
+        n_inter = n0[:, None] * inter_w[..., None]
+        num = y_intra + y_inter                                  # [B,c,H,dv]
+        nvec = n_intra + n_inter
+        den = jnp.maximum(jnp.abs(jnp.einsum("bthd,bthd->bth", qt, nvec)),
+                          jnp.exp(-m_t))
+        ys = num / den[..., None]
+        # carry to next chunk (t = c row)
+        m_new = m_t[:, -1]
+        w_end = jnp.exp(Bc[:, -1:, :] - Bc + it - m_new[:, None])    # [B,s,H]
+        C_new = (C0 * jnp.exp(Bc[:, -1] + m0 - m_new)[..., None, None]
+                 + jnp.einsum("bshd,bshe->bhde", w_end[..., None] * kt, vt))
+        n_new = (n0 * jnp.exp(Bc[:, -1] + m0 - m_new)[..., None]
+                 + jnp.einsum("bsh,bshd->bhd", w_end, kt))
+        return (C_new, n_new, m_new), ys
+
+    carry, ys = jax.lax.scan(chunk_step, st0, (qc, kc, vc, ic, fc))
+    ys = ys.swapaxes(0, 1).reshape(B, Sp, H, dh)[:, :S]
+    return carry, ys
+
+
+def slstm_spec(n_heads: int, d_model: int) -> Dict[str, ParamSpec]:
+    return {
+        "zifo": linear_spec(d_model, 4 * d_model, ("embed", "heads_flat")),
+        "r_zifo": ParamSpec((4, d_model), (None, "heads_flat"), jnp.float32, init="fan_in"),
+        "out": linear_spec(d_model, d_model, ("heads_flat", "embed")),
+        "out_norm": norm_spec(d_model),
+    }
+
+
+def init_slstm_state(d_model: int, batch: int):
+    return {
+        "c": jnp.zeros((batch, d_model), jnp.float32),
+        "n": jnp.ones((batch, d_model), jnp.float32),
+        "h": jnp.zeros((batch, d_model), jnp.float32),
+        "m": jnp.zeros((batch, d_model), jnp.float32),
+    }
+
+
+def slstm_block(p, x: jax.Array, state=None, odin: Optional[OdinConfig] = None):
+    """Scalar-memory LSTM with exponential gating and recurrent h-feedback."""
+    B, S, d = x.shape
+    pre = linear(x, p["zifo"], odin).astype(jnp.float32).reshape(B, S, 4, d)
+    st = state if state is not None else init_slstm_state(d, B)
+    st = {k: constrain(v, ("batch",) + (None,) * (v.ndim - 1)) for k, v in st.items()}
+    r = p["r_zifo"]                                              # [4, d] diagonal recurrence
+
+    def step(carry, zifo_t):
+        c, n, h, m = carry
+        zt = jnp.tanh(zifo_t[:, 0] + r[0] * h)
+        it = zifo_t[:, 1] + r[1] * h
+        ft = zifo_t[:, 2] + r[2] * h
+        ot = jax.nn.sigmoid(zifo_t[:, 3] + r[3] * h)
+        log_f = -jax.nn.softplus(-ft)
+        m_new = jnp.maximum(log_f + m, it)
+        i_sc = jnp.exp(it - m_new)
+        f_sc = jnp.exp(log_f + m - m_new)
+        c = f_sc * c + i_sc * zt
+        n = f_sc * n + i_sc
+        h_new = ot * c / jnp.maximum(n, 1e-6)
+        return (c, n, h_new, m_new), h_new
+
+    (c, n, h, m), ys = chunked_scan(step, (st["c"], st["n"], st["h"], st["m"]), pre.swapaxes(0, 1), chunk=256)
+    y = ys.swapaxes(0, 1).astype(x.dtype)
+    out = linear(rmsnorm(y, p["out_norm"]), p["out"], odin)
+    new_state = {"c": c, "n": n, "h": h, "m": m} if state is not None else None
+    return out, new_state

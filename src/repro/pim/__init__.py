@@ -1,0 +1,7 @@
+from repro.pim.geometry import PCRAMGeometry, PCRAMTiming, PCRAMEnergy, OdinModule
+from repro.pim.commands import Command, command_set, TABLE1_EXPECTED, TABLE3_PJ
+from repro.pim.trace import (
+    FC, Conv, Pool, Topology, trace_topology,
+    CNN1, CNN2, VGG1, VGG2, PAPER_TOPOLOGIES,
+)
+from repro.pim.baselines import CPUModel, ISAACModel, CPU32, CPU8, ISAAC_PIPE, ISAAC_UNPIPE

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# tests run against the source tree regardless of install state
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: device count is deliberately NOT forced here — smoke tests and
+# benches must see the 1 real CPU device.  Multi-device tests spawn
+# subprocesses with XLA_FLAGS set (tests/test_distributed.py).

@@ -1,0 +1,147 @@
+"""Attention correctness: blockwise==direct, decode==teacher-forced, MLA, SWA."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AttnConfig
+from repro.nn.attention import (
+    _blockwise, _mask_bias, _sdpa, attention, attn_spec, init_cache, sdpa,
+)
+from repro.nn.module import materialize
+
+
+def _rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * 0.3
+
+
+def _direct(q, k, v, q_pos, k_pos, window=0):
+    B, Sq = q.shape[0], q.shape[1]
+    Sk = k.shape[1]
+    qp = jnp.broadcast_to(q_pos, (B, Sq))
+    kp = jnp.broadcast_to(k_pos, (B, Sk))
+    bias = _mask_bias(qp, kp, window)[:, None]
+    return _sdpa(q, k, v, bias, 1.0 / np.sqrt(q.shape[-1]))
+
+
+@pytest.mark.parametrize("Sq,Sk,window,chunk", [
+    (256, 256, 0, 64), (256, 256, 96, 64), (128, 384, 0, 64),
+    (250, 250, 0, 64),   # non-divisible → padded path
+    (255, 511, 60, 64),
+])
+def test_blockwise_matches_direct(Sq, Sk, window, chunk):
+    B, H, Hkv, D = 2, 4, 2, 16
+    q = _rand(0, B, Sq, H, D)
+    k = _rand(1, B, Sk, Hkv, D)
+    v = _rand(2, B, Sk, Hkv, D)
+    q_pos = jnp.arange(Sk - Sq, Sk, dtype=jnp.int32)[None, :] + jnp.zeros((B, 1), jnp.int32)
+    k_pos = jnp.arange(Sk, dtype=jnp.int32)[None, :] + jnp.zeros((B, 1), jnp.int32)
+    out_b = sdpa(q, k, v, q_pos, k_pos, window, chunk=chunk, blockwise_threshold=1)
+    out_d = _direct(q, k, v, q_pos, k_pos, window)
+    np.testing.assert_allclose(np.asarray(out_b), np.asarray(out_d), atol=2e-5)
+
+
+def _decode_parity(cfg: AttnConfig, d_model: int, steps: int = 12):
+    """Teacher-forced full forward == prefill + step-by-step decode."""
+    key = jax.random.PRNGKey(0)
+    params = materialize(attn_spec(cfg, d_model), key)
+    B, S = 2, steps
+    x = _rand(9, B, S, d_model).astype(jnp.bfloat16)
+
+    full, _ = attention(params, x, cfg)
+
+    cache = init_cache(cfg, B, max_len=S + 4)
+    out0, cache = attention(params, x[:, :4], cfg, cache=cache)
+    outs = [out0]
+    for t in range(4, S):
+        o, cache = attention(params, x[:, t:t + 1], cfg, cache=cache)
+        outs.append(o)
+    inc = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full, np.float32),
+                               np.asarray(inc, np.float32), atol=3e-2)
+
+
+def test_gqa_decode_parity():
+    _decode_parity(AttnConfig(kind="gqa", n_heads=4, n_kv_heads=2, d_head=16), 64)
+
+
+def test_mha_nope_decode_parity():
+    _decode_parity(AttnConfig(kind="gqa", n_heads=4, n_kv_heads=4, d_head=16,
+                              rope="none"), 64)
+
+
+def test_mla_decode_parity():
+    cfg = AttnConfig(kind="mla", n_heads=4, n_kv_heads=4, d_head=16,
+                     q_lora_rank=32, kv_lora_rank=32, qk_nope_dim=16,
+                     qk_rope_dim=8, v_head_dim=16)
+    _decode_parity(cfg, 64)
+
+
+def test_sliding_window_ring_buffer():
+    """Window cache keeps only ``window`` entries yet matches full attention."""
+    cfg = AttnConfig(kind="gqa", n_heads=2, n_kv_heads=2, d_head=16, window=6)
+    d_model = 32
+    params = materialize(attn_spec(cfg, d_model), jax.random.PRNGKey(1))
+    B, S = 1, 16
+    x = _rand(5, B, S, d_model).astype(jnp.bfloat16)
+
+    full, _ = attention(params, x, cfg)
+
+    cache = init_cache(cfg, B, max_len=S)
+    assert cache["k"].shape[1] == cfg.window      # O(window) state
+    outs = []
+    for t in range(S):
+        o, cache = attention(params, x[:, t:t + 1], cfg, cache=cache)
+        outs.append(o)
+    inc = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full, np.float32)[:, 8:],
+                               np.asarray(inc, np.float32)[:, 8:], atol=3e-2)
+
+
+def test_mask_bias_window_semantics():
+    qp = jnp.array([[5]])
+    kp = jnp.arange(8)[None]
+    bias = _mask_bias(qp, kp, window=3)
+    visible = np.asarray(bias[0, 0] == 0.0)
+    np.testing.assert_array_equal(visible, [False, False, False, True, True, True, False, False])
+
+
+@pytest.mark.parametrize("kind", ["gqa", "swa", "mla"])
+def test_int8_kv_cache_parity(kind):
+    """8-bit KV cache (§Perf-3, the paper's fixed-8-bit-operand adjustment):
+    decode against an int8 cache matches exact attention within the
+    fixed-point step (1/16)."""
+    if kind == "mla":
+        cfg = AttnConfig(kind="mla", n_heads=4, n_kv_heads=4, d_head=16,
+                         q_lora_rank=32, kv_lora_rank=32, qk_nope_dim=16,
+                         qk_rope_dim=8, v_head_dim=16)
+    else:
+        cfg = AttnConfig(kind="gqa", n_heads=4, n_kv_heads=2, d_head=16,
+                         window=6 if kind == "swa" else 0)
+    d = 64
+    params = materialize(attn_spec(cfg, d), jax.random.PRNGKey(0))
+    B, S = 2, 12
+    x = (_rand(1, B, S, d) * 1.5).astype(jnp.bfloat16)
+    full, _ = attention(params, x, cfg)
+    cache = init_cache(cfg, B, max_len=S, dtype=jnp.int8)
+    assert all(l.dtype == jnp.int8 for k, l in cache.items() if k != "pos")
+    outs = []
+    for t in range(S):
+        o, cache = attention(params, x[:, t:t + 1], cfg, cache=cache)
+        outs.append(o)
+    inc = jnp.concatenate(outs, 1)
+    lo = 8 if kind == "swa" else 0          # ring warm-up region
+    err = np.abs(np.asarray(full, np.float32) - np.asarray(inc, np.float32))[:, lo:]
+    assert err.max() < 0.15, err.max()
+
+
+def test_mla_cache_is_compressed():
+    """MLA cache stores the latent (r ≪ H·D), the paper-exact DeepSeek trick."""
+    cfg = AttnConfig(kind="mla", n_heads=8, n_kv_heads=8, d_head=128,
+                     kv_lora_rank=64, qk_nope_dim=32, qk_rope_dim=16, v_head_dim=32)
+    cache = init_cache(cfg, batch=2, max_len=100)
+    assert set(cache) == {"c_kv", "k_rope", "pos"}
+    assert cache["c_kv"].shape == (2, 100, 64)
+    full_kv = 2 * 100 * 8 * (32 + 32)
+    latent = 2 * 100 * (64 + 16)
+    assert latent < full_kv / 6

@@ -1,0 +1,54 @@
+"""Fig. 6 reproduction bands (see benchmarks/fig6_comparison.py docstring)."""
+import pytest
+
+from benchmarks import fig6_comparison
+
+
+@pytest.fixture(scope="module")
+def fig6():
+    return fig6_comparison.run(verbose=False)
+
+
+def test_odin_faster_than_everything(fig6):
+    for res in fig6["results"]["literature"].values():
+        for v in res["speedup"].values():
+            assert v > 1.0
+
+
+def test_isaac_speed_bands(fig6):
+    b = fig6["bands"]
+    lo, hi = b["isaac_speed_vgg"]
+    assert 3 <= lo <= 20            # paper floor: 5.8×
+    lo_c, hi_c = b["isaac_speed_cnn"]
+    assert 5 <= hi_c <= 200         # paper ceiling: 90.8×
+    assert hi_c > hi                # CNN margin exceeds VGG margin (paper §VI-B)
+
+
+def test_cpu_speed_scale(fig6):
+    # paper: up to 438× (VGG) / 569× (CNN)
+    assert 100 <= fig6["bands"]["cpu_speed_max"] <= 2000
+
+
+def test_energy_accounting_finding(fig6):
+    """The documented calibration: literature PCRAM energies → ODIN wins vs
+    ISAAC by single digits; the paper's 3-digit bands need add-on-only
+    accounting.  Both directions must hold or the finding text is stale."""
+    b = fig6["bands"]
+    assert b["isaac_energy_vgg_lit"][0] > 1.0          # still wins
+    assert b["isaac_energy_vgg_lit"][1] < 100          # nowhere near 1554×
+    assert b["isaac_energy_vgg_implied"][0] > 50       # add-on-only: 3 digits
+    lo, hi = b["isaac_energy_cnn_implied"]
+    assert lo < 23.2 < hi * 1.5                        # brackets paper's 23.2×
+
+
+def test_unpipelined_isaac_slower_than_pipelined(fig6):
+    for res in fig6["results"]["literature"].values():
+        assert res["speedup"]["ISAAC-unpipelined"] >= res["speedup"]["ISAAC-pipelined"]
+
+
+def test_vgg_margin_smaller_than_cnn(fig6):
+    """Paper §VI-B: conversion overheads shrink ODIN's VGG margin."""
+    res = fig6["results"]["literature"]
+    vgg = min(res[n]["speedup"]["ISAAC-pipelined"] for n in ("VGG1", "VGG2"))
+    cnn = min(res[n]["speedup"]["ISAAC-pipelined"] for n in ("CNN1", "CNN2"))
+    assert cnn > vgg

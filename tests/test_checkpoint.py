@@ -1,0 +1,130 @@
+"""Checkpoint atomicity, integrity, resume-exactness, crash injection."""
+import json
+import os
+import shutil
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.data.synthetic import lm_batch
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 4)),
+                       "m": jnp.zeros((8, 4), jnp.int8)},
+            "step": jnp.int32(3)}
+
+
+def _tpl(tree):
+    return jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 3, t)
+    out, step = ckpt.restore(str(tmp_path), 3, _tpl(t), verify=True)
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_tmp_dirs_ignored_and_gced(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 1, _tree())
+    os.makedirs(os.path.join(d, "step_000000002.tmp"))       # crash debris
+    assert ckpt.latest_step(d) == 1                          # ignored
+    ckpt.save(d, 3, _tree())
+    assert not any(n.endswith(".tmp") for n in os.listdir(d))  # collected
+
+
+def test_keep_policy(tmp_path):
+    d = str(tmp_path)
+    for s in range(6):
+        ckpt.save(d, s, _tree(), keep=2)
+    assert ckpt.all_steps(d) == [4, 5]
+
+
+def test_corruption_detected(tmp_path):
+    d = str(tmp_path)
+    t = _tree()
+    path = ckpt.save(d, 1, t)
+    npz = os.path.join(path, "arrays.npz")
+    raw = open(npz, "rb").read()
+    # flip bytes inside the payload
+    corrupted = raw[:-50] + bytes(b ^ 0xFF for b in raw[-50:])
+    open(npz, "wb").write(corrupted)
+    with pytest.raises(Exception):
+        ckpt.restore(d, 1, _tpl(t), verify=True)
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    d = str(tmp_path)
+    t = _tree()
+    ckpt.save(d, 1, t)
+    bad = dict(t)
+    bad["params"] = {"w": jnp.zeros((9, 4)), "m": t["params"]["m"]}
+    with pytest.raises(ckpt.CheckpointError):
+        ckpt.restore(d, 1, _tpl(bad))
+
+
+# ---------------------------------------------------------------------------
+# resume exactness: 10 straight steps == 5 + restart + 5
+# ---------------------------------------------------------------------------
+
+def test_train_resume_exactness(tmp_path):
+    from repro.launch.train import train_loop
+    from repro.models import registry
+    from repro.optim.adamw import AdamWConfig
+
+    cfg = registry.get_smoke("xlstm-350m")
+    kw = dict(batch=2, seq=32, save_every=5, seed=7,
+              opt_cfg=AdamWConfig(moment_dtype="float32"))
+
+    d1 = str(tmp_path / "a")
+    _, losses_straight = train_loop(cfg, steps=10, ckpt_dir=d1, **kw)
+
+    d2 = str(tmp_path / "b")
+    train_loop(cfg, steps=5, ckpt_dir=d2, **kw)
+    _, losses_resumed = train_loop(cfg, steps=10, ckpt_dir=d2, resume=True, **kw)
+
+    np.testing.assert_allclose(losses_straight[5:], losses_resumed, rtol=1e-5)
+
+
+def test_data_pipeline_step_indexed():
+    a = lm_batch(0, 41, batch=2, seq=16, vocab=97)
+    b = lm_batch(0, 41, batch=2, seq=16, vocab=97)
+    c = lm_batch(0, 42, batch=2, seq=16, vocab=97)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+    assert np.asarray(a["tokens"] != c["tokens"]).any()
+
+
+# ---------------------------------------------------------------------------
+# crash injection through the real driver (subprocess)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_crash_and_relaunch(tmp_path):
+    d = str(tmp_path / "run")
+    env = dict(os.environ, PYTHONPATH=SRC)
+    base = [sys.executable, "-m", "repro.launch.train", "--arch", "xlstm-350m",
+            "--smoke", "--batch", "2", "--seq", "32", "--ckpt-dir", d,
+            "--save-every", "4", "--steps", "12"]
+    # crash (no checkpoint!) at step 9 — last save was step 8
+    p = subprocess.run(base + ["--simulate-crash-at", "9"], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert p.returncode == 137
+    assert ckpt.latest_step(d) == 8
+    # supervisor relaunches with --resume; run completes from step 8
+    p2 = subprocess.run(base + ["--resume"], env=env, capture_output=True,
+                        text=True, timeout=600)
+    assert p2.returncode == 0, p2.stdout + p2.stderr
+    assert "resumed from step 8" in p2.stdout
+    assert ckpt.latest_step(d) == 12

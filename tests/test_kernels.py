@@ -1,0 +1,147 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret=True).
+
+Every Pallas kernel asserts allclose (bit-exact where the math is integer)
+against its ref.py across a sweep of shapes, including non-divisible edges
+that exercise the padding paths in ops.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import stochastic as sc
+from repro.core.odin_linear import get_luts
+from repro.kernels.act_pool import act_pool, act_pool_ref
+from repro.kernels.int8_mm import int8_matmul, int8_mm_pallas, int8_mm_ref
+from repro.kernels.sc_mac import sc_matmul_pallas, sc_matmul_hybrid_ref, sc_matmul_tree_ref
+from repro.kernels.sc_mac.ref import ranks_from_lut
+
+SPEC = sc.StreamSpec(256, 256)
+LUT_A, LUT_W, SELECTS = get_luts(256, 256, 0)
+
+
+# ---------------------------------------------------------------------------
+# sc_mac
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,K,N", [(1, 1, 1), (3, 17, 5), (8, 64, 8),
+                                   (5, 33, 11), (16, 128, 4)])
+@pytest.mark.parametrize("dtype", [jnp.uint8, jnp.int32])
+def test_sc_mac_tree_regime_exact(M, K, N, dtype):
+    rng = np.random.default_rng(M * 1000 + K * 10 + N)
+    a = jnp.asarray(rng.integers(0, 256, (M, K)), dtype)
+    w = jnp.asarray(rng.integers(0, 256, (K, N)), dtype)
+    pal = sc_matmul_pallas(a, w, LUT_A, LUT_W, SELECTS, SPEC, interpret=True)
+    core = sc.sc_matmul(a.astype(jnp.int32), w.astype(jnp.int32),
+                        LUT_A, LUT_W, SELECTS, SPEC)
+    np.testing.assert_array_equal(np.asarray(pal), np.asarray(core))
+    ref = sc_matmul_tree_ref(a, w, LUT_A, LUT_W, SELECTS, SPEC)
+    np.testing.assert_array_equal(np.asarray(pal), np.asarray(ref))
+
+
+@pytest.mark.parametrize("M,K,N,max_tree_k", [(4, 70, 6, 32), (2, 200, 3, 64)])
+def test_sc_mac_hybrid_regime(M, K, N, max_tree_k):
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(rng.integers(0, 256, (M, K)), jnp.int32)
+    w = jnp.asarray(rng.integers(0, 256, (K, N)), jnp.int32)
+    pal = sc_matmul_pallas(a, w, LUT_A, LUT_W, SELECTS, SPEC, interpret=True,
+                           max_tree_k=max_tree_k)
+    ref = sc_matmul_hybrid_ref(a, w, LUT_A, LUT_W, SELECTS, SPEC, block_k=max_tree_k)
+    khat = 1 << sc.tree_depth(K)
+    np.testing.assert_allclose(np.asarray(pal),
+                               np.asarray(ref) * (max_tree_k / khat), rtol=1e-6)
+
+
+def test_sc_mac_nondefault_stream_geometry():
+    spec = sc.StreamSpec(128, 128)
+    la, lw, sel = get_luts(128, 128, 3)
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(0, 128, (4, 12)), jnp.int32)
+    w = jnp.asarray(rng.integers(0, 128, (12, 4)), jnp.int32)
+    pal = sc_matmul_pallas(a, w, la, lw, sel, spec, interpret=True)
+    core = sc.sc_matmul(a, w, la, lw, sel, spec)
+    np.testing.assert_array_equal(np.asarray(pal), np.asarray(core))
+
+
+def test_ranks_roundtrip():
+    ranks = ranks_from_lut(LUT_A, 256)
+    assert ranks.shape == (8, 32)
+    # rebuilding streams from ranks == LUT rows (comparator == LUT identity)
+    vals = jnp.arange(256)[:, None, None]
+    bits = (vals > ranks[None]).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    rebuilt = (bits * weights).sum(-1, dtype=jnp.uint32)
+    np.testing.assert_array_equal(np.asarray(rebuilt), np.asarray(LUT_A))
+
+
+# ---------------------------------------------------------------------------
+# int8_mm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,K,N,bm,bn,bk", [
+    (16, 32, 8, 8, 8, 8), (128, 128, 128, 128, 128, 128),
+    (33, 70, 9, 16, 16, 32), (1, 300, 1, 8, 8, 64),
+])
+def test_int8_mm_exact(M, K, N, bm, bn, bk):
+    rng = np.random.default_rng(M + K + N)
+    a = jnp.asarray(rng.integers(-127, 128, (M, K)), jnp.int8)
+    w = jnp.asarray(rng.integers(-127, 128, (K, N)), jnp.int8)
+    sa = jnp.asarray(rng.uniform(0.001, 1.0, (M,)), jnp.float32)
+    sw = jnp.asarray(rng.uniform(0.001, 1.0, (N,)), jnp.float32)
+    y = int8_mm_pallas(a, w, sa, sw, block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(int8_mm_ref(a, w, sa, sw)),
+                               rtol=1e-6)
+
+
+def test_int8_matmul_quant_quality():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(20, 64)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(64, 12)), jnp.float32)
+    y = int8_matmul(x, w)
+    ref = x @ w
+    rel = float(jnp.abs(y - ref).max() / jnp.abs(ref).max())
+    assert rel < 0.02
+
+
+# ---------------------------------------------------------------------------
+# act_pool
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,W,C,pool", [
+    (1, 4, 4, 8, 2), (2, 28, 28, 10, 2), (3, 12, 12, 16, 3), (1, 6, 6, 1, 2),
+])
+def test_act_pool_exact(B, H, W, C, pool):
+    rng = np.random.default_rng(B * H + C)
+    x = jnp.asarray(rng.integers(-300, 600, (B, H, W, C)), jnp.int32)
+    y = act_pool(x, pool=pool)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(act_pool_ref(x, pool)))
+    assert int(y.min()) >= 0 and int(y.max()) <= 255
+
+
+def test_act_pool_saturation_semantics():
+    """The 8-bit ReLU block clamps to [0, 255] — ODIN's S_TO_B output width."""
+    x = jnp.array([[[[-5, 0, 255, 300]]]], jnp.int32).reshape(1, 2, 2, 1)
+    y = act_pool(x)
+    assert int(y[0, 0, 0, 0]) == 255
+
+
+@pytest.mark.parametrize("act,pool_kind", [("relu", "avg"), ("tanh", "max"),
+                                           ("tanh", "avg")])
+def test_act_pool_extended_variants(act, pool_kind):
+    """§IV-B.2 extensibility: tanh activation and average pooling."""
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.integers(-100, 400, (2, 8, 8, 8)), jnp.int32)
+    y = act_pool(x, act=act, pool_kind=pool_kind)
+    yr = act_pool_ref(x, act=act, pool_kind=pool_kind)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+    assert int(y.min()) >= 0 and int(y.max()) <= 255
+
+
+def test_act_pool_tanh_is_8bit_lut_consistent():
+    """The closed form equals a 256-entry LUT over the popcount domain."""
+    vals = jnp.arange(256, dtype=jnp.int32).reshape(1, 16, 16, 1)
+    y = act_pool(vals, act="tanh", pool_kind="max")
+    lut = jnp.clip(jnp.round(255.0 * jnp.tanh(jnp.arange(256.0) / 64.0)), 0, 255)
+    manual = lut[np.arange(256).reshape(16, 16)].reshape(1, 8, 2, 8, 2)[0]
+    expect = np.asarray(manual).reshape(8, 2, 8, 2).max(axis=(1, 3))
+    np.testing.assert_array_equal(np.asarray(y[0, :, :, 0]), expect)

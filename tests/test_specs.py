@@ -1,0 +1,99 @@
+"""Launcher spec plumbing: abstract inputs, pspec tables, divisibility."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import LM_SHAPES
+from repro.launch import specs as specs_mod
+from repro.launch.mesh import param_pspecs, sharding_rules
+from repro.models import lm, registry
+from repro.nn.module import ParamSpec, logical_to_pspec
+
+
+def test_input_specs_train_shapes():
+    info = specs_mod.input_specs("llama3-405b", "train_4k")
+    assert info["kind"] == "train"
+    acc = info["accum"]
+    assert info["batch"]["tokens"].shape == (acc, 256 // acc, 4096)
+    assert info["batch"]["tokens"].dtype == jnp.int32
+
+
+def test_input_specs_decode_has_caches():
+    info = specs_mod.input_specs("phi3-medium-14b", "decode_32k")
+    assert info["kind"] == "decode"
+    assert info["tokens"].shape == (128, 1)
+    leaves = jax.tree.leaves(info["caches"])
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    # one K cache leaf is [L, B, S, Hkv, D]
+    shapes = {l.shape for l in leaves}
+    assert (40, 128, 32768, 10, 128) in shapes
+
+
+def test_input_specs_musicgen_multicodebook():
+    info = specs_mod.input_specs("musicgen-medium", "train_4k")
+    assert info["batch"]["tokens"].shape == (256, 4, 4096)
+
+
+def test_input_specs_vlm_stub():
+    info = specs_mod.input_specs("qwen2-vl-2b", "prefill_32k")
+    assert "patch_embeds" in info["batch"]
+    n_p = info["batch"]["patch_embeds"].shape[1]
+    assert int(np.sqrt(n_p)) ** 2 == n_p          # square patch grid
+
+
+def test_kv_dtype_override_flows_to_caches():
+    info = specs_mod.input_specs("musicgen-medium", "decode_32k", kv_dtype="int8")
+    dtypes = {str(l.dtype) for k, l in
+              jax.tree_util.tree_flatten_with_path(info["caches"])[0]
+              if "pos" not in jax.tree_util.keystr(k[-1:])}
+    assert dtypes == {"int8"}
+
+
+def test_abstract_never_allocates():
+    """671B abstract params build instantly with zero device memory."""
+    cfg = registry.get_config("deepseek-v3-671b")
+    import repro.nn.module as nnmod
+    tree = nnmod.abstract(lm.param_spec(cfg))
+    n = sum(np.prod(l.shape) for l in jax.tree.leaves(tree))
+    assert n > 600e9
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in jax.tree.leaves(tree))
+
+
+class _FakeMesh:
+    def __init__(self, sizes):
+        self.shape = sizes
+        self.axis_names = tuple(sizes)
+
+
+def test_param_pspecs_drops_nondividing_axes():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    rules = {"vocab": "model", "embed": ("data",)}
+    spec = {"embed": ParamSpec((32001, 1600), ("vocab", "embed"))}
+    ps = param_pspecs(spec, rules, mesh)["embed"]
+    assert ps == P(None, "data")                  # 32001 % 16 ≠ 0 → dropped
+    spec2 = {"embed": ParamSpec((32000, 1600), ("vocab", "embed"))}
+    ps2 = param_pspecs(spec2, rules, mesh)["embed"]
+    assert ps2 == P("model", "data")
+
+
+def test_logical_to_pspec_drops_repeated_axes():
+    rules = {"a": "model", "b": "model"}
+    assert logical_to_pspec(("a", "b"), rules) == P("model")
+
+
+def test_sharding_rules_kinds():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    train = sharding_rules(mesh, "train")
+    decode = sharding_rules(mesh, "decode")
+    assert train["act_seq"] == "model"            # sequence-parallel carries
+    assert decode["act_seq"] is None
+    assert train["experts"] == "model"            # EP
+    over = sharding_rules(mesh, "train", act_seq=None)
+    assert over["act_seq"] is None                # §Perf override hook
+
+
+def test_cells_cover_every_arch():
+    archs = {a for a, _ in registry.cells()}
+    assert archs == set(registry.ARCH_IDS)
