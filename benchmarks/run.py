@@ -7,12 +7,15 @@
   odin_lm — the ODIN cost model on the 10 assigned LM archs (beyond paper)
   kernels — Pallas kernel microbench + structural TPU model
   roofline— per-cell roofline terms from the cached dry-run artifacts
+  serving — continuous-batching engine vs static loop + PIMC attribution
 """
+import functools
 import sys
 import traceback
 
 from benchmarks import (fig6_comparison, kernel_bench, odin_lm_cost, roofline,
-                        table1_commands, table2_topologies, table3_overheads)
+                        serving_bench, table1_commands, table2_topologies,
+                        table3_overheads)
 
 SECTIONS = [
     ("table1", table1_commands.run),
@@ -22,6 +25,7 @@ SECTIONS = [
     ("odin_lm", odin_lm_cost.run),
     ("kernels", kernel_bench.run),
     ("roofline", roofline.run),
+    ("serving", functools.partial(serving_bench.run, n_requests=8, slots_sweep=(2,))),
 ]
 
 

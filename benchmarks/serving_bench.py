@@ -1,0 +1,143 @@
+"""Serving benchmark: continuous batching vs the static-batch loop.
+
+Sweeps arrival rate × batch slots over a mixed-length request stream and
+reports decode throughput, TTFT/TPOT percentiles, slot occupancy, and the
+per-request ODIN PIMC energy bill (JSON like the other benches).
+
+The baseline is the seed's static-batch discipline (``serve_static``): group
+requests into consecutive batches of ``slots``, pad every batch to its
+longest prompt, and decode until its *longest* generation finishes — slots
+whose request retired early keep burning decode steps.  The engine re-admits
+freed slots instead; on the ``mixed`` stream its useful decode throughput
+must be ≥ 1.5× (asserted when --check is passed; the repo's serving test
+asserts the same at smoke scale).
+
+  PYTHONPATH=src python benchmarks/serving_bench.py --json serving.json
+"""
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.launch.serve import serve_static
+from repro.models import registry
+from repro.serving import (OdinCostModel, Request, ServingEngine, WorkloadSpec,
+                           make_requests)
+
+
+def _mixed_spec(n_requests: int) -> WorkloadSpec:
+    return WorkloadSpec(n_requests=n_requests, rate=1e9,
+                        prompt_buckets=(16, 32), gen_buckets=(4, 16, 48),
+                        gen_weights=(0.4, 0.35, 0.25))
+
+
+def static_baseline(cfg, requests, slots: int, params=None, seed: int = 0):
+    """Run the request stream with the static-batch loop.
+
+    Useful tokens = what each request actually asked for; the loop still
+    decodes max(gen) steps per batch, so utilization drops as length mix
+    widens.  Returns (useful_tokens_per_s, decode_time_s).
+    """
+    useful = sum(r.max_new for r in requests)
+    t_decode = 0.0
+    for i in range(0, len(requests), slots):
+        group = requests[i:i + slots]
+        prompt_len = max(r.prompt_len for r in group)
+        gen = max(r.max_new for r in group)
+        _, tps = serve_static(cfg, batch=len(group), prompt_len=prompt_len,
+                              gen=gen, seed=seed, params=params, verbose=False)
+        t_decode += len(group) * gen / tps
+    return useful / max(t_decode, 1e-9), t_decode
+
+
+def engine_run(cfg, requests, slots: int, rate: float, params=None,
+               attribution_cfg=None):
+    spec_max = max(r.prompt_len + r.max_new for r in requests)
+    max_len = -(-spec_max // 16) * 16
+    engine = ServingEngine(cfg, slots=slots, max_len=max_len, block_size=16,
+                           params=params, attribution_cfg=attribution_cfg)
+    # re-stamp arrivals for the requested rate (virtual → wall seconds)
+    rng = np.random.default_rng(7)
+    gaps = rng.exponential(1.0 / rate, len(requests)) if np.isfinite(rate) else np.zeros(len(requests))
+    arrivals = np.cumsum(gaps)
+    reqs = [Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new,
+                    arrival=float(a)) for r, a in zip(requests, arrivals)]
+    summary = engine.run(reqs)
+    return summary
+
+
+def run(verbose: bool = True, n_requests: int = 16, slots_sweep=(2, 4),
+        rates=(float("inf"),), arch: str = "phi4-mini-3.8b",
+        json_path=None, check: bool = False):
+    cfg = registry.get_smoke(arch)
+    attribution_cfg = registry.get_config(arch)   # bill energy at full scale
+    import jax
+    from repro.models import lm
+    from repro.nn import module as nnmod
+    params = nnmod.materialize(lm.param_spec(cfg), jax.random.PRNGKey(0))
+    base_requests = make_requests(cfg, _mixed_spec(n_requests), seed=11)
+
+    out = {"arch": arch, "n_requests": n_requests, "cells": []}
+    for slots in slots_sweep:
+        tps_static, t_static = static_baseline(cfg, base_requests, slots, params=params)
+        for rate in rates:
+            summary = engine_run(cfg, base_requests, slots, rate, params=params,
+                                 attribution_cfg=attribution_cfg)
+            cell = {
+                "slots": slots,
+                "arrival_rate": None if not np.isfinite(rate) else rate,
+                "static_useful_tokens_per_s": tps_static,
+                "engine_tokens_per_s": summary["decode_tokens_per_s"],
+                "speedup": summary["decode_tokens_per_s"] / max(tps_static, 1e-9),
+                "ttft_s": summary["ttft_s"],
+                "tpot_s": summary["tpot_s"],
+                "slot_occupancy": summary["slot_occupancy"],
+                "preemptions": summary["preemptions"],
+                "odin_total": summary["odin_total"],
+                "per_request": [
+                    {k: rec[k] for k in ("rid", "prompt_tokens", "generated_tokens",
+                                         "ttft_s", "tpot_s", "odin")}
+                    for rec in summary["requests"]
+                ],
+            }
+            out["cells"].append(cell)
+            if verbose:
+                r = "∞" if cell["arrival_rate"] is None else f"{rate:g}/s"
+                print(f"slots={slots} rate={r:>6}: static {tps_static:7.1f} tok/s → "
+                      f"engine {cell['engine_tokens_per_s']:7.1f} tok/s "
+                      f"({cell['speedup']:.2f}×)  occ {cell['slot_occupancy']:.2f}  "
+                      f"ttft_p50 {cell['ttft_s']['p50']*1e3:6.1f} ms  "
+                      f"energy {cell['odin_total']['energy_mj']/1e3:.2f} J")
+    best = max(c["speedup"] for c in out["cells"])
+    out["best_speedup"] = best
+    if verbose:
+        print(f"best decode-throughput speedup over static batching: {best:.2f}×")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+        if verbose:
+            print(f"wrote {json_path}")
+    if check and best < 1.5:
+        raise SystemExit(f"speedup {best:.2f}× < required 1.5×")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="phi4-mini-3.8b", choices=registry.ARCH_IDS)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, nargs="+", default=[2, 4])
+    ap.add_argument("--rates", type=float, nargs="+", default=None,
+                    help="arrival rates (req/s); default: unthrottled")
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless engine ≥ 1.5× static decode throughput")
+    args = ap.parse_args()
+    rates = tuple(args.rates) if args.rates else (float("inf"),)
+    run(n_requests=args.requests, slots_sweep=tuple(args.slots), rates=rates,
+        arch=args.arch, json_path=args.json, check=args.check)
+
+
+if __name__ == "__main__":
+    main()

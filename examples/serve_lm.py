@@ -1,17 +1,20 @@
-"""Batched KV-cache serving example (deliverable b, serving flavor).
+"""Continuous-batching serving example (deliverable b, serving flavor).
 
-Prefills a batch of synthetic prompts through a smoke-size config of any
-assigned architecture and decodes greedily — the same prefill/decode step
-functions the production dry-run lowers at decode_32k / long_500k.
+Streams a mixed-length synthetic workload through the serving engine
+(repro.serving): requests arrive open-loop, admit into cache slots, prefill
+in chunks, decode in one fixed-shape [slots, 1] step, and retire — freed
+slots immediately re-admit queued work.  Per-request TTFT/TPOT and the ODIN
+PIMC energy bill are printed at the end.
 
-    PYTHONPATH=src python examples/serve_lm.py --arch hymba-1.5b
+    PYTHONPATH=src python examples/serve_lm.py --arch hymba-1.5b --scenario mixed
 """
 import argparse
+import dataclasses
 
 import numpy as np
 
-from repro.launch.serve import serve
 from repro.models import registry
+from repro.serving import SCENARIOS, ServingEngine, make_requests
 
 
 def main():
@@ -19,17 +22,38 @@ def main():
     ap.add_argument("--arch", default="phi4-mini-3.8b", choices=registry.ARCH_IDS)
     ap.add_argument("--full", action="store_true",
                     help="full config (CPU: slow!) instead of smoke")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--scenario", default="mixed", choices=sorted(SCENARIOS))
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--odin-mode", choices=["exact", "int8", "sc"], default=None)
     args = ap.parse_args()
 
     cfg = registry.get_config(args.arch) if args.full else registry.get_smoke(args.arch)
-    generated, tps = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
-                           gen=args.gen)
-    print(f"arch={args.arch} ({'full' if args.full else 'smoke'})")
-    for i in range(min(args.batch, 3)):
-        print(f"  request {i}: {np.asarray(generated)[i].ravel()[:20]}")
+    spec = dataclasses.replace(SCENARIOS[args.scenario], n_requests=args.requests)
+    max_len = max(spec.prompt_buckets) + max(spec.gen_buckets)
+    max_len = -(-max_len // 16) * 16
+
+    streamed = {}
+
+    def on_token(req, tok, now):
+        streamed.setdefault(req.rid, []).append(int(np.asarray(tok).ravel()[0]))
+
+    engine = ServingEngine(cfg, slots=args.slots, max_len=max_len,
+                           block_size=16, odin_mode=args.odin_mode,
+                           on_token=on_token)
+    summary = engine.run(make_requests(cfg, spec, seed=0))
+
+    print(f"arch={args.arch} ({'full' if args.full else 'smoke'}) "
+          f"scenario={args.scenario}: {summary['generated_tokens']} tokens, "
+          f"{summary['decode_tokens_per_s']:.1f} tok/s decode, "
+          f"occupancy {summary['slot_occupancy']:.2f}")
+    print(f"TTFT p50/p90 = {summary['ttft_s']['p50']*1e3:.0f}/{summary['ttft_s']['p90']*1e3:.0f} ms, "
+          f"TPOT p50/p90 = {summary['tpot_s']['p50']*1e3:.1f}/{summary['tpot_s']['p90']*1e3:.1f} ms")
+    for rec in summary["requests"][:3]:
+        toks = streamed.get(rec["rid"], [])[:10]
+        print(f"  request {rec['rid']}: prompt {rec['prompt_tokens']:3d} "
+              f"gen {rec['generated_tokens']:3d} "
+              f"odin {rec['odin']['energy_mj']:8.2f} mJ  tokens {toks}")
 
 
 if __name__ == "__main__":

@@ -123,7 +123,6 @@ def make_select_streams(key: jax.Array, depth: int, spec: StreamSpec = StreamSpe
     ``stream_len/2`` ones) so each level's subsampling is unbiased.
     """
     keys = jax.random.split(key, depth)
-    half = StreamSpec(spec.stream_len, 2)  # level-1 threshold unused; build manually
 
     def one(k):
         ranks = jax.random.permutation(k, spec.stream_len)

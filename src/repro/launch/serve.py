@@ -1,22 +1,29 @@
-"""Batched KV-cache serving driver: prefill → decode loop.
+"""Serving driver — thin CLI over the continuous-batching engine.
 
-Serves a model over a batch of synthetic requests: one jitted prefill step
-fills the caches for the prompt, then a jitted decode step generates tokens
-greedily.  The same step functions are what the dry-run lowers at the
-decode_32k / long_500k cells, so this driver is the runnable witness that
-the serving path works end to end.
+``serve()`` now routes through :class:`repro.serving.ServingEngine`: each
+prompt becomes a request, the engine admits them into cache slots, chunked
+prefill interleaves with the fixed ``[B, 1]`` decode step, and freed slots
+re-admit queued work.  The old one-shot static-batch loop survives as
+``serve_static()`` — it is the baseline the serving benchmark beats and the
+parity witness the engine tests decode against.
 
-Continuous-batching shape discipline: prompts are right-aligned into a fixed
-[B, S_prompt] window and generation always runs the same [B, 1] step, so one
-compiled executable serves every request mix (no recompiles mid-flight).
+Continuous-batching shape discipline: the serving caches are fixed
+``[slots, max_len]`` and generation always runs the same ``[slots, 1]`` step,
+so one compiled executable serves every request mix (no recompiles
+mid-flight); only distinct prefill chunk lengths trace separately.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b --smoke \
       --batch 4 --prompt-len 32 --gen 16
+  # mixed-length open-loop workload with a constrained KV pool:
+  PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b --smoke \
+      --scenario mixed --requests 16 --slots 4 --kv-blocks 20
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 import time
 
 import jax
@@ -28,13 +35,18 @@ from repro.launch import specs as specs_mod
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import lm, registry
 from repro.nn import module as nnmod
+from repro.serving import SCENARIOS, Request, ServingEngine, make_requests
 
-__all__ = ["serve", "main"]
+__all__ = ["serve", "serve_static", "main"]
 
 
-def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
-          params=None, verbose: bool = True):
-    """Returns (generated [B, gen] int32, tokens/s)."""
+def serve_static(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
+                 params=None, verbose: bool = True):
+    """The original static-batch loop: one prefill, ``gen`` lockstep decode
+    steps, every slot runs to the end even if its request is done.
+
+    Returns (generated [B, gen] int32, decode tokens/s).
+    """
     if params is None:
         params = nnmod.materialize(lm.param_spec(cfg), jax.random.PRNGKey(seed))
     max_len = prompt_len + gen
@@ -60,12 +72,56 @@ def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
     jax.block_until_ready(tok)
     t_decode = time.time() - t1
 
-    gen_axis = -1
-    generated = jnp.concatenate(outs, axis=gen_axis)
+    generated = jnp.concatenate(outs, axis=-1)
     tps = batch * gen / max(t_decode, 1e-9)
     if verbose:
-        print(f"[serve] prefill {batch}×{prompt_len} in {t_prefill*1e3:.0f} ms; "
+        print(f"[serve] static prefill {batch}×{prompt_len} in {t_prefill*1e3:.0f} ms; "
               f"decode {gen} steps in {t_decode*1e3:.0f} ms  ({tps:.1f} tok/s)")
+    return generated, tps
+
+
+def _batch_requests(cfg, batch: int, prompt_len: int, gen: int, seed: int):
+    """The static driver's workload as engine requests: same concrete batch,
+    all arriving at t=0."""
+    shape = ShapeConfig("serve", prompt_len, batch, "prefill")
+    data = specs_mod.concrete_batch(cfg, shape, seed, 0)
+    toks = np.asarray(data["tokens"])
+    reqs = []
+    for i in range(batch):
+        extras = None
+        if cfg.vision_stub:
+            extras = {"patch_embeds": np.asarray(data["patch_embeds"])[i],
+                      "pos3d": np.asarray(data["pos3d"])[i]}
+        reqs.append(Request(rid=i, prompt=toks[i], max_new=gen, extras=extras))
+    return reqs
+
+
+def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
+          params=None, verbose: bool = True, slots: int | None = None,
+          block_size: int | None = None, **engine_kwargs):
+    """Serve the static driver's workload through the continuous-batching
+    engine.  Returns (generated [B, gen] int32, decode tokens/s) — the same
+    contract as ``serve_static`` (token-for-token equal on a fixed seed when
+    no preemption occurs; asserted in tests/test_serving.py).
+    """
+    slots = slots or batch
+    max_len = prompt_len + gen
+    if block_size is None:
+        block_size = next(b for b in (16, 8, 4, 2, 1) if max_len % b == 0)
+    engine = ServingEngine(cfg, slots=slots, max_len=max_len,
+                           block_size=block_size, params=params, seed=seed,
+                           **engine_kwargs)
+    reqs = _batch_requests(cfg, batch, prompt_len, gen, seed)
+    summary = engine.run(reqs)
+    generated = jnp.asarray(
+        np.stack([np.stack(r.generated, axis=-1) for r in sorted(reqs, key=lambda r: r.rid)]))
+    tps = summary["decode_tokens_per_s"]
+    if verbose:
+        print(f"[serve] engine {batch} reqs×{prompt_len}+{gen} over {slots} slots: "
+              f"prefill {summary['prefill_time_s']*1e3:.0f} ms, "
+              f"decode {summary['decode_steps']} steps in "
+              f"{summary['decode_time_s']*1e3:.0f} ms  ({tps:.1f} tok/s, "
+              f"occupancy {summary['slot_occupancy']:.2f})")
     return generated, tps
 
 
@@ -77,10 +133,48 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--static", action="store_true",
+                    help="run the legacy static-batch loop instead of the engine")
+    ap.add_argument("--odin-mode", choices=["exact", "int8", "sc"], default=None,
+                    help="execution mode for Linear layers (default: config's)")
+    # open-loop scenario mode (ignores --batch/--prompt-len/--gen)
+    ap.add_argument("--scenario", choices=sorted(SCENARIOS), default=None,
+                    help="serve a synthetic open-loop workload instead")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=None)
+    ap.add_argument("--kv-blocks", type=int, default=None,
+                    help="device KV budget in blocks (forces preemption when low)")
+    ap.add_argument("--swap-blocks", type=int, default=0)
+    ap.add_argument("--block-size", type=int, default=None,
+                    help="KV block granularity (default: 16 for scenarios, "
+                         "auto-picked to divide prompt+gen otherwise)")
+    ap.add_argument("--chunk", type=int, default=None, help="prefill chunk length")
     args = ap.parse_args()
     cfg = registry.get_smoke(args.arch) if args.smoke else registry.get_config(args.arch)
-    generated, tps = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
-                           gen=args.gen, seed=args.seed)
+
+    if args.scenario:
+        spec = dataclasses.replace(SCENARIOS[args.scenario], n_requests=args.requests)
+        block_size = args.block_size or 16
+        max_len = max(spec.prompt_buckets) + max(spec.gen_buckets)
+        max_len = -(-max_len // block_size) * block_size
+        engine = ServingEngine(
+            cfg, slots=args.slots or 4, max_len=max_len,
+            block_size=block_size, n_blocks=args.kv_blocks,
+            swap_blocks=args.swap_blocks, prefill_chunk=args.chunk,
+            seed=args.seed, odin_mode=args.odin_mode)
+        summary = engine.run(make_requests(cfg, spec, seed=args.seed))
+        print(json.dumps({k: v for k, v in summary.items() if k != "requests"}, indent=2))
+        return
+
+    fn = serve_static if args.static else serve
+    kw = {} if args.static else {"slots": args.slots,
+                                 "block_size": args.block_size,
+                                 "n_blocks": args.kv_blocks,
+                                 "swap_blocks": args.swap_blocks,
+                                 "prefill_chunk": args.chunk,
+                                 "odin_mode": args.odin_mode}
+    generated, tps = fn(cfg, batch=args.batch, prompt_len=args.prompt_len,
+                        gen=args.gen, seed=args.seed, **kw)
     print("[serve] first request tokens:", np.asarray(generated)[0].ravel()[:16])
 
 

@@ -51,6 +51,9 @@ __all__ = [
     "make_decode_step",
     "make_dp_train_step",
     "optimizer_pspecs",
+    "init_serving_caches",
+    "make_slot_prefill_step",
+    "make_serving_decode_step",
 ]
 
 
@@ -142,16 +145,145 @@ def make_prefill_step(cfg: ModelConfig, max_len: int) -> Callable:
     return prefill_step
 
 
+def _cache_start(caches):
+    """Absolute position of the incoming token(s), from the attn ``pos`` leaf.
+
+    Every attention layer advances its cache position in lockstep, so the
+    first segment's layer-0 entry is authoritative.  Returns a scalar (static
+    batch), a [B] vector (serving caches), or None (recurrent-only stacks,
+    where positions only feed RoPE and there is no RoPE without attention).
+    """
+    for seg in caches:
+        if isinstance(seg, dict) and "attn" in seg and "pos" in seg["attn"]:
+            return seg["attn"]["pos"][0]
+    return None
+
+
+def _argmax_tokens(logits, cfg: ModelConfig):
+    if cfg.n_codebooks > 1:
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)       # [B, K]
+        return nxt[:, :, None]
+    nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)           # [B]
+    return nxt[:, None]
+
+
 def make_decode_step(cfg: ModelConfig) -> Callable:
-    """(params, caches, tokens [B,1]) → (next_tokens [B,1], caches)."""
+    """(params, caches, tokens [B,1]) → (next_tokens [B,1], caches).
+
+    The query position is read from the cache ``pos`` leaf — without it the
+    decoded token runs at position 0: wrong RoPE phase AND a causal mask that
+    hides every cache row but the first.
+    """
 
     def decode_step(params, caches, tokens):
-        logits, caches, _ = lm.forward(params, tokens, cfg, caches=caches)
-        if cfg.n_codebooks > 1:
-            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)   # [B, K]
-            return nxt[:, :, None], caches
-        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)       # [B]
-        return nxt[:, None], caches
+        start = _cache_start(caches)
+        if start is not None and start.ndim:
+            start = start[:, None]
+        logits, caches, _ = lm.forward(params, tokens, cfg, caches=caches,
+                                       start_pos=start)
+        return _argmax_tokens(logits, cfg), caches
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching serving steps (repro.serving)
+# ---------------------------------------------------------------------------
+
+def init_serving_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=None,
+                        window_headroom: int = 0, round_to: int = 1):
+    """Stacked decode caches with *per-slot* position vectors.
+
+    Identical to ``lm.init_caches`` except:
+
+    * attention ``pos`` leaves are [L, B] int32 vectors instead of [L]
+      scalars, so each batch slot tracks its own sequence length
+      (nn/attention.py takes the batched-scatter write path and builds
+      per-slot visibility masks) — every leaf then carries the slot axis at
+      position 1, which is what the slot slice/update helpers rely on;
+    * sliding-window ring buffers get ``window_headroom`` extra rows (rounded
+      up to ``round_to``, capped at ``max_len``).  A prefill chunk of C
+      tokens through a ring of exactly ``window`` rows overwrites keys its
+      own early queries still need; ``window + C`` rows keep every key alive
+      until every query that may attend to it has run, making chunked prefill
+      exact for window attention.  (Masking is position-based, so extra rows
+      only cost memory.)
+    """
+    caches = lm.init_caches(cfg, batch, max_len, dtype)
+
+    def fix(path, leaf):
+        name = jax.tree_util.keystr(path[-1:]).strip("[]'\"")
+        if name == "pos":
+            return jnp.zeros((*leaf.shape, batch), jnp.int32)
+        if window_headroom and name in ("k", "v") and leaf.shape[2] < max_len:
+            size = leaf.shape[2] + window_headroom
+            size = min(max_len, -(-size // round_to) * round_to)
+            if size > leaf.shape[2]:
+                pad = [(0, 0)] * leaf.ndim
+                pad[2] = (0, size - leaf.shape[2])
+                return jnp.pad(leaf, pad)
+        return leaf
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    return jax.tree_util.tree_unflatten(treedef, [fix(p, l) for p, l in flat])
+
+
+def make_slot_prefill_step(cfg: ModelConfig, max_len: int,
+                           window_headroom: int = 0, round_to: int = 1) -> Callable:
+    """Chunked prefill of ONE batch slot of a serving cache.
+
+    (params, caches, tokens [1,C], slot, start, reset) → (last_logits, caches)
+
+    Slices the slot's cache out ([L, 1, ...] per leaf), runs the ordinary
+    forward over the chunk at absolute positions [start, start+C), and writes
+    the slice back.  ``reset`` (traced bool) restores the slot to its true
+    initial state first — required because mLSTM/sLSTM states do not
+    initialize to zeros and the slot may hold a previous request's state.
+    ``slot``/``start`` are traced scalars so one executable serves every slot
+    and chunk offset; only distinct chunk *lengths* compile separately.
+    """
+
+    def prefill_chunk(params, caches, tokens, slot, start, reset,
+                      patch_embeds=None, pos3d=None):
+        sl = jax.tree.map(lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1), caches)
+        init = init_serving_caches(cfg, 1, max_len, window_headroom=window_headroom,
+                                   round_to=round_to)
+        sl = jax.tree.map(lambda a, b: jnp.where(reset, b, a), sl, init)
+        logits, sl, _ = lm.forward(params, tokens, cfg, caches=sl,
+                                   patch_embeds=patch_embeds, pos3d=pos3d,
+                                   start_pos=start, moe_no_drop=True)
+        caches = jax.tree.map(
+            lambda a, b: jax.lax.dynamic_update_slice_in_dim(a, b, slot, axis=1),
+            caches, sl)
+        return logits[:, -1], caches
+
+    return prefill_chunk
+
+
+def make_serving_decode_step(cfg: ModelConfig) -> Callable:
+    """One decode step over all serving slots with an activity mask.
+
+    (params, caches, tokens [B,1], lengths [B], active [B]) → (next, caches)
+
+    Inactive slots (free, draining, or mid-admission) still flow through the
+    compiled step — the fixed [B, 1] shape is what keeps one executable
+    serving every request mix — but their cache updates are discarded by a
+    per-slot select, so neither their KV rows, their recurrent states, nor
+    their ``pos`` advance.  ``lengths`` must equal the per-slot cache ``pos``
+    (the scheduler's view of each slot's cached length).
+    """
+
+    def decode_step(params, caches, tokens, lengths, active):
+        logits, new_caches, _ = lm.forward(params, tokens, cfg, caches=caches,
+                                           start_pos=lengths[:, None],
+                                           moe_no_drop=True)
+
+        def merge(old, new):
+            m = active.reshape((1, active.shape[0]) + (1,) * (old.ndim - 2))
+            return jnp.where(m, new, old)
+
+        caches = jax.tree.map(merge, caches, new_caches)
+        return _argmax_tokens(logits, cfg), caches
 
     return decode_step
 

@@ -71,7 +71,7 @@ def param_spec(cfg: ModelConfig) -> Dict:
 # ---------------------------------------------------------------------------
 
 def _segment_apply(params_stacked, x, bcfg: BlockConfig, caches, positions, pos3d,
-                   odin, remat: str, norm_eps: float):
+                   odin, remat: str, norm_eps: float, moe_no_drop: bool = False):
     """Scan one homogeneous segment of layers over the sequence activations."""
     spec1 = block_spec(bcfg, x.shape[-1])
 
@@ -86,7 +86,7 @@ def _segment_apply(params_stacked, x, bcfg: BlockConfig, caches, positions, pos3
             is_leaf=lambda n: isinstance(n, ParamSpec),
         )
         y, c2 = block_apply(p, x, bcfg, cache=c, positions=positions, pos3d=pos3d,
-                            odin=odin, norm_eps=norm_eps)
+                            odin=odin, norm_eps=norm_eps, moe_no_drop=moe_no_drop)
         # pin the scanned activation sharding so carry propagation never
         # settles on "replicated" (no-op outside a logical_sharding context)
         y = constrain(y, ("batch", "act_seq", None))
@@ -104,12 +104,14 @@ def _segment_apply(params_stacked, x, bcfg: BlockConfig, caches, positions, pos3
 
 
 def forward(params, tokens, cfg: ModelConfig, caches=None, patch_embeds=None,
-            pos3d=None, start_pos=None):
+            pos3d=None, start_pos=None, moe_no_drop: bool = False):
     """tokens: [B,S] (or [B,K,S] multi-codebook) → (logits, new_caches).
 
     logits: [B,S,V] (or [B,S,K,V]).  ``caches``: list of per-segment stacked
     caches (or None for teacher-forced training).  ``start_pos``: absolute
-    position of tokens[:, 0] (decode); defaults to 0.
+    position of tokens[:, 0] (decode); defaults to 0.  ``moe_no_drop``:
+    route without capacity dropping (serving paths — exact, per-token
+    deterministic routing; training keeps the capped capacity).
     """
     odin = _odin(cfg)
     if cfg.n_codebooks > 1:
@@ -133,11 +135,11 @@ def forward(params, tokens, cfg: ModelConfig, caches=None, patch_embeds=None,
         c = caches[i] if caches is not None else None
         if c is None:
             x, _ = _segment_apply(params["segments"][i], x, bcfg, None, positions, pos3d,
-                                  odin, cfg.remat, cfg.norm_eps)
+                                  odin, cfg.remat, cfg.norm_eps, moe_no_drop)
             new_caches.append(None)
         else:
             x, c2 = _segment_apply(params["segments"][i], x, bcfg, c, positions, pos3d,
-                                   odin, cfg.remat, cfg.norm_eps)
+                                   odin, cfg.remat, cfg.norm_eps, moe_no_drop)
             new_caches.append(c2)
 
     hidden = x

@@ -11,6 +11,10 @@ Caches:
   state for the 500k-context cell).
 * MLA: *compressed* latent ``c_kv [B, S_max, r]`` + shared ``k_rope`` — the
   paper-exact DeepSeek-V3 cache; decompression happens per KV chunk.
+
+The cache ``pos`` is a scalar (static batch: every row advances in lockstep)
+or an int32 [B] vector (serving continuous batching: per-slot write offsets
+and visibility masks, so one fixed-shape decode serves mixed-length slots).
 """
 from __future__ import annotations
 
@@ -235,7 +239,27 @@ def _gqa_attention(p, x, cfg: AttnConfig, positions, pos3d, cache, odin):
         pos = cache["pos"]
         size = cache["k"].shape[1]
         cdt = cache["k"].dtype
-        if cfg.window:
+        if pos.ndim:
+            # per-slot positions (serving continuous batching): pos [B].
+            # Batched scatter replaces the scalar dynamic_update_slice; the
+            # visibility mask is per-slot so stale rows from a previous slot
+            # occupant are invisible to the new request.
+            bidx = jnp.arange(B)[:, None]
+            rows = pos[:, None] + jnp.arange(S, dtype=jnp.int32)       # [B, S]
+            if cfg.window:
+                idx = rows % size
+                ck = cache["k"].at[bidx, idx].set(_cache_write(k, cdt))
+                cv = cache["v"].at[bidx, idx].set(_cache_write(v, cdt))
+                k_pos = _ring_positions((pos + S)[:, None], size)       # [B, size]
+            else:
+                ck = cache["k"].at[bidx, rows].set(_cache_write(k, cdt))
+                cv = cache["v"].at[bidx, rows].set(_cache_write(v, cdt))
+                slot_rows = jnp.arange(size, dtype=jnp.int32)[None, :]
+                k_pos = jnp.where(slot_rows < (pos + S)[:, None], slot_rows, jnp.int32(2**30))
+            new_cache = {"k": ck, "v": cv, "pos": pos + S}
+            o = sdpa(q, _cache_read(ck, q.dtype), _cache_read(cv, q.dtype),
+                     positions, k_pos, cfg.window)
+        elif cfg.window:
             idx = (pos + jnp.arange(S)) % size
             ck = cache["k"].at[:, idx].set(_cache_write(k, cdt))
             cv = cache["v"].at[:, idx].set(_cache_write(v, cdt))
@@ -286,15 +310,25 @@ def _mla_attention(p, x, cfg: AttnConfig, positions, cache, odin):
     if cache is not None:
         pos = cache["pos"]
         cdt = cache["c_kv"].dtype
-        c_kv_q = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], _cache_write(c_kv, cdt), pos, axis=1)
-        k_rope_q = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], _cache_write(k_rope, cdt), pos, axis=1)
+        if pos.ndim:
+            # per-slot positions (serving continuous batching): pos [B]
+            bidx = jnp.arange(B)[:, None]
+            rows = pos[:, None] + jnp.arange(S, dtype=jnp.int32)
+            c_kv_q = cache["c_kv"].at[bidx, rows].set(_cache_write(c_kv, cdt))
+            k_rope_q = cache["k_rope"].at[bidx, rows].set(_cache_write(k_rope, cdt))
+            Sk = c_kv_q.shape[1]
+            slot_rows = jnp.arange(Sk, dtype=jnp.int32)[None, :]
+            k_pos = jnp.where(slot_rows < (pos + S)[:, None], slot_rows, jnp.int32(2**30))
+        else:
+            c_kv_q = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], _cache_write(c_kv, cdt), pos, axis=1)
+            k_rope_q = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], _cache_write(k_rope, cdt), pos, axis=1)
+            Sk = c_kv_q.shape[1]
+            k_pos = jnp.arange(Sk, dtype=jnp.int32)
+            k_pos = jnp.where(k_pos < pos + S, k_pos, jnp.int32(2**30))
+            k_pos = jnp.broadcast_to(k_pos, (B, Sk))
         new_cache = {"c_kv": c_kv_q, "k_rope": k_rope_q, "pos": pos + S}
         c_kv = _cache_read(c_kv_q, x.dtype)
         k_rope = _cache_read(k_rope_q, x.dtype)
-        Sk = c_kv.shape[1]
-        k_pos = jnp.arange(Sk, dtype=jnp.int32)
-        k_pos = jnp.where(k_pos < pos + S, k_pos, jnp.int32(2**30))
-        k_pos = jnp.broadcast_to(k_pos, (B, Sk))
     else:
         new_cache = None
         k_pos = positions
@@ -316,6 +350,8 @@ def attention(p, x, cfg: AttnConfig, positions=None, pos3d=None, cache=None,
     B, S, _ = x.shape
     if positions is None:
         start = cache["pos"] if cache is not None else jnp.int32(0)
+        if getattr(start, "ndim", 0) == 1:      # per-slot positions [B]
+            start = start[:, None]
         positions = _positions(B, start, S)
     if cfg.kind == "mla":
         return _mla_attention(p, x, cfg, positions, cache, odin)

@@ -96,7 +96,8 @@ def block_cache(cfg: BlockConfig, d_model: int, batch: int, max_len: int, dtype=
 
 
 def block_apply(p, x, cfg: BlockConfig, cache=None, positions=None, pos3d=None,
-                odin: Optional[OdinConfig] = None, norm_eps: float = 1e-5):
+                odin: Optional[OdinConfig] = None, norm_eps: float = 1e-5,
+                moe_no_drop: bool = False):
     """(params, x [B,S,d], cache) → (x', cache')."""
     new_cache = dict(cache) if cache is not None else None
     if cfg.kind in ("dense", "moe"):
@@ -108,7 +109,8 @@ def block_apply(p, x, cfg: BlockConfig, cache=None, positions=None, pos3d=None,
         if cfg.kind == "dense":
             x = x + _mlp(p["mlp"], h, cfg.activation, odin)
         else:
-            x = x + moe_block(p["moe"], h, cfg.moe, cfg.activation, odin)
+            x = x + moe_block(p["moe"], h, cfg.moe, cfg.activation,
+                              no_drop=moe_no_drop, odin=odin)
         if new_cache is not None:
             new_cache["attn"] = ac
         return x, new_cache

@@ -67,6 +67,7 @@ def dispatch_indices(expert_ids: jax.Array, n_experts: int, capacity: int):
 
 
 def moe_block(p, x: jax.Array, cfg: MoEConfig, activation_kind: str = "swiglu",
+              no_drop: bool = False,
               odin: Optional[OdinConfig] = None) -> jax.Array:
     """x: [B, S, d] → [B, S, d]."""
     B, S, d = x.shape
@@ -82,7 +83,22 @@ def moe_block(p, x: jax.Array, cfg: MoEConfig, activation_kind: str = "swiglu",
 
     A = T * cfg.top_k
     expert_ids = top_idx.reshape(A).astype(jnp.int32)
-    capacity = max(1, int(T * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+    if no_drop or S == 1:
+        # Inference-exact routing: capacity overflow resolves in batch order,
+        # so a dropped assignment couples one token's output to what else
+        # shares the batch — and makes prefill outputs depend on the total
+        # token count.  Both break serving invariants: decode slots must be
+        # isolated from co-batched (even garbage) slots, and chunked or
+        # recompute-replay prefill must route each token exactly like the
+        # original pass did.  Decode (S == 1) is therefore ALWAYS drop-free —
+        # including the dry-run decode cells, whose cost artifacts now
+        # reflect what a serving-correct decode actually pays ([E, B, d]
+        # dispatch buffer instead of the capped [E, B·k·cf/E, d]).  Prefill
+        # and training keep the capped capacity unless ``no_drop`` is set;
+        # the serving prefill path sets it and bounds T by the chunk length.
+        capacity = T
+    else:
+        capacity = max(1, int(T * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
     slot, keep = dispatch_indices(expert_ids, cfg.n_experts, capacity)
 
     token_idx = jnp.repeat(jnp.arange(T, dtype=jnp.int32), cfg.top_k)

@@ -1,0 +1,35 @@
+"""repro.serving — continuous-batching serving engine with a paged KV-cache.
+
+The serving substrate over the repo's compiled prefill/decode steps:
+
+* :mod:`repro.serving.blocks`    — KV block pool + swap-tier paged store
+* :mod:`repro.serving.scheduler` — request lifecycle / admission / preemption
+* :mod:`repro.serving.engine`    — the step-loop driver (ServingEngine)
+* :mod:`repro.serving.metrics`   — TTFT/TPOT/occupancy + ODIN PIMC attribution
+* :mod:`repro.serving.workload`  — synthetic open-loop arrival generators
+
+Quick start::
+
+    from repro.models import registry
+    from repro.serving import ServingEngine, SCENARIOS, make_requests
+
+    cfg = registry.get_smoke("phi4-mini-3.8b")
+    eng = ServingEngine(cfg, slots=4, max_len=96, block_size=16)
+    summary = eng.run(make_requests(cfg, SCENARIOS["mixed"], seed=0))
+    print(summary["decode_tokens_per_s"], summary["ttft_s"]["p50"])
+
+See src/repro/serving/README.md for the full walkthrough.
+"""
+from repro.serving.blocks import BlockPool, PagedKVStore, SwapTicket
+from repro.serving.engine import ServingEngine
+from repro.serving.metrics import EngineStats, OdinCostModel, summarize
+from repro.serving.scheduler import Request, RequestState, Scheduler, StepPlan
+from repro.serving.workload import SCENARIOS, WorkloadSpec, make_requests, poisson_arrivals
+
+__all__ = [
+    "BlockPool", "PagedKVStore", "SwapTicket",
+    "ServingEngine",
+    "EngineStats", "OdinCostModel", "summarize",
+    "Request", "RequestState", "Scheduler", "StepPlan",
+    "SCENARIOS", "WorkloadSpec", "make_requests", "poisson_arrivals",
+]

@@ -1,0 +1,169 @@
+"""Paged KV-cache block pool: fixed-size blocks, block tables, swap store.
+
+Two tiers, mirroring the classic paged-KV serving design:
+
+* :class:`BlockPool` — a pure-accounting free-list allocator over fixed-size
+  token blocks.  One pool instance budgets the *device* KV memory the live
+  ``[B_slots, S_max]`` serving caches represent; a second instance inside
+  :class:`PagedKVStore` budgets the swap tier.  Requests hold their blocks in
+  a per-sequence block table (``Request.block_table``) and grow it one block
+  at a time as decode crosses block boundaries; admission control and
+  preemption both key off this pool.
+
+* :class:`PagedKVStore` — block-granular storage for *preempted* sequences.
+  The live serving caches keep the dense layout the compiled step functions
+  (launch/steps.py) require, so paging materializes at the swap boundary:
+  ``swap_out`` scatters a slot's cache rows into ``[n_blocks, L, bs, ...]``
+  buffers (one per sequence-axis cache leaf — k/v, MLA c_kv/k_rope), and
+  ``swap_in`` gathers them back into a (possibly different) slot.  Leaves
+  without a sequence axis (SSM/xLSTM recurrent states, position vectors) are
+  O(1) per request and ride along in the :class:`SwapTicket`.
+
+A true paged-attention kernel that indexes blocks *inside* the compiled
+decode step is the natural follow-on (ROADMAP "Open items").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["BlockPool", "PagedKVStore", "SwapTicket"]
+
+# Cache leaves with a sequence axis (axis 2 of the stacked [L, B, S, ...]
+# layout) — the same key-name convention launch/specs.py's cache_pspecs uses.
+SEQ_LEAVES = ("k", "v", "c_kv", "k_rope")
+
+
+def _leaf_name(path) -> str:
+    return jax.tree_util.keystr(path[-1:]).strip("[]'\"")
+
+
+def _leaf_key(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+class BlockPool:
+    """Free-list allocator over ``n_blocks`` fixed-size token blocks.
+
+    All-or-nothing ``alloc`` (returns None when the request cannot be met in
+    full), double-free checked ``free``.  Pure bookkeeping — no arrays.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int):
+        if n_blocks < 0 or block_size <= 0:
+            raise ValueError((n_blocks, block_size))
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self._free: List[int] = list(range(n_blocks - 1, -1, -1))
+        self._allocated: set = set()
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return len(self._allocated)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Blocks needed to hold ``n_tokens`` cache rows."""
+        return -(-max(n_tokens, 0) // self.block_size)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` block ids, or None (and no change) if unavailable."""
+        if n < 0:
+            raise ValueError(n)
+        if n > len(self._free):
+            return None
+        ids = [self._free.pop() for _ in range(n)]
+        self._allocated.update(ids)
+        return ids
+
+    def free(self, ids: List[int]) -> None:
+        for b in ids:
+            if b not in self._allocated:
+                raise ValueError(f"double free of block {b}")
+            self._allocated.remove(b)
+            self._free.append(b)
+
+
+@dataclass
+class SwapTicket:
+    """Handle for one swapped-out sequence: swap-tier block ids plus the
+    non-paged slot state (recurrent states, per-slot position vectors)."""
+
+    block_ids: List[int]
+    n_tokens: int
+    side: Dict[str, jax.Array] = field(default_factory=dict)
+
+
+class PagedKVStore:
+    """Swap-tier paged storage matching one serving-cache layout.
+
+    Built from a serving cache pytree (``init_serving_caches``); allocates a
+    ``[n_blocks, L, block_size, *trailing]`` buffer per sequence-axis leaf.
+    Sliding-window (ring buffer) leaves are handled by capacity-clamping: a
+    ring of ``window`` rows only ever occupies its first ``window/block_size``
+    blocks of the table, and restoring rows + ``pos`` restores ring semantics
+    exactly.
+    """
+
+    def __init__(self, caches, n_blocks: int, block_size: int):
+        self.block_size = block_size
+        self.pool = BlockPool(n_blocks, block_size)
+        self.bufs: Dict[str, jax.Array] = {}
+        for path, leaf in jax.tree_util.tree_flatten_with_path(caches)[0]:
+            if _leaf_name(path) in SEQ_LEAVES:
+                L, _, size, *trail = leaf.shape
+                if size % block_size:
+                    raise ValueError(
+                        f"cache seq axis {size} of {_leaf_key(path)} not divisible "
+                        f"by block_size {block_size}")
+                self.bufs[_leaf_key(path)] = jnp.zeros(
+                    (n_blocks, L, block_size, *trail), leaf.dtype)
+
+    def _nb_leaf(self, leaf, nb: int) -> int:
+        # ring-buffer leaves are smaller than the table they are filed under
+        return min(nb, leaf.shape[2] // self.block_size)
+
+    def swap_out(self, caches, slot: int, block_ids: List[int], n_tokens: int) -> SwapTicket:
+        """Scatter ``slot``'s cache state into swap blocks; returns the ticket."""
+        bs = self.block_size
+        ids = jnp.asarray(block_ids, jnp.int32)
+        ticket = SwapTicket(list(block_ids), n_tokens)
+        for path, leaf in jax.tree_util.tree_flatten_with_path(caches)[0]:
+            key = _leaf_key(path)
+            sl = jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=1)
+            if key in self.bufs:
+                nbl = self._nb_leaf(leaf, len(block_ids))
+                L, trail = leaf.shape[0], leaf.shape[3:]
+                seg = sl[:, 0, :nbl * bs].reshape(L, nbl, bs, *trail).swapaxes(0, 1)
+                self.bufs[key] = self.bufs[key].at[ids[:nbl]].set(seg)
+            else:
+                ticket.side[key] = sl
+        return ticket
+
+    def swap_in(self, caches, slot: int, ticket: SwapTicket):
+        """Gather a ticket's state back into ``slot``; returns new caches."""
+        bs = self.block_size
+        ids = jnp.asarray(ticket.block_ids, jnp.int32)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+        out = []
+        for path, leaf in flat:
+            key = _leaf_key(path)
+            if key in self.bufs:
+                nbl = self._nb_leaf(leaf, len(ticket.block_ids))
+                L, trail = leaf.shape[0], leaf.shape[3:]
+                seg = self.bufs[key][ids[:nbl]].swapaxes(0, 1).reshape(L, 1, nbl * bs, *trail)
+                sl = jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=1)
+                sl = jax.lax.dynamic_update_slice(sl, seg, (0,) * sl.ndim)
+                out.append(jax.lax.dynamic_update_slice_in_dim(leaf, sl, slot, axis=1))
+            elif key in ticket.side:
+                out.append(jax.lax.dynamic_update_slice_in_dim(
+                    leaf, ticket.side[key], slot, axis=1))
+            else:  # pragma: no cover — layout mismatch
+                raise KeyError(f"leaf {key} missing from swap ticket")
+        return jax.tree_util.tree_unflatten(treedef, [l for l in out])

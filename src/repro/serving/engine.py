@@ -1,0 +1,301 @@
+"""Continuous-batching serving engine: the step-loop driver.
+
+One :class:`ServingEngine` owns the compiled step functions (slot-sliced
+chunked prefill + activity-masked decode, launch/steps.py), the serving
+caches, the device block pool, the swap-tier paged store, and the scheduler.
+Each ``step()``:
+
+1. asks the scheduler for a :class:`StepPlan` at the current clock,
+2. executes preemptions (swap-out scatter / recompute requeue), resumes
+   (swap-in gather) and admissions (chunked prefill; the prefill's last
+   logits yield the request's **first generated token**, so TTFT is stamped
+   here),
+3. runs one fixed-shape ``[B_slots, 1]`` decode over every slot with the
+   activity mask, appends tokens to their requests, retires finished
+   requests, and frees their slots/blocks for the next step's admissions.
+
+Everything runs at fixed ``[B_slots, S_max]`` / ``[B_slots, 1]`` shapes, so
+one compiled executable serves every request mix; only distinct prefill
+chunk lengths trace separately (bounded by the workload's length buckets).
+
+Execution modes follow ``OdinConfig``: ``odin_mode="exact"`` runs the exact
+matmuls, ``"int8"`` the ODIN fixed-8-bit expected-value surrogate, ``"sc"``
+the bit-parallel stochastic kernels (slow; reference).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.launch.steps import (init_serving_caches, make_serving_decode_step,
+                                make_slot_prefill_step)
+from repro.models import lm
+from repro.nn import module as nnmod
+from repro.serving.blocks import BlockPool, PagedKVStore
+from repro.serving.metrics import EngineStats, OdinCostModel, summarize
+from repro.serving.scheduler import Request, Scheduler
+
+__all__ = ["ServingEngine"]
+
+
+class ServingEngine:
+    """Drives continuous-batching inference over ``slots`` cache slots.
+
+    Parameters
+    ----------
+    cfg : ModelConfig (smoke or full).
+    slots : decode batch width B (one compiled ``[B, 1]`` decode step).
+    max_len : per-slot cache depth; every request needs prompt+max_new ≤ max_len.
+    block_size : KV block granularity (max_len must divide evenly).
+    n_blocks : device KV budget in blocks.  Default ``slots·max_len/block_size``
+        (never preempts); set lower to exercise preemption under load.
+    swap_blocks : swap-tier capacity in blocks (0 disables swap — preemption
+        falls back to recompute).
+    prefill_chunk : chunked-prefill granularity (default: max_len, i.e. one
+        chunk).  Smaller chunks bound the prefill executable's shape.
+    odin_mode : override cfg.odin_mode ("exact" | "int8" | "sc").
+    on_token : streaming callback ``(request, token, t_now)`` per emitted token.
+    clock : monotonic seconds callable (injectable for deterministic tests).
+    """
+
+    def __init__(self, cfg: ModelConfig, *, slots: int, max_len: int,
+                 block_size: int = 16, n_blocks: Optional[int] = None,
+                 swap_blocks: int = 0, prefill_chunk: Optional[int] = None,
+                 params=None, seed: int = 0, odin_mode: Optional[str] = None,
+                 on_token: Optional[Callable] = None,
+                 clock: Optional[Callable[[], float]] = None,
+                 attribution_cfg: Optional[ModelConfig] = None):
+        if odin_mode is not None:
+            cfg = cfg.with_overrides(odin_mode=odin_mode)
+        if max_len % block_size:
+            raise ValueError(f"max_len {max_len} not divisible by block_size {block_size}")
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        # Default chunk is bounded: serving prefill routes MoE drop-free, so
+        # its expert dispatch buffer scales with the chunk's token count —
+        # an unbounded max_len default would pay [E, max_len, d] per layer on
+        # full configs.  Drop-free routing is chunk-invariant, so chunking
+        # never changes results.
+        self.chunk = prefill_chunk or min(max_len, 512)
+        if params is None:
+            params = nnmod.materialize(lm.param_spec(cfg), jax.random.PRNGKey(seed))
+        self.params = params
+        self.on_token = on_token
+        self._clock = clock or time.monotonic
+        self._t0: Optional[float] = None
+
+        # ring buffers get `chunk` rows of headroom so chunked prefill is
+        # exact for sliding-window attention (steps.init_serving_caches)
+        self.caches = init_serving_caches(cfg, slots, max_len,
+                                          window_headroom=self.chunk,
+                                          round_to=block_size)
+        self._prefill = jax.jit(make_slot_prefill_step(
+            cfg, max_len, window_headroom=self.chunk, round_to=block_size))
+        self._decode = jax.jit(make_serving_decode_step(cfg), donate_argnums=(1,))
+
+        if n_blocks is None:
+            n_blocks = slots * (max_len // block_size)
+        self.pool = BlockPool(n_blocks, block_size)
+        self.store = (PagedKVStore(self.caches, swap_blocks, block_size)
+                      if swap_blocks else None)
+        self.sched = Scheduler(slots, self.pool, max_len,
+                               swap_pool=self.store.pool if self.store else None)
+        self.stats = EngineStats()
+        self.cost_model = OdinCostModel(attribution_cfg or cfg)
+
+        K = cfg.n_codebooks
+        tok_shape = (slots, K, 1) if K > 1 else (slots, 1)
+        self._last_tok = jnp.zeros(tok_shape, jnp.int32)
+        self._slot_len = np.zeros(slots, np.int32)
+        self._done: List[Request] = []
+
+    # ------------------------------------------------------------------ util
+
+    def _now(self) -> float:
+        if self._t0 is None:
+            self._t0 = self._clock()
+        return self._clock() - self._t0
+
+    def _set_last_tok(self, slot: int, tok) -> None:
+        tok = jnp.asarray(tok, jnp.int32).reshape(self._last_tok.shape[1:])
+        self._last_tok = self._last_tok.at[slot].set(tok)
+
+    def _emit(self, req: Request, tok: np.ndarray, now: float) -> None:
+        req.generated.append(tok)
+        self.stats.generated_tokens += 1
+        if req.t_first_token is None:
+            req.t_first_token = now
+        if self.on_token is not None:
+            self.on_token(req, tok, now)
+
+    # ------------------------------------------------------------- lifecycle
+
+    def submit(self, req: Request) -> None:
+        if req.extras and req.prompt_len + req.max_new - 1 > self.chunk:
+            # extras overlay only works in a single prefill chunk, and a
+            # recompute preemption can re-prefill up to prompt+max_new-1
+            # tokens — reject here rather than mid-run at admission time.
+            raise ValueError(
+                f"request {req.rid}: extras (patch_embeds/pos3d) need "
+                f"prompt+max_new-1 = {req.prompt_len + req.max_new - 1} "
+                f"to fit one prefill chunk ({self.chunk})")
+        self.sched.submit(req)
+
+    def _complete(self, req: Request, now: float) -> None:
+        self.sched.complete(req, now)
+        self._done.append(req)
+
+    def _prefill_request(self, req: Request, now: float) -> None:
+        """Chunked prefill into the request's slot; emits the first token for
+        fresh admissions (readmitted requests already hold their pending
+        token — re-prefill only rebuilds the KV they lost)."""
+        fresh = req.n_generated == 0
+        if fresh:
+            toks = np.asarray(req.prompt)
+        else:  # recompute path: prompt + all generated except the pending one
+            gen = np.stack(req.generated[:-1], axis=-1).astype(np.int32) \
+                if req.n_generated > 1 else np.zeros((*np.asarray(req.prompt).shape[:-1], 0), np.int32)
+            toks = np.concatenate([np.asarray(req.prompt), gen], axis=-1)
+        ntok = toks.shape[-1]
+        extras = req.extras or {}
+        if extras and ntok > self.chunk:
+            raise ValueError(
+                f"request {req.rid}: extras (patch_embeds/pos3d) require the "
+                f"prompt ({ntok}) to fit one prefill chunk ({self.chunk})")
+        pos3d = extras.get("pos3d") if extras else None
+        if pos3d is not None:
+            pos3d = np.asarray(pos3d)
+            if ntok > pos3d.shape[0]:
+                # recompute replay covers generated tokens too: extend with
+                # the degenerate (t, t, t) text positions decode would use
+                tail = np.repeat(np.arange(pos3d.shape[0], ntok,
+                                           dtype=pos3d.dtype)[:, None], 3, axis=1)
+                pos3d = np.concatenate([pos3d, tail], axis=0)
+        t0 = time.perf_counter()
+        start = 0
+        ll = None
+        while start < ntok:
+            c = min(self.chunk, ntok - start)
+            chunk_toks = jnp.asarray(toks[..., start:start + c][None])
+            kw = {}
+            if extras:
+                if extras.get("patch_embeds") is not None:
+                    kw["patch_embeds"] = jnp.asarray(extras["patch_embeds"])[None]
+                if pos3d is not None:
+                    kw["pos3d"] = jnp.asarray(pos3d)[None][:, start:start + c]
+            ll, self.caches = self._prefill(
+                self.params, self.caches, chunk_toks,
+                jnp.int32(req.slot), jnp.int32(start), jnp.bool_(start == 0), **kw)
+            start += c
+        jax.block_until_ready(ll)
+        self.stats.prefill_time += time.perf_counter() - t0
+        self.stats.prefill_tokens += ntok
+        req.n_prefill_tokens += ntok
+        self._slot_len[req.slot] = ntok
+        if fresh:
+            tok = np.asarray(jnp.argmax(ll, axis=-1).astype(jnp.int32))[0]  # [] or [K]
+            self._emit(req, tok, self._now())
+            pending = tok
+        else:
+            pending = req.generated[-1]
+        self._set_last_tok(req.slot, pending)
+
+    def step(self) -> bool:
+        """One engine iteration; returns True while work remains."""
+        now = self._now()
+        plan = self.sched.plan(now)
+
+        for req, mode, swap_ids, old_slot in plan.preempt:
+            if mode == "swap":
+                req.ticket = self.store.swap_out(
+                    self.caches, old_slot, swap_ids, req.cached_len)
+                self.stats.preempt_swap += 1
+            else:
+                self.stats.preempt_recompute += 1
+        for req in plan.resume:
+            self.caches = self.store.swap_in(self.caches, req.slot, req.ticket)
+            self.store.pool.free(req.ticket.block_ids)
+            req.ticket = None
+            self._slot_len[req.slot] = req.cached_len
+            self._set_last_tok(req.slot, req.generated[-1])
+        for req in plan.admit:
+            self._prefill_request(req, now)
+
+        # requests may finish straight out of prefill (max_new == 1)
+        for req in list(self.sched.running.values()):
+            if req.done:
+                self._complete(req, self._now())
+
+        active_slots = sorted(self.sched.running)
+        if active_slots:
+            t0 = time.perf_counter()
+            active = np.zeros(self.slots, bool)
+            active[active_slots] = True
+            nxt, self.caches = self._decode(
+                self.params, self.caches, self._last_tok,
+                jnp.asarray(self._slot_len), jnp.asarray(active))
+            host = np.asarray(nxt)                       # syncs the step
+            self.stats.decode_time += time.perf_counter() - t0
+            self.stats.decode_steps += 1
+            self.stats.active_slot_steps += len(active_slots)
+            self.stats.slot_steps += self.slots
+            self._last_tok = nxt
+            now = self._now()
+            for s in active_slots:
+                req = self.sched.running[s]
+                self._slot_len[s] += 1
+                self.stats.decode_tokens += 1
+                self._emit(req, host[s, ..., 0], now)
+                if req.done:
+                    self._complete(req, now)
+        self.stats.steps += 1
+        return self.sched.has_work
+
+    def run(self, requests: Sequence[Request] = (), max_steps: int = 100_000) -> Dict:
+        """Submit ``requests``, drive the loop until drained, return the
+        metrics summary (per-request records + aggregates)."""
+        for req in requests:
+            self.submit(req)
+        self._now()                                       # start the clock
+        steps = idle = 0
+        while self.sched.has_work:
+            busy = bool(self.sched.running)
+            self.step()
+            if busy or self.sched.running:
+                steps += 1
+                idle = 0
+                if steps > max_steps:
+                    raise RuntimeError(f"engine exceeded {max_steps} steps")
+            else:
+                # idle: nothing running, next arrival in the future.  Idle
+                # waits don't count against the runaway-loop bound (a
+                # low-rate open-loop workload may idle for minutes), but
+                # they are bounded too in case an injected clock never
+                # advances past the next arrival.
+                idle += 1
+                if idle > max_steps:
+                    raise RuntimeError(
+                        f"engine idle for {max_steps} iterations — is the "
+                        "clock advancing toward the next arrival?")
+                nxt = self.sched.next_arrival()
+                if nxt is not None and nxt > self._now():
+                    time.sleep(min(0.05, nxt - self._now()))
+        return self.summary()
+
+    def summary(self) -> Dict:
+        done = self._all_requests()
+        return summarize(done, self.stats, self.cost_model)
+
+    def _all_requests(self) -> List[Request]:
+        seen = {r.rid: r for _, _, r in self.sched.waiting}
+        for r in list(self.sched.swapped) + list(self.sched.running.values()):
+            seen[r.rid] = r
+        for r in self._done:
+            seen[r.rid] = r
+        return list(seen.values())

@@ -1,0 +1,140 @@
+"""Serving observables: latency percentiles, throughput, occupancy, and
+per-request ODIN PIMC cost attribution.
+
+The ODIN attribution turns the paper's evaluation instrument (pim/trace's
+transaction-level simulator) into a serving-time observable: every token a
+request moves through the model — prefill and decode alike — costs one pass
+of the active-parameter matmul stack, which maps to a fixed bundle of PIMC
+commands (ANN_MUL/ANN_ACC plus the B_TO_S/S_TO_B conversion flows).  A
+request's bill is therefore ``per-token command bundle × tokens processed``,
+the same workload→command-trace framing RAPIDNN uses, applied per request.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.models import lm
+from repro.pim.geometry import OdinModule
+from repro.pim.trace import FC, Topology, trace_topology
+
+__all__ = ["EngineStats", "OdinCostModel", "percentiles", "summarize"]
+
+
+@dataclass
+class EngineStats:
+    """Counters the engine accumulates across its step loop."""
+
+    steps: int = 0
+    decode_steps: int = 0
+    decode_time: float = 0.0
+    prefill_time: float = 0.0
+    prefill_tokens: int = 0
+    generated_tokens: int = 0             # all emitted tokens (incl. prefill's)
+    decode_tokens: int = 0                # tokens emitted by decode steps only
+    active_slot_steps: int = 0            # Σ per decode step of active slots
+    slot_steps: int = 0                   # Σ per decode step of total slots
+    preempt_swap: int = 0
+    preempt_recompute: int = 0
+
+    @property
+    def occupancy(self) -> float:
+        return self.active_slot_steps / max(1, self.slot_steps)
+
+    @property
+    def decode_tps(self) -> float:
+        """Decode-phase throughput: decode-emitted tokens over decode time.
+        The first token of each request comes out of *prefill* and must not
+        inflate this number (its cost sits in prefill_time)."""
+        return self.decode_tokens / max(1e-9, self.decode_time)
+
+
+class OdinCostModel:
+    """Per-token PIMC command/energy bundle for one model config.
+
+    One decoded (or prefilled) token activates ``N_active`` MACs (the
+    active-parameter stack, lm.model_flops/2); modeled as an FC layer and
+    traced through the five-command set exactly like the paper topologies.
+    Pass a *full* arch config to attribute realistic energies even when the
+    engine itself runs the smoke config.
+    """
+
+    def __init__(self, cfg, module: Optional[OdinModule] = None):
+        module = module or OdinModule()
+        self.macs_per_token = max(1, int(lm.model_flops(cfg, 1, train=False) / 2))
+        topo = Topology(cfg.name, [FC(cfg.d_model, max(1, self.macs_per_token // cfg.d_model))])
+        cost = trace_topology(topo, module, accounting="full")
+        self.energy_pj_per_token = cost.total_energy_pj
+        self.latency_ns_per_token = cost.total_latency_ns
+        self.commands_per_token: Dict[str, int] = {}
+        for layer in cost.layers:
+            for name, n in layer.commands.items():
+                self.commands_per_token[name] = self.commands_per_token.get(name, 0) + n
+
+    def attribute(self, n_tokens: int) -> Dict:
+        """Cost bill for one request that moved ``n_tokens`` through the model."""
+        return {
+            "tokens": n_tokens,
+            "macs": n_tokens * self.macs_per_token,
+            "energy_mj": n_tokens * self.energy_pj_per_token / 1e9,
+            "module_latency_ms": n_tokens * self.latency_ns_per_token / 1e6,
+            "commands": {k: n_tokens * v for k, v in self.commands_per_token.items()},
+        }
+
+
+def percentiles(xs: List[float], qs=(50, 90, 99)) -> Dict[str, float]:
+    if not xs:
+        return {f"p{q}": float("nan") for q in qs}
+    return {f"p{q}": float(np.percentile(np.asarray(xs, np.float64), q)) for q in qs}
+
+
+def summarize(requests, stats: EngineStats, cost: Optional[OdinCostModel] = None) -> Dict:
+    """JSON-able roll-up: per-request records + fleet aggregates."""
+    per_request = []
+    ttfts, tpots = [], []
+    for r in sorted(requests, key=lambda r: r.rid):
+        ttft = None if r.t_first_token is None else r.t_first_token - r.arrival
+        tpot = None
+        if r.t_done is not None and r.t_first_token is not None and r.n_generated > 1:
+            tpot = (r.t_done - r.t_first_token) / (r.n_generated - 1)
+        if ttft is not None:
+            ttfts.append(ttft)
+        if tpot is not None:
+            tpots.append(tpot)
+        rec = {
+            "rid": r.rid,
+            "arrival_s": r.arrival,
+            "prompt_tokens": r.prompt_len,
+            "generated_tokens": r.n_generated,
+            "prefill_tokens": r.n_prefill_tokens,
+            "ttft_s": ttft,
+            "tpot_s": tpot,
+            "preemptions": {"swap": r.n_preempt_swap, "recompute": r.n_preempt_recompute},
+        }
+        if cost is not None:
+            # forward passes actually run: prefill tokens (the request's
+            # first generated token falls out of the last prefill pass) plus
+            # one decode pass per subsequent token — the final token is
+            # emitted without ever being passed back through the model.
+            rec["odin"] = cost.attribute(r.n_prefill_tokens + max(0, r.n_generated - 1))
+        per_request.append(rec)
+    out = {
+        "requests": per_request,
+        "ttft_s": percentiles(ttfts),
+        "tpot_s": percentiles(tpots),
+        "decode_tokens_per_s": stats.decode_tps,
+        "generated_tokens": stats.generated_tokens,
+        "decode_tokens": stats.decode_tokens,
+        "prefill_tokens": stats.prefill_tokens,
+        "steps": stats.steps,
+        "decode_steps": stats.decode_steps,
+        "decode_time_s": stats.decode_time,
+        "prefill_time_s": stats.prefill_time,
+        "slot_occupancy": stats.occupancy,
+        "preemptions": {"swap": stats.preempt_swap, "recompute": stats.preempt_recompute},
+    }
+    if cost is not None:
+        out["odin_total"] = cost.attribute(stats.prefill_tokens + stats.decode_tokens)
+    return out

@@ -1,0 +1,249 @@
+"""Request lifecycle + slot-based continuous-batching scheduler.
+
+State machine (per request)::
+
+    QUEUED ──admit──▶ RUNNING ──complete──▶ DONE
+       ▲                │  ▲
+       │   recompute-   │  │ resume (swap-in)
+       └── preempt ─────┤  │
+                        └──┴── swap preempt ──▶ SWAPPED
+
+``Scheduler.plan(now)`` is pure bookkeeping — it mutates only scheduler /
+request accounting state and returns a :class:`StepPlan` of device actions
+(swap-out scatters, swap-in gathers, chunked prefills) for the engine to
+execute.  That split keeps the policy unit-testable without touching jax.
+
+Per step, in order:
+
+1. **Growth** — each running request whose next decode write crosses a block
+   boundary allocates one more block.  On pool exhaustion the youngest
+   running request is preempted (swap if the swap tier has room, else
+   recompute-requeue) until the allocation succeeds; a request may preempt
+   itself, in which case it stops growing.
+2. **Resume** — swapped requests re-enter freed slots (FIFO), ahead of new
+   admissions so preempted work cannot starve.
+3. **Admission** — arrived queued requests fill the remaining free slots,
+   each allocating blocks for its whole prompt (+ the first decode row).
+
+Steps 2–3 are skipped on any step that preempted, so blocks freed under
+memory pressure relieve the pressure instead of thrashing.
+"""
+from __future__ import annotations
+
+import enum
+import heapq
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.blocks import BlockPool
+
+__all__ = ["Request", "RequestState", "Scheduler", "StepPlan"]
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    SWAPPED = "swapped"
+    DONE = "done"
+
+
+@dataclass
+class Request:
+    """One serving request: a prompt and a generation budget.
+
+    ``prompt`` is an int32 array of shape [S] (or [K, S] for multi-codebook
+    models).  ``extras`` may carry ``patch_embeds``/``pos3d`` for vision-stub
+    models (single-chunk prompts only).  All fields below ``arrival`` are
+    runtime state owned by the scheduler/engine.
+    """
+
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    arrival: float = 0.0
+    extras: Optional[dict] = None
+
+    state: RequestState = RequestState.QUEUED
+    slot: int = -1
+    generated: List = field(default_factory=list)
+    block_table: List[int] = field(default_factory=list)
+    ticket: object = None                 # SwapTicket while SWAPPED
+    n_prefill_tokens: int = 0             # includes recompute re-prefills
+    n_preempt_swap: int = 0
+    n_preempt_recompute: int = 0
+    t_admit: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[-1])
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.generated)
+
+    @property
+    def cached_len(self) -> int:
+        """Cache rows this request occupies: prompt + all generated tokens
+        except the pending one (the last generated token is the next decode
+        *input*; its KV row is written by that decode step)."""
+        return self.prompt_len + max(0, self.n_generated - 1)
+
+    @property
+    def done(self) -> bool:
+        return self.n_generated >= self.max_new
+
+
+@dataclass
+class StepPlan:
+    """Device actions for one engine step.
+
+    ``preempt`` entries are ``(request, mode, swap_block_ids, old_slot)`` with
+    mode "swap" (engine scatters the slot into the listed swap blocks) or
+    "recompute" (nothing device-side; the request re-prefills on readmission).
+    ``resume``/``admit`` requests already have their new slot and device block
+    table assigned.
+    """
+
+    preempt: List[Tuple[Request, str, Optional[List[int]], int]] = field(default_factory=list)
+    resume: List[Request] = field(default_factory=list)
+    admit: List[Request] = field(default_factory=list)
+
+
+class Scheduler:
+    def __init__(self, n_slots: int, pool: BlockPool, max_len: int,
+                 swap_pool: Optional[BlockPool] = None):
+        self.n_slots = n_slots
+        self.pool = pool
+        self.max_len = max_len
+        self.swap_pool = swap_pool
+        self.waiting: List[Tuple[float, int, Request]] = []    # heap
+        self.swapped: deque = deque()
+        self.running: Dict[int, Request] = {}                  # slot → request
+        self.free_slots: List[int] = list(range(n_slots - 1, -1, -1))
+
+    # -- queries ------------------------------------------------------------
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.swapped or self.running)
+
+    def next_arrival(self) -> Optional[float]:
+        return self.waiting[0][0] if self.waiting else None
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        total = req.prompt_len + req.max_new
+        if total > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new = {total} exceeds max_len {self.max_len}")
+        if self.pool.blocks_for(total) > self.pool.n_blocks:
+            raise ValueError(
+                f"request {req.rid}: needs {self.pool.blocks_for(total)} blocks, "
+                f"pool has {self.pool.n_blocks}")
+        if req.max_new < 1:
+            raise ValueError(f"request {req.rid}: max_new must be >= 1")
+        heapq.heappush(self.waiting, (req.arrival, req.rid, req))
+
+    def complete(self, req: Request, now: float) -> None:
+        """Called by the engine when the request's last token was emitted."""
+        self.pool.free(req.block_table)
+        req.block_table = []
+        self.running.pop(req.slot)
+        self.free_slots.append(req.slot)
+        req.slot = -1
+        req.state = RequestState.DONE
+        req.t_done = now
+
+    # -- planning -----------------------------------------------------------
+
+    def _victim(self) -> Optional[Request]:
+        """Youngest running request (latest arrival breaks toward higher rid)."""
+        if not self.running:
+            return None
+        return max(self.running.values(), key=lambda r: (r.arrival, r.rid))
+
+    def _preempt(self, req: Request, plan: StepPlan) -> None:
+        old_slot = req.slot
+        self.running.pop(old_slot)
+        self.free_slots.append(old_slot)
+        req.slot = -1
+        self.pool.free(req.block_table)
+        req.block_table = []
+        swap_ids = None
+        if self.swap_pool is not None:
+            swap_ids = self.swap_pool.alloc(self.swap_pool.blocks_for(req.cached_len))
+        if swap_ids is not None:
+            req.state = RequestState.SWAPPED
+            req.n_preempt_swap += 1
+            self.swapped.append(req)
+            plan.preempt.append((req, "swap", swap_ids, old_slot))
+        else:
+            req.state = RequestState.QUEUED
+            req.n_preempt_recompute += 1
+            heapq.heappush(self.waiting, (req.arrival, req.rid, req))
+            plan.preempt.append((req, "recompute", None, old_slot))
+
+    def _place(self, req: Request, blocks: List[int], now: float) -> None:
+        req.block_table = blocks
+        req.slot = self.free_slots.pop()
+        req.state = RequestState.RUNNING
+        self.running[req.slot] = req
+        if req.t_admit is None:
+            req.t_admit = now
+
+    def plan(self, now: float) -> StepPlan:
+        plan = StepPlan()
+
+        # 1. growth, oldest first: the next decode step writes KV row
+        # ``cached_len``, which may need a fresh block.
+        for req in sorted(self.running.values(), key=lambda r: (r.arrival, r.rid)):
+            if req.slot < 0:               # already preempted this step
+                continue
+            need = self.pool.blocks_for(req.cached_len + 1)
+            while len(req.block_table) < need:
+                got = self.pool.alloc(need - len(req.block_table))
+                if got is not None:
+                    req.block_table.extend(got)
+                    break
+                victim = self._victim()
+                self._preempt(victim, plan)
+                if victim is req:
+                    break
+
+        if plan.preempt:
+            return plan                    # let freed blocks settle one step
+
+        # 2. resume swapped requests into free slots (FIFO)
+        resume_starved = False
+        while self.swapped and self.free_slots:
+            req = self.swapped[0]
+            got = self.pool.alloc(self.pool.blocks_for(req.cached_len + 1))
+            if got is None:
+                resume_starved = True
+                break
+            self.swapped.popleft()
+            self._place(req, got, now)
+            plan.resume.append(req)
+
+        # 3. admit arrived requests into the remaining free slots.  Not while
+        # a swapped request is starved for blocks: a new admission would eat
+        # the very blocks it is waiting for (resume priority must hold for
+        # blocks, not just slots).
+        while self.waiting and self.free_slots and not resume_starved:
+            arrival, _, req = self.waiting[0]
+            if arrival > now:
+                break
+            got = self.pool.alloc(self.pool.blocks_for(req.cached_len + 1))
+            if got is None:
+                break
+            heapq.heappop(self.waiting)
+            self._place(req, got, now)
+            plan.admit.append(req)
+
+        return plan

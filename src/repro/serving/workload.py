@@ -1,0 +1,74 @@
+"""Synthetic open-loop request generators for serving scenarios.
+
+Arrivals follow a Poisson process (optionally bursty: ``burst`` requests per
+arrival event); prompt and generation lengths draw from discrete buckets.
+Bucketed lengths are deliberate: prefill chunk shapes stay bounded (each
+distinct chunk length traces one executable) while still exercising the
+mixed-length behavior that separates continuous batching from the static
+loop — short-generation requests retire early and their slots re-admit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serving.scheduler import Request
+
+__all__ = ["WorkloadSpec", "SCENARIOS", "poisson_arrivals", "make_requests"]
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    n_requests: int = 16
+    rate: float = 50.0                    # arrival events per second
+    burst: int = 1                        # requests per arrival event
+    prompt_buckets: Tuple[int, ...] = (16, 32)
+    prompt_weights: Optional[Tuple[float, ...]] = None
+    gen_buckets: Tuple[int, ...] = (8, 32)
+    gen_weights: Optional[Tuple[float, ...]] = None
+
+
+# Scenario presets (lengths are smoke-scale; scale up for full configs).
+SCENARIOS: Dict[str, WorkloadSpec] = {
+    # uniform lengths, steady arrivals — the static loop's best case
+    "steady": WorkloadSpec(prompt_buckets=(32,), gen_buckets=(16,)),
+    # mixed generation lengths — finished slots must re-admit to keep busy
+    "mixed": WorkloadSpec(prompt_buckets=(16, 32), gen_buckets=(4, 16, 48),
+                          gen_weights=(0.4, 0.35, 0.25)),
+    # bursty arrivals of long-tail requests — exercises queueing + preemption
+    "bursty": WorkloadSpec(burst=4, rate=10.0, prompt_buckets=(16, 48),
+                           gen_buckets=(8, 64), gen_weights=(0.7, 0.3)),
+}
+
+
+def poisson_arrivals(rng: np.random.Generator, n: int, rate: float,
+                     burst: int = 1) -> np.ndarray:
+    """[n] arrival offsets (seconds): Poisson events of ``burst`` requests."""
+    n_events = -(-n // burst)
+    gaps = rng.exponential(1.0 / max(rate, 1e-9), n_events)
+    times = np.cumsum(gaps)
+    return np.repeat(times, burst)[:n]
+
+
+def _draw(rng, buckets, weights, n):
+    p = None if weights is None else np.asarray(weights) / np.sum(weights)
+    return rng.choice(np.asarray(buckets), size=n, p=p)
+
+
+def make_requests(cfg: ModelConfig, spec: WorkloadSpec, seed: int = 0,
+                  start_rid: int = 0) -> List[Request]:
+    """Build ``spec.n_requests`` synthetic requests for ``cfg``."""
+    rng = np.random.default_rng(seed)
+    arrivals = poisson_arrivals(rng, spec.n_requests, spec.rate, spec.burst)
+    plens = _draw(rng, spec.prompt_buckets, spec.prompt_weights, spec.n_requests)
+    gens = _draw(rng, spec.gen_buckets, spec.gen_weights, spec.n_requests)
+    out = []
+    for i in range(spec.n_requests):
+        shape = (cfg.n_codebooks, int(plens[i])) if cfg.n_codebooks > 1 else (int(plens[i]),)
+        prompt = rng.integers(0, cfg.vocab, size=shape, dtype=np.int32)
+        out.append(Request(rid=start_rid + i, prompt=prompt,
+                           max_new=int(gens[i]), arrival=float(arrivals[i])))
+    return out
