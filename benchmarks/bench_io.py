@@ -1,0 +1,23 @@
+"""Merged benchmark JSON: every bench writes its section into one file
+(``BENCH_serving.json``) so the perf trajectory is machine-readable across
+PRs — CI uploads the file as an artifact."""
+import json
+import os
+
+DEFAULT_BENCH_JSON = "BENCH_serving.json"
+
+
+def update_bench_json(path: str, section: str, payload) -> dict:
+    """Read-merge-write ``payload`` under ``section``; tolerates a missing or
+    corrupt file (each bench only owns its own section)."""
+    data = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            data = {}
+    data[section] = payload
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+    return data

@@ -2,16 +2,28 @@
 the STRUCTURAL model of the TPU kernel (VMEM footprint, op counts, arithmetic
 intensity) that the §Roofline analysis uses.  On CPU the wall numbers only
 order implementations; the structural numbers are the hardware claim.
+
+The paged-attention section doubles as the kernel-vs-reference gate: any
+mismatch beyond tolerance raises, so a CI bench-smoke run fails loudly.
+Results merge into ``BENCH_serving.json`` (section "kernels") with
+``--bench-json``.
 """
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+try:
+    from benchmarks.bench_io import DEFAULT_BENCH_JSON, update_bench_json
+except ImportError:                      # run as a script: benchmarks/ on path
+    from bench_io import DEFAULT_BENCH_JSON, update_bench_json
+
 from repro.core import stochastic as sc
 from repro.core.odin_linear import get_luts
 from repro.kernels.int8_mm import int8_mm_pallas
+from repro.kernels.paged_attn import paged_attention, paged_attn_ref
 from repro.kernels.sc_mac import sc_matmul_pallas
 
 
@@ -43,7 +55,53 @@ def sc_mac_structure(M, K, N, bm=8, bn=8, bk=256, W=8):
                 bit_ops_per_mac=bit_ops_per_tile / (bm * bn * bk))
 
 
-def run(verbose: bool = True):
+def paged_attn_structure(B, Hkv, G, D, bs, P):
+    """Per-decode-token traffic model of the paged kernel vs the dense path.
+
+    Dense decode reads the whole [slots, max_len] cache; the paged kernel
+    reads only the pages the block tables reference — HBM bytes scale with
+    the *active* tokens, and the pool is the entire device KV footprint.
+    """
+    page_bytes = bs * D * 2                          # one K or V page, bf16
+    pages = B * Hkv * P
+    hbm_bytes = pages * 2 * page_bytes + B * Hkv * G * D * 4 * 2
+    flops = 2 * B * Hkv * G * P * bs * D * 2         # qk + pv per page
+    vmem = (G * D + 2 * bs * D) * 4 + G * (D + 2) * 4
+    return dict(hbm_bytes=hbm_bytes, flops=flops, vmem_bytes=vmem,
+                arithmetic_intensity=flops / hbm_bytes)
+
+
+def paged_attn_bench(tol: float = 2e-5):
+    """Time the paged decode kernel (interpret) vs its jnp reference and GATE
+    on the max abs error — raises on mismatch (the CI bench-smoke contract)."""
+    rng = np.random.default_rng(0)
+    B, H, Hkv, D, bs, P = 4, 8, 2, 64, 16, 8
+    N = B * P + 8
+    q = jnp.asarray(rng.normal(size=(B, H, D)) * 0.5, jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(N, bs, Hkv, D)) * 0.5, jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(N, bs, Hkv, D)) * 0.5, jnp.float32)
+    tables = jnp.asarray(rng.permutation(N)[:B * P].reshape(B, P), jnp.int32)
+    lengths = jnp.asarray(rng.integers(1, P * bs + 1, B), jnp.int32)
+
+    t_kernel = _time(lambda q: paged_attention(q, kp, vp, tables, lengths), q)
+    qg = q.reshape(B, Hkv, H // Hkv, D)
+    ref = jax.jit(lambda q: paged_attn_ref(q, kp, vp, tables, lengths))
+    t_ref = _time(ref, qg)
+    max_err = float(np.abs(
+        np.asarray(paged_attention(q, kp, vp, tables, lengths))
+        - np.asarray(ref(qg)).reshape(B, H, D)).max())
+    if max_err > tol:
+        raise AssertionError(
+            f"paged_attn kernel mismatch vs reference: {max_err:.2e} > {tol:.0e}")
+    return {
+        "paged_attn_kernel_interpret_ms": t_kernel * 1e3,
+        "paged_attn_ref_ms": t_ref * 1e3,
+        "paged_attn_max_err": max_err,
+        "paged_attn_structure": paged_attn_structure(64, 8, 4, 128, 16, 256),
+    }
+
+
+def run(verbose: bool = True, bench_json=None):
     lut_a, lut_w, selects = get_luts(256, 256, 0)
     spec = sc.StreamSpec()
     rng = np.random.default_rng(0)
@@ -70,10 +128,11 @@ def run(verbose: bool = True):
         "int8_mm_pallas_interpret_ms": t_int8 * 1e3,
         "sc_mac_structure": struct,
     }
+    out.update(paged_attn_bench())
     if verbose:
         print("\n# Kernel microbench (interpret-mode wall; structural TPU model)")
         for k, v in out.items():
-            if k != "sc_mac_structure":
+            if not isinstance(v, dict):
                 print(f"  {k:34s} {v:9.2f}")
         s = struct
         print(f"  sc_mac tile VMEM {s['vmem_bytes']/1e3:.0f} KB; "
@@ -82,8 +141,25 @@ def run(verbose: bool = True):
         print("  ⇒ SC-MAC trades each MXU MAC for ~{:.0f} VPU bit-ops: on PCRAM "
               "(no multipliers) that wins; on TPU the int8 MXU surrogate is the "
               "deployment path (DESIGN.md §2).".format(s["bit_ops_per_mac"]))
+        p = out["paged_attn_structure"]
+        print(f"  paged_attn decode (64 slots × 4k ctx): {p['hbm_bytes']/1e6:.0f} MB "
+              f"HBM/step, AI {p['arithmetic_intensity']:.1f} flop/byte — the "
+              f"bandwidth-bound regime the block pool keeps minimal; "
+              f"kernel==ref to {out['paged_attn_max_err']:.1e}")
+    if bench_json:
+        update_bench_json(bench_json, "kernels", out)
+        if verbose:
+            print(f"merged section 'kernels' into {bench_json}")
     return out
 
 
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench-json", default=DEFAULT_BENCH_JSON,
+                    help="merged cross-bench JSON (section 'kernels')")
+    args = ap.parse_args()
+    run(bench_json=args.bench_json)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -1,24 +1,34 @@
-"""Serving benchmark: continuous batching vs the static-batch loop.
+"""Serving benchmark: paged block-store engine vs dense-cache engine vs the
+static-batch loop.
 
 Sweeps arrival rate × batch slots over a mixed-length request stream and
-reports decode throughput, TTFT/TPOT percentiles, slot occupancy, and the
-per-request ODIN PIMC energy bill (JSON like the other benches).
+reports decode throughput, TTFT/TPOT percentiles, slot occupancy, peak device
+KV bytes, and the per-request ODIN PIMC energy bill.  Three configurations
+per cell, all token-for-token identical (greedy + deterministic schedule):
 
-The baseline is the seed's static-batch discipline (``serve_static``): group
-requests into consecutive batches of ``slots``, pad every batch to its
-longest prompt, and decode until its *longest* generation finishes — slots
-whose request retired early keep burning decode steps.  The engine re-admits
-freed slots instead; on the ``mixed`` stream its useful decode throughput
-must be ≥ 1.5× (asserted when --check is passed; the repo's serving test
-asserts the same at smoke scale).
+* ``static``       — the seed's static-batch loop (pad to the longest prompt,
+                     decode until the longest generation finishes);
+* ``dense engine`` — PR-1 continuous batching over dense ``[slots, max_len]``
+                     live caches (``paged=False``);
+* ``paged engine`` — the block pool as the physical KV store (Pallas paged
+                     decode kernel), at the full block budget AND at a tight
+                     pool (≈ half the dense-equivalent rows) that shows the
+                     memory win the paged store exists for.
 
-  PYTHONPATH=src python benchmarks/serving_bench.py --json serving.json
+Results merge into ``BENCH_serving.json`` (section "serving") next to the
+kernel microbench so the perf trajectory is machine-readable across PRs.
+
+  PYTHONPATH=src python benchmarks/serving_bench.py --bench-json BENCH_serving.json
 """
 import argparse
 import json
-import time
 
 import numpy as np
+
+try:
+    from benchmarks.bench_io import DEFAULT_BENCH_JSON, update_bench_json
+except ImportError:                      # run as a script: benchmarks/ on path
+    from bench_io import DEFAULT_BENCH_JSON, update_bench_json
 
 from repro.launch.serve import serve_static
 from repro.models import registry
@@ -52,11 +62,14 @@ def static_baseline(cfg, requests, slots: int, params=None, seed: int = 0):
 
 
 def engine_run(cfg, requests, slots: int, rate: float, params=None,
-               attribution_cfg=None):
+               attribution_cfg=None, paged: bool = True, n_blocks=None,
+               block_size: int = 16):
     spec_max = max(r.prompt_len + r.max_new for r in requests)
-    max_len = -(-spec_max // 16) * 16
-    engine = ServingEngine(cfg, slots=slots, max_len=max_len, block_size=16,
-                           params=params, attribution_cfg=attribution_cfg)
+    max_len = -(-spec_max // block_size) * block_size
+    engine = ServingEngine(cfg, slots=slots, max_len=max_len,
+                           block_size=block_size, params=params,
+                           attribution_cfg=attribution_cfg, paged=paged,
+                           n_blocks=n_blocks)
     # re-stamp arrivals for the requested rate (virtual → wall seconds)
     rng = np.random.default_rng(7)
     gaps = rng.exponential(1.0 / rate, len(requests)) if np.isfinite(rate) else np.zeros(len(requests))
@@ -64,12 +77,16 @@ def engine_run(cfg, requests, slots: int, rate: float, params=None,
     reqs = [Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new,
                     arrival=float(a)) for r, a in zip(requests, arrivals)]
     summary = engine.run(reqs)
-    return summary
+    toks = tuple(tuple(tuple(np.asarray(t).ravel().tolist()) for t in r.generated)
+                 for r in sorted(reqs, key=lambda r: r.rid))
+    return summary, toks
 
 
 def run(verbose: bool = True, n_requests: int = 16, slots_sweep=(2, 4),
         rates=(float("inf"),), arch: str = "phi4-mini-3.8b",
-        json_path=None, check: bool = False):
+        json_path=None, bench_json=None, check: bool = False,
+        check_paged: bool = False):
+    block_size = 16
     cfg = registry.get_smoke(arch)
     attribution_cfg = registry.get_config(arch)   # bill energy at full scale
     import jax
@@ -77,49 +94,103 @@ def run(verbose: bool = True, n_requests: int = 16, slots_sweep=(2, 4),
     from repro.nn import module as nnmod
     params = nnmod.materialize(lm.param_spec(cfg), jax.random.PRNGKey(0))
     base_requests = make_requests(cfg, _mixed_spec(n_requests), seed=11)
+    spec_max = max(r.prompt_len + r.max_new for r in base_requests)
+    max_len = -(-spec_max // block_size) * block_size
+    req_blocks = -(-spec_max // block_size)       # largest single request
 
     out = {"arch": arch, "n_requests": n_requests, "cells": []}
     for slots in slots_sweep:
         tps_static, t_static = static_baseline(cfg, base_requests, slots, params=params)
         for rate in rates:
-            summary = engine_run(cfg, base_requests, slots, rate, params=params,
-                                 attribution_cfg=attribution_cfg)
+            dense, dense_toks = engine_run(
+                cfg, base_requests, slots, rate, params=params,
+                attribution_cfg=attribution_cfg, paged=False)
+            paged, paged_toks = engine_run(
+                cfg, base_requests, slots, rate, params=params,
+                attribution_cfg=attribution_cfg, paged=True)
+            # tight pool: ≈ half the dense-equivalent block budget (the +1
+            # write-off block counts against the ratio), when the largest
+            # request still fits
+            dense_blocks = slots * (max_len // block_size)
+            tight_blocks = dense_blocks // 2 - 1
+            tight = tight_toks = None
+            if tight_blocks >= req_blocks:
+                tight, tight_toks = engine_run(
+                    cfg, base_requests, slots, rate, params=params,
+                    attribution_cfg=attribution_cfg, paged=True,
+                    n_blocks=tight_blocks)
             cell = {
                 "slots": slots,
                 "arrival_rate": None if not np.isfinite(rate) else rate,
                 "static_useful_tokens_per_s": tps_static,
-                "engine_tokens_per_s": summary["decode_tokens_per_s"],
-                "speedup": summary["decode_tokens_per_s"] / max(tps_static, 1e-9),
-                "ttft_s": summary["ttft_s"],
-                "tpot_s": summary["tpot_s"],
-                "slot_occupancy": summary["slot_occupancy"],
-                "preemptions": summary["preemptions"],
-                "odin_total": summary["odin_total"],
+                "engine_tokens_per_s": paged["decode_tokens_per_s"],
+                "speedup": paged["decode_tokens_per_s"] / max(tps_static, 1e-9),
+                "dense_engine_tokens_per_s": dense["decode_tokens_per_s"],
+                "paged_vs_dense_speedup": paged["decode_tokens_per_s"]
+                    / max(dense["decode_tokens_per_s"], 1e-9),
+                "dense_kv_bytes": dense["kv_cache_bytes"],
+                "paged_kv_bytes": paged["kv_cache_bytes"],
+                "paged_tight_kv_bytes": tight["kv_cache_bytes"] if tight else None,
+                "kv_bytes_ratio": (dense["kv_cache_bytes"]
+                                   / max(tight["kv_cache_bytes"], 1)) if tight else None,
+                "paged_tight_tokens_per_s": tight["decode_tokens_per_s"] if tight else None,
+                "tokens_match": bool(dense_toks == paged_toks
+                                     and (tight_toks is None or tight_toks == dense_toks)),
+                "ttft_s": paged["ttft_s"],
+                "tpot_s": paged["tpot_s"],
+                "slot_occupancy": paged["slot_occupancy"],
+                "preemptions": paged["preemptions"],
+                "tight_preemptions": tight["preemptions"] if tight else None,
+                "odin_total": paged["odin_total"],
                 "per_request": [
                     {k: rec[k] for k in ("rid", "prompt_tokens", "generated_tokens",
                                          "ttft_s", "tpot_s", "odin")}
-                    for rec in summary["requests"]
+                    for rec in paged["requests"]
                 ],
             }
             out["cells"].append(cell)
             if verbose:
                 r = "∞" if cell["arrival_rate"] is None else f"{rate:g}/s"
-                print(f"slots={slots} rate={r:>6}: static {tps_static:7.1f} tok/s → "
-                      f"engine {cell['engine_tokens_per_s']:7.1f} tok/s "
-                      f"({cell['speedup']:.2f}×)  occ {cell['slot_occupancy']:.2f}  "
-                      f"ttft_p50 {cell['ttft_s']['p50']*1e3:6.1f} ms  "
-                      f"energy {cell['odin_total']['energy_mj']/1e3:.2f} J")
-    best = max(c["speedup"] for c in out["cells"])
-    out["best_speedup"] = best
+                ratio = cell["kv_bytes_ratio"]
+                print(f"slots={slots} rate={r:>6}: static {tps_static:7.1f} → "
+                      f"dense {cell['dense_engine_tokens_per_s']:7.1f} → "
+                      f"paged {cell['engine_tokens_per_s']:7.1f} tok/s  "
+                      f"kv {cell['dense_kv_bytes']/1e3:.0f}→{cell['paged_kv_bytes']/1e3:.0f} KB"
+                      + (f" (tight {cell['paged_tight_kv_bytes']/1e3:.0f} KB, "
+                         f"{ratio:.2f}× less)" if ratio else "")
+                      + f"  tokens_match={cell['tokens_match']}")
+    out["best_speedup"] = max(c["speedup"] for c in out["cells"])
+    out["best_paged_vs_dense_speedup"] = max(
+        c["paged_vs_dense_speedup"] for c in out["cells"])
+    ratios = [c["kv_bytes_ratio"] for c in out["cells"] if c["kv_bytes_ratio"]]
+    out["best_kv_bytes_ratio"] = max(ratios) if ratios else None
+    out["all_tokens_match"] = all(c["tokens_match"] for c in out["cells"])
     if verbose:
-        print(f"best decode-throughput speedup over static batching: {best:.2f}×")
+        print(f"best decode-throughput speedup over static batching: "
+              f"{out['best_speedup']:.2f}×; paged vs dense engine: "
+              f"{out['best_paged_vs_dense_speedup']:.2f}× tok/s, "
+              f"{out['best_kv_bytes_ratio'] or float('nan'):.2f}× less peak KV")
     if json_path:
         with open(json_path, "w") as f:
             json.dump(out, f, indent=2)
         if verbose:
             print(f"wrote {json_path}")
-    if check and best < 1.5:
-        raise SystemExit(f"speedup {best:.2f}× < required 1.5×")
+    if bench_json:
+        update_bench_json(bench_json, "serving", out)
+        if verbose:
+            print(f"merged section 'serving' into {bench_json}")
+    if check and out["best_speedup"] < 1.5:
+        raise SystemExit(f"speedup {out['best_speedup']:.2f}× < required 1.5×")
+    if check_paged:
+        if not out["all_tokens_match"]:
+            raise SystemExit("paged engine token streams diverge from dense")
+        ok = (out["best_paged_vs_dense_speedup"] >= 1.3
+              or (out["best_kv_bytes_ratio"] or 0) >= 2.0)
+        if not ok:
+            raise SystemExit(
+                f"paged engine shows neither ≥1.3× decode throughput "
+                f"({out['best_paged_vs_dense_speedup']:.2f}×) nor ≥2× lower "
+                f"peak KV ({out['best_kv_bytes_ratio']}) vs the dense engine")
     return out
 
 
@@ -131,12 +202,19 @@ def main():
     ap.add_argument("--rates", type=float, nargs="+", default=None,
                     help="arrival rates (req/s); default: unthrottled")
     ap.add_argument("--json", default=None)
+    ap.add_argument("--bench-json", default=DEFAULT_BENCH_JSON,
+                    help="merged cross-bench JSON (section 'serving')")
     ap.add_argument("--check", action="store_true",
                     help="exit non-zero unless engine ≥ 1.5× static decode throughput")
+    ap.add_argument("--check-paged", action="store_true",
+                    help="exit non-zero unless the paged engine matches dense "
+                         "token streams AND shows ≥1.3× tok/s or ≥2× lower "
+                         "peak KV memory")
     args = ap.parse_args()
     rates = tuple(args.rates) if args.rates else (float("inf"),)
     run(n_requests=args.requests, slots_sweep=tuple(args.slots), rates=rates,
-        arch=args.arch, json_path=args.json, check=args.check)
+        arch=args.arch, json_path=args.json, bench_json=args.bench_json,
+        check=args.check, check_paged=args.check_paged)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,2 @@
+from repro.kernels.paged_attn.ops import paged_attention
+from repro.kernels.paged_attn.ref import paged_attn_ref

@@ -1,0 +1,49 @@
+"""jit'd entry point for paged decode attention.
+
+``paged_attention(q, k_pool, v_pool, tables, lengths)`` is the op the serving
+decode path calls per layer: GQA head grouping, kernel dispatch, and the
+interpret-mode fallback so tier-1 tests run on CPU.  ``use_kernel=False``
+routes to the pure-jnp oracle (ref.py) for debugging.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attn.paged_attn import paged_attn_pallas_call
+from repro.kernels.paged_attn.ref import paged_attn_ref
+
+__all__ = ["paged_attention"]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "kv_scale",
+                                             "use_kernel", "interpret"))
+def paged_attention(q, k_pool, v_pool, tables, lengths, *, window: int = 0,
+                    kv_scale=None, use_kernel: bool = True,
+                    interpret=None) -> jax.Array:
+    """q [B, H, D] against pools [N, bs, H_kv, D] via tables [B, P] → [B, H, D].
+
+    ``lengths [B]`` counts visible tokens per sequence (the current token's
+    K/V must already be written at row ``lengths-1``).  ``kv_scale`` set ⇒
+    pools hold fixed-point int8 (values/kv_scale).  ``interpret=None`` picks
+    compiled on TPU, interpreter everywhere else.
+    """
+    B, H, D = q.shape
+    Hkv = k_pool.shape[2]
+    if H % Hkv:
+        raise ValueError(f"n_heads {H} not a multiple of n_kv_heads {Hkv}")
+    qg = q.reshape(B, Hkv, H // Hkv, D)
+    tables = tables.astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+    if use_kernel:
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        o = paged_attn_pallas_call(qg, k_pool, v_pool, tables, lengths,
+                                   window=window, kv_scale=kv_scale,
+                                   interpret=interpret)
+    else:
+        o = paged_attn_ref(qg, k_pool, v_pool, tables, lengths,
+                           window=window, kv_scale=kv_scale)
+    return o.reshape(B, H, D)

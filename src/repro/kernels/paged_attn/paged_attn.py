@@ -1,0 +1,142 @@
+"""Paged decode-attention Pallas kernel: attend over a device block pool.
+
+The physical KV store is a single pool ``[n_blocks, block_size, H_kv, d_head]``
+shared by every serving slot; each slot owns a *block table* mapping its
+logical pages to pool blocks.  The kernel indexes the table **inside** the
+compiled step, so decode reads K/V blocks in place — no dense
+``[slots, max_len]`` live cache, no gather materialization; device KV memory
+scales with ``n_blocks·block_size`` (≈ active tokens) instead of
+``slots × max_len``.
+
+Layout (the standard TPU paged-attention shape):
+
+* grid ``(B, H_kv, n_pages)`` with the page axis innermost — the online
+  softmax state (m, l, acc) lives in VMEM scratch carried across pages;
+* ``lengths [B]`` and ``tables [B, n_pages]`` are **scalar-prefetched**: the
+  K/V BlockSpec index maps read ``tables[b, i]`` to pull page ``i`` of
+  sequence ``b`` from the pool, one ``[block_size, d_head]`` tile per step
+  (the Pallas pipeline turns those into the HBM→VMEM block DMAs);
+* pages past a sequence's length — and, under a sliding window, pages wholly
+  below it — are skipped via ``pl.when``; partially-valid pages mask by
+  absolute position, so stale rows from a block's previous owner are
+  invisible;
+* int8 pools (the ODIN fixed-8-bit KV working set) dequantize in-kernel:
+  the kernel reads half the bytes per page and rescales after the load.
+
+Per-tile VMEM at the ``block_size=16, d_head=128`` default: q 1 KB + k/v
+2×4 KB (int8) + acc/m/l ≈ 1 KB ≪ budget; arithmetic is one ``[G, bs]·[bs,D]``
+MXU pass per page.  ``interpret=True`` runs the same kernel on CPU (tier-1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["paged_attn_kernel", "paged_attn_pallas_call"]
+
+NEG_INF = -1e30
+
+
+def paged_attn_kernel(lengths_ref, tables_ref, q_ref, k_ref, v_ref, o_ref,
+                      m_ref, l_ref, acc_ref, *, block_size: int, n_pages: int,
+                      window: int, scale: float, kv_scale):
+    """One (sequence b, kv-head h, page i) grid step of online-softmax GQA.
+
+    q_ref [1,1,G,D] · k_ref/v_ref [1,bs,1,D] (page ``tables[b, i]`` of the
+    pool) → o_ref [1,1,G,D]; m/l/acc scratch carry the softmax state over the
+    page axis.
+    """
+    b, i = pl.program_id(0), pl.program_id(2)
+    length = lengths_ref[b]
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Page overlaps the visible range [max(0, length-window), length)?
+    live = i * block_size < length
+    if window:
+        live = jnp.logical_and(live, (i + 1) * block_size > length - window)
+
+    @pl.when(live)
+    def _page():
+        q = q_ref[0, 0].astype(jnp.float32)                  # [G, D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # [bs, D]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if kv_scale is not None:                             # int8 pool dequant
+            k = k * (1.0 / kv_scale)
+            v = v * (1.0 / kv_scale)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # [G, bs]
+        pos = i * block_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_size), 1)
+        ok = pos < length
+        if window:
+            ok = jnp.logical_and(ok, pos > length - 1 - window)
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(i == n_pages - 1)
+    def _finish():
+        # length == 0 (idle slot) leaves l at 0 → output 0, never NaN
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def paged_attn_pallas_call(
+    q: jax.Array,            # [B, H_kv, G, D] current-token queries
+    k_pool: jax.Array,       # [n_blocks, block_size, H_kv, D] physical store
+    v_pool: jax.Array,       # [n_blocks, block_size, H_kv, D]
+    tables: jax.Array,       # int32 [B, n_pages] pool block ids per slot page
+    lengths: jax.Array,      # int32 [B] visible tokens (incl. current)
+    *,
+    window: int = 0,
+    kv_scale=None,           # pool is int8 fixed-point with this scale
+    interpret: bool = True,
+) -> jax.Array:
+    B, Hkv, G, D = q.shape
+    bs = k_pool.shape[1]
+    n_pages = tables.shape[1]
+    scale = 1.0 / np.sqrt(D)
+    kernel = functools.partial(
+        paged_attn_kernel, block_size=bs, n_pages=n_pages, window=window,
+        scale=scale, kv_scale=kv_scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, i, lens, tabs: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, h, i, lens, tabs: (tabs[b, i], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, h, i, lens, tabs: (tabs[b, i], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, i, lens, tabs: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),     # m: running max
+            pltpu.VMEM((G, 1), jnp.float32),     # l: running denominator
+            pltpu.VMEM((G, D), jnp.float32),     # acc: running numerator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(lengths, tables, q, k_pool, v_pool)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the paged decode-attention kernel.
+
+Gathers every table page from the pool into a dense ``[B, n_pages·bs]``
+view and runs a masked softmax — O(max_len) memory per call, which is
+exactly what the kernel avoids; this exists to pin the kernel's semantics
+(tests) and as a shape-checked fallback.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["paged_attn_ref"]
+
+NEG_INF = -1e30
+
+
+def paged_attn_ref(q, k_pool, v_pool, tables, lengths, *, window: int = 0,
+                   kv_scale=None):
+    """q [B,Hkv,G,D], pools [N,bs,Hkv,D], tables [B,P], lengths [B] → [B,Hkv,G,D]."""
+    B, Hkv, G, D = q.shape
+    bs = k_pool.shape[1]
+    P = tables.shape[1]
+    k = k_pool[tables].reshape(B, P * bs, Hkv, D).astype(jnp.float32)
+    v = v_pool[tables].reshape(B, P * bs, Hkv, D).astype(jnp.float32)
+    if kv_scale is not None:
+        k = k * (1.0 / kv_scale)
+        v = v * (1.0 / kv_scale)
+    s = jnp.einsum("bhgd,bkhd->bhgk", q.astype(jnp.float32), k) / np.sqrt(D)
+    pos = jnp.arange(P * bs, dtype=jnp.int32)[None, :]          # [1, P·bs]
+    ok = pos < lengths[:, None]
+    if window:
+        ok = ok & (pos > lengths[:, None] - 1 - window)
+    okb = ok[:, None, None, :]
+    s = jnp.where(okb, s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.where(okb, jnp.exp(s - m), 0.0)                     # exact 0 when empty
+    l = p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v) / jnp.maximum(l, 1e-30)
+    return o.astype(q.dtype)

@@ -137,6 +137,14 @@ def main():
                     help="run the legacy static-batch loop instead of the engine")
     ap.add_argument("--odin-mode", choices=["exact", "int8", "sc"], default=None,
                     help="execution mode for Linear layers (default: config's)")
+    ap.add_argument("--no-paged", action="store_true",
+                    help="keep the dense [slots, max_len] live caches instead "
+                         "of the paged physical block store")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation for sampling (0 = full vocab)")
+    ap.add_argument("--sample-seed", type=int, default=0)
     # open-loop scenario mode (ignores --batch/--prompt-len/--gen)
     ap.add_argument("--scenario", choices=sorted(SCENARIOS), default=None,
                     help="serve a synthetic open-loop workload instead")
@@ -161,7 +169,9 @@ def main():
             cfg, slots=args.slots or 4, max_len=max_len,
             block_size=block_size, n_blocks=args.kv_blocks,
             swap_blocks=args.swap_blocks, prefill_chunk=args.chunk,
-            seed=args.seed, odin_mode=args.odin_mode)
+            seed=args.seed, odin_mode=args.odin_mode,
+            paged=not args.no_paged, temperature=args.temperature,
+            top_k=args.top_k, sample_seed=args.sample_seed)
         summary = engine.run(make_requests(cfg, spec, seed=args.seed))
         print(json.dumps({k: v for k, v in summary.items() if k != "requests"}, indent=2))
         return
@@ -172,7 +182,11 @@ def main():
                                  "n_blocks": args.kv_blocks,
                                  "swap_blocks": args.swap_blocks,
                                  "prefill_chunk": args.chunk,
-                                 "odin_mode": args.odin_mode}
+                                 "odin_mode": args.odin_mode,
+                                 "paged": not args.no_paged,
+                                 "temperature": args.temperature,
+                                 "top_k": args.top_k,
+                                 "sample_seed": args.sample_seed}
     generated, tps = fn(cfg, batch=args.batch, prompt_len=args.prompt_len,
                         gen=args.gen, seed=args.seed, **kw)
     print("[serve] first request tokens:", np.asarray(generated)[0].ravel()[:16])

@@ -38,8 +38,9 @@ def shard_map(f, *, mesh, in_specs, out_specs):
         return _shard_map_raw(f, mesh=mesh, in_specs=in_specs,
                               out_specs=out_specs, check_rep=False)
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import BlockConfig, ModelConfig
 from repro.models import lm
+from repro.nn.attention import POOL_LEAVES, init_paged_cache
 from repro.nn.module import ParamSpec
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 from repro.optim.compress import compressed_psum
@@ -54,6 +55,7 @@ __all__ = [
     "init_serving_caches",
     "make_slot_prefill_step",
     "make_serving_decode_step",
+    "pageable_block",
 ]
 
 
@@ -168,19 +170,20 @@ def _argmax_tokens(logits, cfg: ModelConfig):
 
 
 def make_decode_step(cfg: ModelConfig) -> Callable:
-    """(params, caches, tokens [B,1]) → (next_tokens [B,1], caches).
+    """(params, caches, tokens [B,1][, tables]) → (next_tokens [B,1], caches).
 
     The query position is read from the cache ``pos`` leaf — without it the
     decoded token runs at position 0: wrong RoPE phase AND a causal mask that
-    hides every cache row but the first.
+    hides every cache row but the first.  ``tables`` (per-slot block tables)
+    only matter when the caches carry the paged block pool.
     """
 
-    def decode_step(params, caches, tokens):
+    def decode_step(params, caches, tokens, tables=None):
         start = _cache_start(caches)
         if start is not None and start.ndim:
             start = start[:, None]
         logits, caches, _ = lm.forward(params, tokens, cfg, caches=caches,
-                                       start_pos=start)
+                                       start_pos=start, tables=tables)
         return _argmax_tokens(logits, cfg), caches
 
     return decode_step
@@ -190,8 +193,32 @@ def make_decode_step(cfg: ModelConfig) -> Callable:
 # continuous-batching serving steps (repro.serving)
 # ---------------------------------------------------------------------------
 
+def _leaf_name(path) -> str:
+    return jax.tree_util.keystr(path[-1:]).strip("[]'\"")
+
+
+def pageable_block(b: BlockConfig) -> bool:
+    """Whether a segment's attention cache can use the paged block pool.
+
+    Non-windowed GQA only: sliding-window layers already hold O(window) ring
+    state, and MLA's compressed latent keeps its dense layout (both stay on
+    the existing cache-family dispatch).
+    """
+    return (b.kind in ("dense", "moe", "hymba") and b.attn is not None
+            and b.attn.kind == "gqa" and b.attn.window == 0)
+
+
+def _pool_trash_block(caches) -> Optional[int]:
+    """Index of the write-off block of the paged pool (None ⇒ no paged leaves)."""
+    for path, leaf in jax.tree_util.tree_flatten_with_path(caches)[0]:
+        if _leaf_name(path) in POOL_LEAVES:
+            return leaf.shape[1] - 1
+    return None
+
+
 def init_serving_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=None,
-                        window_headroom: int = 0, round_to: int = 1):
+                        window_headroom: int = 0, round_to: int = 1,
+                        block_size: int = 0, n_blocks: int = 0):
     """Stacked decode caches with *per-slot* position vectors.
 
     Identical to ``lm.init_caches`` except:
@@ -199,8 +226,13 @@ def init_serving_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=None,
     * attention ``pos`` leaves are [L, B] int32 vectors instead of [L]
       scalars, so each batch slot tracks its own sequence length
       (nn/attention.py takes the batched-scatter write path and builds
-      per-slot visibility masks) — every leaf then carries the slot axis at
-      position 1, which is what the slot slice/update helpers rely on;
+      per-slot visibility masks) — every per-slot leaf then carries the slot
+      axis at position 1, which is what the slot slice/update helpers rely on;
+    * with ``n_blocks > 0``, paged-capable segments (``pageable_block``) get
+      the **physical block pool** instead of a dense ``[B, max_len]`` live
+      cache: ``k_pool/v_pool [L, n_blocks+1, block_size, H_kv, D]`` shared by
+      every slot and addressed through per-slot block tables — device KV
+      memory scales with the pool, not ``slots × max_len``;
     * sliding-window ring buffers get ``window_headroom`` extra rows (rounded
       up to ``round_to``, capped at ``max_len``).  A prefill chunk of C
       tokens through a ring of exactly ``window`` rows overwrites keys its
@@ -209,10 +241,16 @@ def init_serving_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=None,
       exact for window attention.  (Masking is position-based, so extra rows
       only cost memory.)
     """
-    caches = lm.init_caches(cfg, batch, max_len, dtype)
+    if dtype is None:
+        dtype = jnp.dtype(cfg.kv_dtype)
+    override = None
+    if n_blocks:
+        override = lambda b: (init_paged_cache(b.attn, n_blocks, block_size, dtype)
+                              if pageable_block(b) else None)
+    caches = lm.init_caches(cfg, batch, max_len, dtype, attn_override=override)
 
     def fix(path, leaf):
-        name = jax.tree_util.keystr(path[-1:]).strip("[]'\"")
+        name = _leaf_name(path)
         if name == "pos":
             return jnp.zeros((*leaf.shape, batch), jnp.int32)
         if window_headroom and name in ("k", "v") and leaf.shape[2] < max_len:
@@ -229,61 +267,126 @@ def init_serving_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=None,
 
 
 def make_slot_prefill_step(cfg: ModelConfig, max_len: int,
-                           window_headroom: int = 0, round_to: int = 1) -> Callable:
+                           window_headroom: int = 0, round_to: int = 1,
+                           block_size: int = 0, paged: bool = False) -> Callable:
     """Chunked prefill of ONE batch slot of a serving cache.
 
-    (params, caches, tokens [1,C], slot, start, reset) → (last_logits, caches)
+    (params, caches, tokens [1,C], slot, start, reset, tables)
+        → (last_logits, caches)
 
-    Slices the slot's cache out ([L, 1, ...] per leaf), runs the ordinary
-    forward over the chunk at absolute positions [start, start+C), and writes
-    the slice back.  ``reset`` (traced bool) restores the slot to its true
-    initial state first — required because mLSTM/sLSTM states do not
-    initialize to zeros and the slot may hold a previous request's state.
+    Per-slot leaves are sliced out ([L, 1, ...] per leaf), the chunk runs the
+    ordinary forward at absolute positions [start, start+C), and the slices
+    are written back.  Paged pool leaves have no slot axis: they pass through
+    whole, and the forward **writes the chunk's K/V blocks directly into the
+    pool** via the slot's block-table row — there is no dense staging copy.
+    ``reset`` (traced bool) restores the slot's per-slot leaves to their true
+    initial state first (mLSTM/sLSTM states do not initialize to zeros and
+    the slot may hold a previous request's state); pool blocks never need a
+    reset because rows at or beyond the slot's ``pos`` are invisible, and the
+    rows below it are overwritten by this very prefill.
     ``slot``/``start`` are traced scalars so one executable serves every slot
     and chunk offset; only distinct chunk *lengths* compile separately.
     """
 
-    def prefill_chunk(params, caches, tokens, slot, start, reset,
+    def prefill_chunk(params, caches, tokens, slot, start, reset, tables=None,
                       patch_embeds=None, pos3d=None):
-        sl = jax.tree.map(lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1), caches)
-        init = init_serving_caches(cfg, 1, max_len, window_headroom=window_headroom,
-                                   round_to=round_to)
-        sl = jax.tree.map(lambda a, b: jnp.where(reset, b, a), sl, init)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+        init = init_serving_caches(cfg, 1, max_len,
+                                   window_headroom=window_headroom,
+                                   round_to=round_to, block_size=block_size,
+                                   n_blocks=1 if paged else 0)
+        init_flat = [l for _, l in jax.tree_util.tree_flatten_with_path(init)[0]]
+        sl = []
+        for (path, leaf), ini in zip(flat, init_flat):
+            if _leaf_name(path) in POOL_LEAVES:
+                sl.append(leaf)                      # shared pool: pass whole
+            else:
+                s = jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=1)
+                sl.append(jnp.where(reset, ini, s))
+        sl = jax.tree_util.tree_unflatten(treedef, sl)
+        trow = (jax.lax.dynamic_slice_in_dim(tables, slot, 1, axis=0)
+                if paged else None)
         logits, sl, _ = lm.forward(params, tokens, cfg, caches=sl,
                                    patch_embeds=patch_embeds, pos3d=pos3d,
-                                   start_pos=start, moe_no_drop=True)
-        caches = jax.tree.map(
-            lambda a, b: jax.lax.dynamic_update_slice_in_dim(a, b, slot, axis=1),
-            caches, sl)
-        return logits[:, -1], caches
+                                   start_pos=start, moe_no_drop=True,
+                                   tables=trow)
+        out = []
+        for (path, old), (_, new) in zip(
+                flat, jax.tree_util.tree_flatten_with_path(sl)[0]):
+            if _leaf_name(path) in POOL_LEAVES:
+                out.append(new)                      # updated in place
+            else:
+                out.append(jax.lax.dynamic_update_slice_in_dim(
+                    old, new, slot, axis=1))
+        return logits[:, -1], jax.tree_util.tree_unflatten(treedef, out)
 
     return prefill_chunk
 
 
-def make_serving_decode_step(cfg: ModelConfig) -> Callable:
+def _sample_tokens(logits, cfg: ModelConfig, key, temperature, top_k: int):
+    """Next-token pick: greedy argmax, or temperature + top-k sampling.
+
+    ``key is None`` ⇒ compiled greedy-only path (no sampling ops in the
+    graph).  Otherwise per-slot keys are derived by ``fold_in`` so each slot
+    draws an independent stream, and a traced ``temperature == 0`` still
+    selects the argmax (the engine passes one executable either way).
+    """
+    last = logits[:, -1]                         # [B, V] or [B, K, V]
+    greedy = jnp.argmax(last, axis=-1).astype(jnp.int32)
+    if key is None:
+        nxt = greedy
+    else:
+        masked = last.astype(jnp.float32)
+        if top_k:
+            kth = jax.lax.top_k(masked, top_k)[0][..., -1:]
+            masked = jnp.where(masked >= kth, masked, -1e30)
+        B = last.shape[0]
+        keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(B))
+        scaled = masked / jnp.maximum(temperature, 1e-6)
+        sampled = jax.vmap(lambda k, l: jax.random.categorical(k, l, axis=-1))(
+            keys, scaled).astype(jnp.int32)
+        nxt = jnp.where(temperature > 0, sampled, greedy)
+    return nxt[:, :, None] if cfg.n_codebooks > 1 else nxt[:, None]
+
+
+def make_serving_decode_step(cfg: ModelConfig, top_k: int = 0,
+                             sample: bool = False) -> Callable:
     """One decode step over all serving slots with an activity mask.
 
-    (params, caches, tokens [B,1], lengths [B], active [B]) → (next, caches)
+    (params, caches, tokens [B,1], lengths [B], active [B], tables [B,P],
+     key, temperature) → (next, caches)
 
     Inactive slots (free, draining, or mid-admission) still flow through the
     compiled step — the fixed [B, 1] shape is what keeps one executable
-    serving every request mix — but their cache updates are discarded by a
-    per-slot select, so neither their KV rows, their recurrent states, nor
-    their ``pos`` advance.  ``lengths`` must equal the per-slot cache ``pos``
-    (the scheduler's view of each slot's cached length).
+    serving every request mix — but their cache updates are discarded: per-
+    slot leaves by a select, and paged pool writes by pointing the inactive
+    slots' block tables at the pool's write-off block (the pool has no slot
+    axis to select over, so masking happens at the write address).
+    ``lengths`` must equal the per-slot cache ``pos`` (the scheduler's view
+    of each slot's cached length).  ``sample=False`` compiles the pure greedy
+    step (key/temperature accepted but unused); ``sample=True`` adds the
+    temperature + top-k path of :func:`_sample_tokens`.
     """
 
-    def decode_step(params, caches, tokens, lengths, active):
+    def decode_step(params, caches, tokens, lengths, active, tables=None,
+                    key=None, temperature=0.0):
+        trash = _pool_trash_block(caches)
+        if tables is not None and trash is not None:
+            tables = jnp.where(active[:, None], tables, jnp.int32(trash))
         logits, new_caches, _ = lm.forward(params, tokens, cfg, caches=caches,
                                            start_pos=lengths[:, None],
-                                           moe_no_drop=True)
+                                           moe_no_drop=True, tables=tables)
 
-        def merge(old, new):
+        def merge(path, old, new):
+            if _leaf_name(path) in POOL_LEAVES:
+                return new          # inactive writes went to the trash block
             m = active.reshape((1, active.shape[0]) + (1,) * (old.ndim - 2))
             return jnp.where(m, new, old)
 
-        caches = jax.tree.map(merge, caches, new_caches)
-        return _argmax_tokens(logits, cfg), caches
+        caches = jax.tree_util.tree_map_with_path(merge, caches, new_caches)
+        nxt = _sample_tokens(logits, cfg, key if sample else None,
+                             temperature, top_k)
+        return nxt, caches
 
     return decode_step
 

@@ -71,7 +71,8 @@ def param_spec(cfg: ModelConfig) -> Dict:
 # ---------------------------------------------------------------------------
 
 def _segment_apply(params_stacked, x, bcfg: BlockConfig, caches, positions, pos3d,
-                   odin, remat: str, norm_eps: float, moe_no_drop: bool = False):
+                   odin, remat: str, norm_eps: float, moe_no_drop: bool = False,
+                   tables=None):
     """Scan one homogeneous segment of layers over the sequence activations."""
     spec1 = block_spec(bcfg, x.shape[-1])
 
@@ -86,7 +87,8 @@ def _segment_apply(params_stacked, x, bcfg: BlockConfig, caches, positions, pos3
             is_leaf=lambda n: isinstance(n, ParamSpec),
         )
         y, c2 = block_apply(p, x, bcfg, cache=c, positions=positions, pos3d=pos3d,
-                            odin=odin, norm_eps=norm_eps, moe_no_drop=moe_no_drop)
+                            odin=odin, norm_eps=norm_eps, moe_no_drop=moe_no_drop,
+                            tables=tables)
         # pin the scanned activation sharding so carry propagation never
         # settles on "replicated" (no-op outside a logical_sharding context)
         y = constrain(y, ("batch", "act_seq", None))
@@ -104,14 +106,16 @@ def _segment_apply(params_stacked, x, bcfg: BlockConfig, caches, positions, pos3
 
 
 def forward(params, tokens, cfg: ModelConfig, caches=None, patch_embeds=None,
-            pos3d=None, start_pos=None, moe_no_drop: bool = False):
+            pos3d=None, start_pos=None, moe_no_drop: bool = False, tables=None):
     """tokens: [B,S] (or [B,K,S] multi-codebook) → (logits, new_caches).
 
     logits: [B,S,V] (or [B,S,K,V]).  ``caches``: list of per-segment stacked
     caches (or None for teacher-forced training).  ``start_pos``: absolute
     position of tokens[:, 0] (decode); defaults to 0.  ``moe_no_drop``:
     route without capacity dropping (serving paths — exact, per-token
-    deterministic routing; training keeps the capped capacity).
+    deterministic routing; training keeps the capped capacity).  ``tables``:
+    per-slot KV block tables [B, n_pages] when the caches carry the paged
+    block pool (one table serves every layer; scan-invariant).
     """
     odin = _odin(cfg)
     if cfg.n_codebooks > 1:
@@ -139,7 +143,8 @@ def forward(params, tokens, cfg: ModelConfig, caches=None, patch_embeds=None,
             new_caches.append(None)
         else:
             x, c2 = _segment_apply(params["segments"][i], x, bcfg, c, positions, pos3d,
-                                   odin, cfg.remat, cfg.norm_eps, moe_no_drop)
+                                   odin, cfg.remat, cfg.norm_eps, moe_no_drop,
+                                   tables=tables)
             new_caches.append(c2)
 
     hidden = x
@@ -152,13 +157,23 @@ def forward(params, tokens, cfg: ModelConfig, caches=None, patch_embeds=None,
     return logits, (new_caches if caches is not None else None), hidden
 
 
-def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
-    """Stacked per-segment decode caches (dtype defaults to cfg.kv_dtype)."""
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=None,
+                attn_override=None):
+    """Stacked per-segment decode caches (dtype defaults to cfg.kv_dtype).
+
+    ``attn_override(block_cfg) -> dict | None`` substitutes a segment's
+    attention cache before stacking (the serving layer swaps in the paged
+    block pool this way without materializing the dense layout first).
+    """
     if dtype is None:
         dtype = jnp.dtype(cfg.kv_dtype)
     out = []
     for b in cfg.blocks:
         one = block_cache(b, cfg.d_model, batch, max_len, dtype)
+        if attn_override is not None:
+            sub = attn_override(b)
+            if sub is not None:
+                one["attn"] = sub
         stacked = jax.tree.map(lambda a: jnp.broadcast_to(a, (b.n_layers, *a.shape)).copy()
                                if hasattr(a, "shape") else a, one)
         out.append(stacked)

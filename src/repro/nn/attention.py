@@ -9,6 +9,13 @@ Caches:
 * GQA: full ``k/v [B, S_max, H_kv, D]`` or, when ``window > 0``, a ring
   buffer of ``window`` entries (Hymba's sliding-window heads ⇒ O(window)
   state for the 500k-context cell).
+* Paged GQA (serving): the **physical block pool**
+  ``k_pool/v_pool [n_blocks+1, block_size, H_kv, D]`` shared by every slot;
+  per-slot block ``tables`` (passed alongside the cache — they are engine
+  state, one table for all layers) map logical pages to pool blocks.  Decode
+  attends in place via the Pallas paged kernel; device KV memory scales with
+  the pool, not ``slots × max_len``.  The last pool block is the write-off
+  target for inactive slots (``init_paged_cache``).
 * MLA: *compressed* latent ``c_kv [B, S_max, r]`` + shared ``k_rope`` — the
   paper-exact DeepSeek-V3 cache; decompression happens per KV chunk.
 
@@ -26,10 +33,17 @@ import numpy as np
 
 from repro.configs.base import AttnConfig
 from repro.core.odin_linear import OdinConfig
+from repro.kernels.paged_attn import paged_attention
 from repro.nn.layers import apply_mrope, apply_rope, linear, linear_spec, norm_spec, rmsnorm
 from repro.nn.module import ParamSpec
 
-__all__ = ["attn_spec", "attention", "init_cache", "DEFAULT_CHUNK", "KV_SCALE"]
+__all__ = ["attn_spec", "attention", "init_cache", "init_paged_cache",
+           "DEFAULT_CHUNK", "KV_SCALE", "POOL_LEAVES"]
+
+# Cache-leaf names of the paged physical KV store (block-pool layout); shared
+# by the serving step/swap machinery to tell pool leaves (no slot axis) from
+# per-slot leaves.
+POOL_LEAVES = ("k_pool", "v_pool")
 
 DEFAULT_CHUNK = 512
 NEG_INF = -1e30
@@ -94,6 +108,28 @@ def init_cache(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     return {
         "k": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.d_head), dtype),
         "v": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.d_head), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def init_paged_cache(cfg: AttnConfig, n_blocks: int, block_size: int,
+                     dtype=jnp.bfloat16):
+    """Paged physical KV store for one GQA layer (serving continuous batching).
+
+    One device-resident block pool ``[n_blocks+1, block_size, H_kv, D]`` per
+    K and V, shared by every serving slot; per-slot block tables (engine
+    state, threaded through the compiled steps) map logical pages to pool
+    blocks.  Block ``n_blocks`` is the *write-off block*: the decode step
+    points inactive slots' tables at it so their writes land somewhere
+    harmless without a per-slot select over the (slot-axis-free) pool.
+    Batch-independent — slot count is a property of the tables, not the pool.
+    """
+    if cfg.kind != "gqa" or cfg.window:
+        raise ValueError("paged cache supports non-windowed GQA only")
+    shape = (n_blocks + 1, block_size, cfg.n_kv_heads, cfg.d_head)
+    return {
+        "k_pool": jnp.zeros(shape, dtype),
+        "v_pool": jnp.zeros(shape, dtype),
         "pos": jnp.zeros((), jnp.int32),
     }
 
@@ -215,7 +251,46 @@ def _positions(batch: int, start, seq: int):
     return start + jnp.arange(seq, dtype=jnp.int32)[None, :] + jnp.zeros((batch, 1), jnp.int32)
 
 
-def _gqa_attention(p, x, cfg: AttnConfig, positions, pos3d, cache, odin):
+def _paged_gqa_core(q, k, v, cfg: AttnConfig, positions, cache, tables):
+    """Write the new K/V rows into the block pool and attend through it.
+
+    ``pos`` must be a per-slot [B] vector (paged caches exist only in the
+    serving layout); ``tables [B, P]`` maps each slot's logical pages to pool
+    blocks.  Decode (S == 1) runs the Pallas paged kernel — K/V blocks are
+    read in place from the pool; chunked prefill (S > 1) gathers the table's
+    pages once and reuses the blockwise/direct sdpa core (prefill is not the
+    per-token hot path, and its cost is O(max_len) regardless).
+    """
+    if tables is None:
+        raise ValueError("paged attention cache requires block tables")
+    B, S = q.shape[0], q.shape[1]
+    pos = cache["pos"]
+    kp, vp = cache["k_pool"], cache["v_pool"]
+    cdt = kp.dtype
+    bs = kp.shape[1]
+    rows = pos[:, None] + jnp.arange(S, dtype=jnp.int32)           # [B, S]
+    bids = jnp.take_along_axis(tables, rows // bs, axis=1)         # [B, S]
+    kp = kp.at[bids, rows % bs].set(_cache_write(k, cdt))
+    vp = vp.at[bids, rows % bs].set(_cache_write(v, cdt))
+    new_cache = {"k_pool": kp, "v_pool": vp, "pos": pos + S}
+    kv_scale = KV_SCALE if cdt == jnp.int8 else None
+    if S == 1:
+        o = paged_attention(q[:, 0], kp, vp, tables, pos + 1,
+                            window=cfg.window, kv_scale=kv_scale)[:, None]
+    else:
+        P = tables.shape[1]
+        Hkv, D = kp.shape[2], kp.shape[3]
+        ck = _cache_read(kp[tables].reshape(B, P * bs, Hkv, D), q.dtype)
+        cv = _cache_read(vp[tables].reshape(B, P * bs, Hkv, D), q.dtype)
+        slot_rows = jnp.arange(P * bs, dtype=jnp.int32)[None, :]
+        k_pos = jnp.where(slot_rows < (pos + S)[:, None], slot_rows,
+                          jnp.int32(2**30))
+        o = sdpa(q, ck, cv, positions, k_pos, cfg.window)
+    return o, new_cache
+
+
+def _gqa_attention(p, x, cfg: AttnConfig, positions, pos3d, cache, odin,
+                   tables=None):
     B, S, _ = x.shape
     H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
     q = linear(x, p["q"], odin).reshape(B, S, H, D)
@@ -235,6 +310,8 @@ def _gqa_attention(p, x, cfg: AttnConfig, positions, pos3d, cache, odin):
         k_pos = positions
         o = sdpa(q, k, v, positions, k_pos, cfg.window)
         new_cache = None
+    elif "k_pool" in cache:
+        o, new_cache = _paged_gqa_core(q, k, v, cfg, positions, cache, tables)
     else:
         pos = cache["pos"]
         size = cache["k"].shape[1]
@@ -345,8 +422,9 @@ def _mla_attention(p, x, cfg: AttnConfig, positions, cache, odin):
 
 
 def attention(p, x, cfg: AttnConfig, positions=None, pos3d=None, cache=None,
-              odin: Optional[OdinConfig] = None):
-    """Returns (output [B,S,d_model], new_cache)."""
+              odin: Optional[OdinConfig] = None, tables=None):
+    """Returns (output [B,S,d_model], new_cache).  ``tables`` are the per-slot
+    block tables of the paged serving cache (ignored by dense/MLA caches)."""
     B, S, _ = x.shape
     if positions is None:
         start = cache["pos"] if cache is not None else jnp.int32(0)
@@ -355,4 +433,4 @@ def attention(p, x, cfg: AttnConfig, positions=None, pos3d=None, cache=None,
         positions = _positions(B, start, S)
     if cfg.kind == "mla":
         return _mla_attention(p, x, cfg, positions, cache, odin)
-    return _gqa_attention(p, x, cfg, positions, pos3d, cache, odin)
+    return _gqa_attention(p, x, cfg, positions, pos3d, cache, odin, tables)

@@ -97,13 +97,15 @@ def block_cache(cfg: BlockConfig, d_model: int, batch: int, max_len: int, dtype=
 
 def block_apply(p, x, cfg: BlockConfig, cache=None, positions=None, pos3d=None,
                 odin: Optional[OdinConfig] = None, norm_eps: float = 1e-5,
-                moe_no_drop: bool = False):
-    """(params, x [B,S,d], cache) → (x', cache')."""
+                moe_no_drop: bool = False, tables=None):
+    """(params, x [B,S,d], cache) → (x', cache').  ``tables``: per-slot block
+    tables when the attention cache is the paged block pool (serving)."""
     new_cache = dict(cache) if cache is not None else None
     if cfg.kind in ("dense", "moe"):
         a, ac = attention(p["attn"], rmsnorm(x, p["ln1"], norm_eps), cfg.attn,
                           positions=positions, pos3d=pos3d,
-                          cache=None if cache is None else cache["attn"], odin=odin)
+                          cache=None if cache is None else cache["attn"], odin=odin,
+                          tables=tables)
         x = x + a
         h = rmsnorm(x, p["ln2"], norm_eps)
         if cfg.kind == "dense":
@@ -118,7 +120,8 @@ def block_apply(p, x, cfg: BlockConfig, cache=None, positions=None, pos3d=None,
     if cfg.kind == "hymba":
         h = rmsnorm(x, p["ln1"], norm_eps)
         a, ac = attention(p["attn"], h, cfg.attn, positions=positions, pos3d=pos3d,
-                          cache=None if cache is None else cache["attn"], odin=odin)
+                          cache=None if cache is None else cache["attn"], odin=odin,
+                          tables=tables)
         s, sc = ssm_block(p["ssm"], h, cfg.ssm,
                           state=None if cache is None else cache["ssm"], odin=odin)
         # Hymba fusion: per-branch output norm, learnable per-channel mix

@@ -3,24 +3,30 @@
 Two tiers, mirroring the classic paged-KV serving design:
 
 * :class:`BlockPool` — a pure-accounting free-list allocator over fixed-size
-  token blocks.  One pool instance budgets the *device* KV memory the live
-  ``[B_slots, S_max]`` serving caches represent; a second instance inside
+  token blocks.  One pool instance budgets the *device* KV memory — for
+  paged-capable attention families that budget IS the physical store (the
+  ``k_pool/v_pool`` leaves the paged-attention kernel indexes); for the
+  remaining dense families (MLA latents, sliding-window rings) it meters the
+  ``[B_slots, S_max]`` live-cache rows.  A second instance inside
   :class:`PagedKVStore` budgets the swap tier.  Requests hold their blocks in
   a per-sequence block table (``Request.block_table``) and grow it one block
   at a time as decode crosses block boundaries; admission control and
   preemption both key off this pool.
 
 * :class:`PagedKVStore` — block-granular storage for *preempted* sequences.
-  The live serving caches keep the dense layout the compiled step functions
-  (launch/steps.py) require, so paging materializes at the swap boundary:
-  ``swap_out`` scatters a slot's cache rows into ``[n_blocks, L, bs, ...]``
-  buffers (one per sequence-axis cache leaf — k/v, MLA c_kv/k_rope), and
-  ``swap_in`` gathers them back into a (possibly different) slot.  Leaves
-  without a sequence axis (SSM/xLSTM recurrent states, position vectors) are
-  O(1) per request and ride along in the :class:`SwapTicket`.
+  Two leaf families:
 
-A true paged-attention kernel that indexes blocks *inside* the compiled
-decode step is the natural follow-on (ROADMAP "Open items").
+  - **pool leaves** (``k_pool/v_pool`` — the physical paged store): swap is a
+    block-table handoff — ``swap_out`` copies the request's device blocks
+    (by id) into swap blocks, O(cached_len) data and no slot-shaped
+    reshuffle; ``swap_in`` copies them back into whatever device blocks the
+    scheduler hands the resumed request.
+  - **dense sequence leaves** (``k/v`` rings, MLA ``c_kv/k_rope``): the slot's
+    cache rows scatter/gather through ``[n_blocks, L, bs, ...]`` buffers as
+    before.
+
+  Leaves without a sequence axis (SSM/xLSTM recurrent states, position
+  vectors) are O(1) per request and ride along in the :class:`SwapTicket`.
 """
 from __future__ import annotations
 
@@ -30,10 +36,14 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.nn.attention import POOL_LEAVES
+
 __all__ = ["BlockPool", "PagedKVStore", "SwapTicket"]
 
-# Cache leaves with a sequence axis (axis 2 of the stacked [L, B, S, ...]
+# Dense cache leaves with a sequence axis (axis 2 of the stacked [L, B, S, ...]
 # layout) — the same key-name convention launch/specs.py's cache_pspecs uses.
+# POOL_LEAVES (k_pool/v_pool) are the paged physical store: [L, N+1, bs, ...],
+# no slot axis.
 SEQ_LEAVES = ("k", "v", "c_kv", "k_rope")
 
 
@@ -115,8 +125,19 @@ class PagedKVStore:
         self.block_size = block_size
         self.pool = BlockPool(n_blocks, block_size)
         self.bufs: Dict[str, jax.Array] = {}
+        self.pool_keys: set = set()
         for path, leaf in jax.tree_util.tree_flatten_with_path(caches)[0]:
-            if _leaf_name(path) in SEQ_LEAVES:
+            name = _leaf_name(path)
+            if name in POOL_LEAVES:
+                L, _, bs, *trail = leaf.shape
+                if bs != block_size:
+                    raise ValueError(
+                        f"pool leaf {_leaf_key(path)} block size {bs} != "
+                        f"store block size {block_size}")
+                self.bufs[_leaf_key(path)] = jnp.zeros(
+                    (n_blocks, L, block_size, *trail), leaf.dtype)
+                self.pool_keys.add(_leaf_key(path))
+            elif name in SEQ_LEAVES:
                 L, _, size, *trail = leaf.shape
                 if size % block_size:
                     raise ValueError(
@@ -129,13 +150,26 @@ class PagedKVStore:
         # ring-buffer leaves are smaller than the table they are filed under
         return min(nb, leaf.shape[2] // self.block_size)
 
-    def swap_out(self, caches, slot: int, block_ids: List[int], n_tokens: int) -> SwapTicket:
-        """Scatter ``slot``'s cache state into swap blocks; returns the ticket."""
+    def swap_out(self, caches, slot: int, block_ids: List[int], n_tokens: int,
+                 dev_ids: Optional[List[int]] = None) -> SwapTicket:
+        """Copy ``slot``'s cache state into swap blocks; returns the ticket.
+
+        ``dev_ids`` is the request's device block table at preemption time —
+        pool leaves copy those blocks directly (block-table handoff); dense
+        sequence leaves scatter the slot's rows as before.
+        """
         bs = self.block_size
         ids = jnp.asarray(block_ids, jnp.int32)
         ticket = SwapTicket(list(block_ids), n_tokens)
         for path, leaf in jax.tree_util.tree_flatten_with_path(caches)[0]:
             key = _leaf_key(path)
+            if key in self.pool_keys:
+                if dev_ids is None:
+                    raise ValueError(f"pool leaf {key} needs dev_ids to swap out")
+                nbl = min(len(block_ids), len(dev_ids))
+                seg = leaf[:, jnp.asarray(dev_ids[:nbl], jnp.int32)]  # [L,nbl,bs,..]
+                self.bufs[key] = self.bufs[key].at[ids[:nbl]].set(seg.swapaxes(0, 1))
+                continue
             sl = jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=1)
             if key in self.bufs:
                 nbl = self._nb_leaf(leaf, len(block_ids))
@@ -146,15 +180,27 @@ class PagedKVStore:
                 ticket.side[key] = sl
         return ticket
 
-    def swap_in(self, caches, slot: int, ticket: SwapTicket):
-        """Gather a ticket's state back into ``slot``; returns new caches."""
+    def swap_in(self, caches, slot: int, ticket: SwapTicket,
+                dev_ids: Optional[List[int]] = None):
+        """Copy a ticket's state back into ``slot``; returns new caches.
+
+        ``dev_ids``: the freshly allocated device block table of the resumed
+        request — pool leaves restore into those blocks (the table handoff's
+        other half).
+        """
         bs = self.block_size
         ids = jnp.asarray(ticket.block_ids, jnp.int32)
         flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
         out = []
         for path, leaf in flat:
             key = _leaf_key(path)
-            if key in self.bufs:
+            if key in self.pool_keys:
+                if dev_ids is None:
+                    raise ValueError(f"pool leaf {key} needs dev_ids to swap in")
+                nbl = min(len(ticket.block_ids), len(dev_ids))
+                seg = self.bufs[key][ids[:nbl]].swapaxes(0, 1)     # [L,nbl,bs,..]
+                out.append(leaf.at[:, jnp.asarray(dev_ids[:nbl], jnp.int32)].set(seg))
+            elif key in self.bufs:
                 nbl = self._nb_leaf(leaf, len(ticket.block_ids))
                 L, trail = leaf.shape[0], leaf.shape[3:]
                 seg = self.bufs[key][ids[:nbl]].swapaxes(0, 1).reshape(L, 1, nbl * bs, *trail)

@@ -6,17 +6,32 @@ caches, the device block pool, the swap-tier paged store, and the scheduler.
 Each ``step()``:
 
 1. asks the scheduler for a :class:`StepPlan` at the current clock,
-2. executes preemptions (swap-out scatter / recompute requeue), resumes
-   (swap-in gather) and admissions (chunked prefill; the prefill's last
+2. executes preemptions (swap-out copy / recompute requeue), resumes
+   (swap-in copy) and admissions (chunked prefill; the prefill's last
    logits yield the request's **first generated token**, so TTFT is stamped
    here),
 3. runs one fixed-shape ``[B_slots, 1]`` decode over every slot with the
    activity mask, appends tokens to their requests, retires finished
    requests, and frees their slots/blocks for the next step's admissions.
 
+For paged-capable attention families (non-windowed GQA) the device block
+pool IS the physical KV store: the caches hold ``k_pool/v_pool`` block
+arrays, the engine mirrors every running request's block table into a
+``[slots, n_pages]`` device array each step, prefill writes blocks directly,
+decode attends through the Pallas paged kernel, and swap-preemption is a
+block-to-block copy keyed by table ids instead of an O(max_len) slot-row
+scatter.  MLA and sliding-window families keep their dense/ring live caches
+behind the same block accounting.
+
 Everything runs at fixed ``[B_slots, S_max]`` / ``[B_slots, 1]`` shapes, so
 one compiled executable serves every request mix; only distinct prefill
 chunk lengths trace separately (bounded by the workload's length buckets).
+
+Sampling: ``temperature > 0`` switches the decode step (and the prefill's
+first token) from greedy argmax to temperature + top-k sampling with
+per-slot PRNG keys folded from ``sample_seed`` and the decode step counter.
+Greedy (the default) keeps the preemption-parity guarantee; sampled streams
+are deterministic for a fixed seed and schedule.
 
 Execution modes follow ``OdinConfig``: ``odin_mode="exact"`` runs the exact
 matmuls, ``"int8"`` the ODIN fixed-8-bit expected-value surrogate, ``"sc"``
@@ -33,10 +48,11 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.launch.steps import (init_serving_caches, make_serving_decode_step,
-                                make_slot_prefill_step)
+                                make_slot_prefill_step, pageable_block)
 from repro.models import lm
 from repro.nn import module as nnmod
-from repro.serving.blocks import BlockPool, PagedKVStore
+from repro.nn.attention import POOL_LEAVES
+from repro.serving.blocks import SEQ_LEAVES, BlockPool, PagedKVStore
 from repro.serving.metrics import EngineStats, OdinCostModel, summarize
 from repro.serving.scheduler import Request, Scheduler
 
@@ -58,6 +74,13 @@ class ServingEngine:
         falls back to recompute).
     prefill_chunk : chunked-prefill granularity (default: max_len, i.e. one
         chunk).  Smaller chunks bound the prefill executable's shape.
+    paged : use the paged physical KV store for paged-capable attention
+        families (non-windowed GQA).  ``False`` keeps the PR-1 dense
+        ``[slots, max_len]`` live caches everywhere (the benchmark baseline).
+    temperature / top_k / sample_seed : decode sampling (0 ⇒ greedy argmax).
+        Sampled streams are deterministic for a fixed seed and schedule, but
+        NOT preemption-invariant (a resume re-enters the per-step key
+        stream); greedy keeps the token-stream parity guarantee.
     odin_mode : override cfg.odin_mode ("exact" | "int8" | "sc").
     on_token : streaming callback ``(request, token, t_now)`` per emitted token.
     clock : monotonic seconds callable (injectable for deterministic tests).
@@ -66,6 +89,8 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, *, slots: int, max_len: int,
                  block_size: int = 16, n_blocks: Optional[int] = None,
                  swap_blocks: int = 0, prefill_chunk: Optional[int] = None,
+                 paged: bool = True, temperature: float = 0.0, top_k: int = 0,
+                 sample_seed: int = 0,
                  params=None, seed: int = 0, odin_mode: Optional[str] = None,
                  on_token: Optional[Callable] = None,
                  clock: Optional[Callable[[], float]] = None,
@@ -77,6 +102,8 @@ class ServingEngine:
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
+        self.block_size = block_size
+        self.n_pages = max_len // block_size
         # Default chunk is bounded: serving prefill routes MoE drop-free, so
         # its expert dispatch buffer scales with the chunk's token count —
         # an unbounded max_len default would pay [E, max_len, d] per layer on
@@ -89,30 +116,46 @@ class ServingEngine:
         self.on_token = on_token
         self._clock = clock or time.monotonic
         self._t0: Optional[float] = None
-
-        # ring buffers get `chunk` rows of headroom so chunked prefill is
-        # exact for sliding-window attention (steps.init_serving_caches)
-        self.caches = init_serving_caches(cfg, slots, max_len,
-                                          window_headroom=self.chunk,
-                                          round_to=block_size)
-        self._prefill = jax.jit(make_slot_prefill_step(
-            cfg, max_len, window_headroom=self.chunk, round_to=block_size))
-        self._decode = jax.jit(make_serving_decode_step(cfg), donate_argnums=(1,))
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        self.sample_seed = int(sample_seed)
+        self._sample_key = jax.random.PRNGKey(sample_seed)
 
         if n_blocks is None:
             n_blocks = slots * (max_len // block_size)
+        self.paged = paged and any(pageable_block(b) for b in cfg.blocks)
+
+        # ring buffers get `chunk` rows of headroom so chunked prefill is
+        # exact for sliding-window attention (steps.init_serving_caches);
+        # paged-capable segments get the physical block pool instead of a
+        # dense live cache — their device KV bytes are n_blocks·block_size
+        # rows, not slots·max_len.
+        self.caches = init_serving_caches(
+            cfg, slots, max_len, window_headroom=self.chunk,
+            round_to=block_size, block_size=block_size,
+            n_blocks=n_blocks if self.paged else 0)
+        self._prefill = jax.jit(make_slot_prefill_step(
+            cfg, max_len, window_headroom=self.chunk, round_to=block_size,
+            block_size=block_size, paged=self.paged))
+        self._decode = jax.jit(
+            make_serving_decode_step(cfg, top_k=self.top_k,
+                                     sample=self.temperature > 0),
+            donate_argnums=(1,))
+
         self.pool = BlockPool(n_blocks, block_size)
         self.store = (PagedKVStore(self.caches, swap_blocks, block_size)
                       if swap_blocks else None)
         self.sched = Scheduler(slots, self.pool, max_len,
                                swap_pool=self.store.pool if self.store else None)
         self.stats = EngineStats()
+        self.stats.kv_cache_bytes = self._kv_bytes()
         self.cost_model = OdinCostModel(attribution_cfg or cfg)
 
         K = cfg.n_codebooks
         tok_shape = (slots, K, 1) if K > 1 else (slots, 1)
         self._last_tok = jnp.zeros(tok_shape, jnp.int32)
         self._slot_len = np.zeros(slots, np.int32)
+        self._tables = np.zeros((slots, self.n_pages), np.int32)
         self._done: List[Request] = []
 
     # ------------------------------------------------------------------ util
@@ -122,9 +165,40 @@ class ServingEngine:
             self._t0 = self._clock()
         return self._clock() - self._t0
 
+    def _kv_bytes(self) -> int:
+        """Device bytes held by KV-bearing cache leaves (the paged-vs-dense
+        memory observable the serving benchmark records)."""
+        names = SEQ_LEAVES + POOL_LEAVES
+        return int(sum(
+            l.nbytes for p, l in jax.tree_util.tree_flatten_with_path(self.caches)[0]
+            if jax.tree_util.keystr(p[-1:]).strip("[]'\"") in names))
+
     def _set_last_tok(self, slot: int, tok) -> None:
         tok = jnp.asarray(tok, jnp.int32).reshape(self._last_tok.shape[1:])
         self._last_tok = self._last_tok.at[slot].set(tok)
+
+    def _sync_tables(self) -> None:
+        """Mirror running requests' block tables into the [slots, P] array the
+        compiled steps index.  Entries past a table's length are stale ids —
+        harmless, the kernel masks pages at or beyond the slot's length."""
+        for slot, req in self.sched.running.items():
+            bt = req.block_table
+            self._tables[slot, :len(bt)] = bt
+
+    def _first_token(self, last_logits, req: Request) -> np.ndarray:
+        """The request's first generated token from its prefill logits:
+        greedy, or the engine's temperature/top-k sampling with a per-request
+        key (host-side — prefill logits are already on the host path)."""
+        logits = np.asarray(last_logits, np.float32)[0]        # [V] or [K, V]
+        if self.temperature <= 0:
+            return np.argmax(logits, axis=-1).astype(np.int32)
+        if self.top_k:
+            kth = np.sort(logits, axis=-1)[..., -self.top_k, None]
+            logits = np.where(logits >= kth, logits, -np.inf)
+        rng = np.random.default_rng((self.sample_seed, req.rid))
+        z = logits / max(self.temperature, 1e-6) + rng.gumbel(size=logits.shape)
+        z = np.where(np.isfinite(logits), z, -np.inf)
+        return np.argmax(z, axis=-1).astype(np.int32)
 
     def _emit(self, req: Request, tok: np.ndarray, now: float) -> None:
         req.generated.append(tok)
@@ -178,6 +252,9 @@ class ServingEngine:
                                            dtype=pos3d.dtype)[:, None], 3, axis=1)
                 pos3d = np.concatenate([pos3d, tail], axis=0)
         t0 = time.perf_counter()
+        # prefill writes K/V blocks straight into the pool via this row
+        self._tables[req.slot, :len(req.block_table)] = req.block_table
+        tables = jnp.asarray(self._tables)
         start = 0
         ll = None
         while start < ntok:
@@ -191,7 +268,8 @@ class ServingEngine:
                     kw["pos3d"] = jnp.asarray(pos3d)[None][:, start:start + c]
             ll, self.caches = self._prefill(
                 self.params, self.caches, chunk_toks,
-                jnp.int32(req.slot), jnp.int32(start), jnp.bool_(start == 0), **kw)
+                jnp.int32(req.slot), jnp.int32(start), jnp.bool_(start == 0),
+                tables, **kw)
             start += c
         jax.block_until_ready(ll)
         self.stats.prefill_time += time.perf_counter() - t0
@@ -199,7 +277,7 @@ class ServingEngine:
         req.n_prefill_tokens += ntok
         self._slot_len[req.slot] = ntok
         if fresh:
-            tok = np.asarray(jnp.argmax(ll, axis=-1).astype(jnp.int32))[0]  # [] or [K]
+            tok = self._first_token(ll, req)                   # [] or [K]
             self._emit(req, tok, self._now())
             pending = tok
         else:
@@ -211,15 +289,16 @@ class ServingEngine:
         now = self._now()
         plan = self.sched.plan(now)
 
-        for req, mode, swap_ids, old_slot in plan.preempt:
+        for req, mode, swap_ids, old_slot, dev_ids in plan.preempt:
             if mode == "swap":
                 req.ticket = self.store.swap_out(
-                    self.caches, old_slot, swap_ids, req.cached_len)
+                    self.caches, old_slot, swap_ids, req.cached_len, dev_ids)
                 self.stats.preempt_swap += 1
             else:
                 self.stats.preempt_recompute += 1
         for req in plan.resume:
-            self.caches = self.store.swap_in(self.caches, req.slot, req.ticket)
+            self.caches = self.store.swap_in(self.caches, req.slot, req.ticket,
+                                             req.block_table)
             self.store.pool.free(req.ticket.block_ids)
             req.ticket = None
             self._slot_len[req.slot] = req.cached_len
@@ -237,9 +316,13 @@ class ServingEngine:
             t0 = time.perf_counter()
             active = np.zeros(self.slots, bool)
             active[active_slots] = True
+            self._sync_tables()          # growth may have extended tables
+            key = jax.random.fold_in(self._sample_key, self.stats.decode_steps)
             nxt, self.caches = self._decode(
                 self.params, self.caches, self._last_tok,
-                jnp.asarray(self._slot_len), jnp.asarray(active))
+                jnp.asarray(self._slot_len), jnp.asarray(active),
+                jnp.asarray(self._tables), key,
+                jnp.float32(self.temperature))
             host = np.asarray(nxt)                       # syncs the step
             self.stats.decode_time += time.perf_counter() - t0
             self.stats.decode_steps += 1

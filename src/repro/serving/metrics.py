@@ -38,6 +38,7 @@ class EngineStats:
     slot_steps: int = 0                   # Σ per decode step of total slots
     preempt_swap: int = 0
     preempt_recompute: int = 0
+    kv_cache_bytes: int = 0               # device bytes of KV-bearing leaves
 
     @property
     def occupancy(self) -> float:
@@ -134,6 +135,7 @@ def summarize(requests, stats: EngineStats, cost: Optional[OdinCostModel] = None
         "prefill_time_s": stats.prefill_time,
         "slot_occupancy": stats.occupancy,
         "preemptions": {"swap": stats.preempt_swap, "recompute": stats.preempt_recompute},
+        "kv_cache_bytes": stats.kv_cache_bytes,
     }
     if cost is not None:
         out["odin_total"] = cost.attribute(stats.prefill_tokens + stats.decode_tokens)

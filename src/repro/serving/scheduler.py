@@ -102,14 +102,18 @@ class Request:
 class StepPlan:
     """Device actions for one engine step.
 
-    ``preempt`` entries are ``(request, mode, swap_block_ids, old_slot)`` with
-    mode "swap" (engine scatters the slot into the listed swap blocks) or
-    "recompute" (nothing device-side; the request re-prefills on readmission).
-    ``resume``/``admit`` requests already have their new slot and device block
-    table assigned.
+    ``preempt`` entries are ``(request, mode, swap_block_ids, old_slot,
+    dev_block_ids)`` with mode "swap" (engine copies the request's device KV
+    blocks — ``dev_block_ids``, its block table at preemption time — into the
+    listed swap blocks) or "recompute" (nothing device-side; the request
+    re-prefills on readmission).  The device ids are snapshot *before* the
+    pool frees them; the engine's swap-out copy runs before anything written
+    this step (growth/prefill lands in the decode phase), so the handoff is
+    race-free within the step.  ``resume``/``admit`` requests already have
+    their new slot and device block table assigned.
     """
 
-    preempt: List[Tuple[Request, str, Optional[List[int]], int]] = field(default_factory=list)
+    preempt: List[Tuple[Request, str, Optional[List[int]], int, List[int]]] = field(default_factory=list)
     resume: List[Request] = field(default_factory=list)
     admit: List[Request] = field(default_factory=list)
 
@@ -173,6 +177,7 @@ class Scheduler:
         self.running.pop(old_slot)
         self.free_slots.append(old_slot)
         req.slot = -1
+        dev_ids = list(req.block_table)     # snapshot for the swap-out copy
         self.pool.free(req.block_table)
         req.block_table = []
         swap_ids = None
@@ -182,12 +187,12 @@ class Scheduler:
             req.state = RequestState.SWAPPED
             req.n_preempt_swap += 1
             self.swapped.append(req)
-            plan.preempt.append((req, "swap", swap_ids, old_slot))
+            plan.preempt.append((req, "swap", swap_ids, old_slot, dev_ids))
         else:
             req.state = RequestState.QUEUED
             req.n_preempt_recompute += 1
             heapq.heappush(self.waiting, (req.arrival, req.rid, req))
-            plan.preempt.append((req, "recompute", None, old_slot))
+            plan.preempt.append((req, "recompute", None, old_slot, dev_ids))
 
     def _place(self, req: Request, blocks: List[int], now: float) -> None:
         req.block_table = blocks

@@ -1,0 +1,115 @@
+"""Paged decode-attention kernel: kernel==reference across GQA geometries
+(incl. sliding window and int8 pools), and block-table parity against the
+dense decode path on random lengths — the contract that lets the serving
+engine swap its dense live cache for the physical block pool."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.paged_attn import paged_attention, paged_attn_ref
+from repro.nn.attention import KV_SCALE, _cache_write, sdpa
+
+
+def _rand_pool(rng, B, H, Hkv, D, bs, P, int8=False):
+    N = B * P + 3                      # spare blocks: tables never cover all
+    q = jnp.asarray(rng.normal(size=(B, H, D)) * 0.5, jnp.float32)
+    if int8:
+        kp = jnp.asarray(rng.integers(-127, 128, (N, bs, Hkv, D)), jnp.int8)
+        vp = jnp.asarray(rng.integers(-127, 128, (N, bs, Hkv, D)), jnp.int8)
+    else:
+        kp = jnp.asarray(rng.normal(size=(N, bs, Hkv, D)) * 0.5, jnp.float32)
+        vp = jnp.asarray(rng.normal(size=(N, bs, Hkv, D)) * 0.5, jnp.float32)
+    tables = jnp.asarray(rng.permutation(N)[:B * P].reshape(B, P), jnp.int32)
+    lengths = jnp.asarray(rng.integers(1, P * bs + 1, B), jnp.int32)
+    return q, kp, vp, tables, lengths
+
+
+@pytest.mark.parametrize("B,H,Hkv,D,bs,P,window,int8", [
+    (3, 4, 2, 16, 8, 6, 0, False),     # GQA
+    (2, 4, 4, 32, 16, 4, 0, False),    # MHA
+    (2, 8, 1, 16, 8, 5, 0, False),     # MQA
+    (2, 8, 2, 16, 8, 5, 12, False),    # sliding window
+    (1, 4, 2, 16, 4, 3, 5, False),     # window not block-aligned
+    (3, 4, 2, 16, 8, 6, 0, True),      # int8 fixed-point pool
+])
+def test_kernel_matches_reference(B, H, Hkv, D, bs, P, window, int8):
+    rng = np.random.default_rng(B * 100 + H)
+    q, kp, vp, tables, lengths = _rand_pool(rng, B, H, Hkv, D, bs, P, int8)
+    kv_scale = KV_SCALE if int8 else None
+    out_k = paged_attention(q, kp, vp, tables, lengths, window=window,
+                            kv_scale=kv_scale)
+    out_r = paged_attn_ref(q.reshape(B, Hkv, H // Hkv, D), kp, vp, tables,
+                           lengths, window=window, kv_scale=kv_scale
+                           ).reshape(B, H, D)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=2e-5)
+
+
+@pytest.mark.parametrize("int8", [False, True])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_block_table_parity_with_dense_decode(seed, int8):
+    """Scatter the same K/V rows into a permuted block pool: the paged kernel
+    must reproduce the dense decode attention at every random length."""
+    rng = np.random.default_rng(seed)
+    B, H, Hkv, D, bs, P = 3, 4, 2, 16, 8, 5
+    S = P * bs
+    q = jnp.asarray(rng.normal(size=(B, 1, H, D)) * 0.5, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)) * 0.5, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)) * 0.5, jnp.float32)
+    lengths = jnp.asarray(rng.integers(1, S + 1, B), jnp.int32)
+
+    # dense decode: visibility by position mask over the full cache
+    rows = jnp.arange(S, dtype=jnp.int32)[None, :]
+    k_pos = jnp.where(rows < lengths[:, None], rows, jnp.int32(2**30))
+    q_pos = (lengths - 1)[:, None]
+    cdt = jnp.int8 if int8 else jnp.float32
+    kq, vq = _cache_write(k, cdt), _cache_write(v, cdt)
+    kd = kq.astype(jnp.float32) / (KV_SCALE if int8 else 1.0)
+    vd = vq.astype(jnp.float32) / (KV_SCALE if int8 else 1.0)
+    dense = sdpa(q, kd, vd, q_pos, k_pos)[:, 0]
+
+    # paged: same rows through a shuffled block table
+    N = B * P + 2
+    tables = jnp.asarray(rng.permutation(N)[:B * P].reshape(B, P), jnp.int32)
+    kp = jnp.zeros((N, bs, Hkv, D), cdt)
+    vp = jnp.zeros((N, bs, Hkv, D), cdt)
+    bidx = tables[jnp.arange(B)[:, None], rows // bs]
+    kp = kp.at[bidx, rows % bs].set(kq)
+    vp = vp.at[bidx, rows % bs].set(vq)
+    paged = paged_attention(q[:, 0], kp, vp, tables, lengths,
+                            kv_scale=KV_SCALE if int8 else None)
+    np.testing.assert_allclose(np.asarray(paged), np.asarray(dense),
+                               atol=3e-5, rtol=1e-4)
+
+
+def test_zero_length_slot_yields_zeros_not_nan():
+    """Idle serving slots decode at length 0 — the kernel must emit exact
+    zeros (empty softmax), never NaN (which would poison activity-masked
+    engine steps)."""
+    rng = np.random.default_rng(0)
+    B, H, Hkv, D, bs, P = 2, 4, 2, 16, 8, 4
+    q, kp, vp, tables, _ = _rand_pool(rng, B, H, Hkv, D, bs, P)
+    lengths = jnp.asarray([0, 16], jnp.int32)
+    out = np.asarray(paged_attention(q, kp, vp, tables, lengths))
+    assert np.isfinite(out).all()
+    np.testing.assert_array_equal(out[0], 0.0)
+    assert np.abs(out[1]).max() > 0
+
+
+def test_stale_block_contents_invisible():
+    """Rows at or beyond a slot's length live in reallocated blocks that may
+    hold a previous occupant's K/V — they must not leak into the output."""
+    rng = np.random.default_rng(3)
+    B, H, Hkv, D, bs, P = 1, 4, 2, 16, 8, 4
+    q, kp, vp, tables, _ = _rand_pool(rng, B, H, Hkv, D, bs, P)
+    lengths = jnp.asarray([11], jnp.int32)
+    base = paged_attention(q, kp, vp, tables, lengths)
+    # poison every pool row the slot cannot see: rest of its own pages + all
+    # unreferenced blocks
+    rows = jnp.arange(P * bs, dtype=jnp.int32)
+    stale = rows >= lengths[0]
+    bids = tables[0, rows // bs]
+    kp2 = kp.at[bids[stale], (rows % bs)[stale]].set(99.0)
+    vp2 = vp.at[bids[stale], (rows % bs)[stale]].set(-99.0)
+    out = paged_attention(q, kp2, vp2, tables, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base), atol=1e-6)

@@ -37,6 +37,22 @@ def test_block_pool_alloc_free_reuse():
         pool.free([a[0], a[0]])                      # double free detected
     assert pool.alloc(4) is None                     # all-or-nothing
 
+def test_block_pool_exhaustion_and_validation():
+    pool = BlockPool(4, 2)
+    assert pool.alloc(0) == []                       # empty alloc is a no-op
+    with pytest.raises(ValueError):
+        pool.alloc(-1)
+    with pytest.raises(ValueError):
+        BlockPool(-1, 2)
+    with pytest.raises(ValueError):
+        BlockPool(4, 0)
+    a = pool.alloc(4)
+    assert pool.alloc(1) is None                     # exhausted
+    pool.free(a)
+    with pytest.raises(ValueError):
+        pool.free([a[0]])                            # double free after bulk free
+
+
 def test_block_pool_randomized_invariants():
     rng = np.random.default_rng(0)
     pool = BlockPool(32, 2)
@@ -179,6 +195,63 @@ def test_scheduler_randomized_stream_conserves_blocks_and_finishes():
 
 
 # ---------------------------------------------------------------------------
+# paged store: block-table handoff swap (jax, no model)
+# ---------------------------------------------------------------------------
+
+def test_paged_store_block_handoff_roundtrip_and_ticket_reuse():
+    """Pool-leaf swap is a block-to-block copy keyed by table ids: survive a
+    device-block clobber after swap-out, restore into *different* device
+    blocks, and reuse freed swap blocks for a second ticket without leakage."""
+    import jax
+    from repro.launch.steps import init_serving_caches
+    from repro.models import registry
+    from repro.serving.blocks import PagedKVStore
+    cfg = registry.get_smoke("phi4-mini-3.8b")
+    caches = init_serving_caches(cfg, batch=2, max_len=32, block_size=8,
+                                 n_blocks=8)
+    kp = caches[0]["attn"]["k_pool"]                 # [L, 9, 8, Hkv, D]
+    assert kp.shape[1] == 9                          # 8 blocks + write-off
+    caches[0]["attn"]["k_pool"] = kp.at[:, 1].set(1.0).at[:, 3].set(3.0)
+    caches[0]["attn"]["pos"] = caches[0]["attn"]["pos"].at[:, 0].set(12)
+
+    store = PagedKVStore(caches, n_blocks=4, block_size=8)
+    sids = store.pool.alloc(2)
+    ticket = store.swap_out(caches, slot=0, block_ids=sids, n_tokens=12,
+                            dev_ids=[1, 3])
+    # the freed device blocks get clobbered by other requests
+    caches[0]["attn"]["k_pool"] = caches[0]["attn"]["k_pool"].at[:, 1].set(-7.0).at[:, 3].set(-7.0)
+    # resume into a different slot AND different device blocks
+    caches2 = store.swap_in(caches, slot=1, ticket=ticket, dev_ids=[0, 2])
+    kp2 = np.asarray(caches2[0]["attn"]["k_pool"], np.float32)
+    np.testing.assert_array_equal(kp2[:, 0], 1.0)
+    np.testing.assert_array_equal(kp2[:, 2], 3.0)
+    assert int(caches2[0]["attn"]["pos"][0, 1]) == 12   # side leaf followed
+    # swap-block reuse: freed ids serve the next ticket with fresh contents
+    store.pool.free(ticket.block_ids)
+    sids2 = store.pool.alloc(2)
+    assert set(sids2) == set(sids)
+    caches2[0]["attn"]["k_pool"] = caches2[0]["attn"]["k_pool"].at[:, 5].set(5.0)
+    t2 = store.swap_out(caches2, slot=0, block_ids=sids2, n_tokens=4,
+                        dev_ids=[5])
+    caches3 = store.swap_in(caches2, slot=0, ticket=t2, dev_ids=[7])
+    np.testing.assert_array_equal(
+        np.asarray(caches3[0]["attn"]["k_pool"], np.float32)[:, 7], 5.0)
+
+
+def test_paged_store_requires_dev_ids_for_pool_leaves():
+    from repro.launch.steps import init_serving_caches
+    from repro.models import registry
+    from repro.serving.blocks import PagedKVStore
+    cfg = registry.get_smoke("phi4-mini-3.8b")
+    caches = init_serving_caches(cfg, batch=1, max_len=16, block_size=8,
+                                 n_blocks=4)
+    store = PagedKVStore(caches, n_blocks=2, block_size=8)
+    sids = store.pool.alloc(1)
+    with pytest.raises(ValueError):
+        store.swap_out(caches, 0, sids, 8)           # no dev_ids
+
+
+# ---------------------------------------------------------------------------
 # engine end-to-end (jax)
 # ---------------------------------------------------------------------------
 
@@ -296,6 +369,82 @@ def test_engine_vision_extras_survive_recompute_preemption():
     tight, n_rec = run(9)
     assert n_rec > 0
     assert full == tight
+
+
+def test_engine_paged_vs_dense_cache_parity():
+    """The paged physical block store must be token-for-token equal to the
+    PR-1 dense live cache, with and without memory pressure, while holding
+    measurably fewer device KV bytes on a tight pool."""
+    import jax
+    from repro.models import lm as lm_mod, registry
+    from repro.nn import module as nnmod
+    cfg = registry.get_smoke("phi4-mini-3.8b")
+    params = nnmod.materialize(lm_mod.param_spec(cfg), jax.random.PRNGKey(0))
+
+    def run(paged, n_blocks):
+        from repro.serving import ServingEngine, WorkloadSpec, make_requests
+        eng = ServingEngine(cfg, slots=3, max_len=48, block_size=8,
+                            n_blocks=n_blocks, params=params, paged=paged)
+        reqs = make_requests(cfg, WorkloadSpec(n_requests=5, rate=1e9,
+                                               prompt_buckets=(8, 16),
+                                               gen_buckets=(4, 24)), seed=9)
+        s = eng.run(reqs)
+        return ({r.rid: [int(np.asarray(t)) for t in r.generated] for r in reqs}, s)
+
+    dense, sd = run(False, None)
+    paged, sp = run(True, None)
+    tight, st = run(True, 7)                         # 18 dense-equivalent blocks → 7+1
+    assert dense == paged == tight
+    assert st["preemptions"]["recompute"] > 0        # pressure actually hit
+    assert st["kv_cache_bytes"] < sd["kv_cache_bytes"] / 2
+
+
+def test_engine_sampling_deterministic_per_seed():
+    """temperature/top-k decode: same seed reproduces the stream, different
+    seeds (and greedy) diverge; greedy stays the default contract."""
+    import jax
+    from repro.models import lm as lm_mod, registry
+    from repro.nn import module as nnmod
+    from repro.serving import Request, ServingEngine
+    cfg = registry.get_smoke("phi4-mini-3.8b")
+    params = nnmod.materialize(lm_mod.param_spec(cfg), jax.random.PRNGKey(0))
+
+    def run(temperature, top_k, sample_seed=0):
+        eng = ServingEngine(cfg, slots=2, max_len=32, block_size=8,
+                            params=params, temperature=temperature,
+                            top_k=top_k, sample_seed=sample_seed)
+        reqs = [Request(rid=i, prompt=np.arange(8, dtype=np.int32) + i,
+                        max_new=6) for i in range(3)]
+        eng.run(reqs)
+        return {r.rid: [int(np.asarray(t)) for t in r.generated] for r in reqs}
+
+    greedy = run(0.0, 0)
+    s1 = run(1.0, 5)
+    assert run(1.0, 5) == s1                         # deterministic per seed
+    assert s1 != greedy
+    assert run(1.0, 5, sample_seed=7) != s1
+
+
+def test_sample_tokens_top_k_membership_and_greedy():
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.steps import _sample_tokens
+    from repro.models import registry
+    cfg = registry.get_smoke("phi4-mini-3.8b")
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(4, 1, 32)), jnp.float32)
+    greedy = _sample_tokens(logits, cfg, None, 0.0, 0)
+    np.testing.assert_array_equal(
+        np.asarray(greedy)[:, 0], np.argmax(np.asarray(logits)[:, 0], -1))
+    # traced temperature 0 with a key still selects the argmax
+    z = _sample_tokens(logits, cfg, jax.random.PRNGKey(0), jnp.float32(0.0), 5)
+    np.testing.assert_array_equal(np.asarray(z), np.asarray(greedy))
+    top3 = np.argsort(np.asarray(logits)[:, 0], -1)[:, -3:]
+    for i in range(50):
+        s = np.asarray(_sample_tokens(logits, cfg, jax.random.PRNGKey(i),
+                                      jnp.float32(1.0), 3))[:, 0]
+        for b in range(4):
+            assert s[b] in top3[b], (b, s[b], top3[b])
 
 
 def test_engine_streaming_callback_and_order(smoke_setup):
