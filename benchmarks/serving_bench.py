@@ -1,5 +1,5 @@
 """Serving benchmark: paged block-store engine vs dense-cache engine vs the
-static-batch loop.
+static-batch loop, plus the horizon-batched decode sweep.
 
 Sweeps arrival rate × batch slots over a mixed-length request stream and
 reports decode throughput, TTFT/TPOT percentiles, slot occupancy, peak device
@@ -14,6 +14,13 @@ per cell, all token-for-token identical (greedy + deterministic schedule):
                      decode kernel), at the full block budget AND at a tight
                      pool (≈ half the dense-equivalent rows) that shows the
                      memory win the paged store exists for.
+
+The **horizon sweep** then runs the paged engine at ``horizon ∈ {1, 4, 16}``
+on the same mixed stream: each engine does one warmup pass (compiling every
+granted power-of-two executable) and one measured pass, reporting
+steady-state decode tok/s and tokens-per-dispatch.  ``--check-horizon``
+gates on ``H=16`` decode throughput ≥ 1.5× ``H=1`` with bit-identical greedy
+token streams.
 
 Results merge into ``BENCH_serving.json`` (section "serving") next to the
 kernel microbench so the perf trajectory is machine-readable across PRs.
@@ -82,10 +89,76 @@ def engine_run(cfg, requests, slots: int, rate: float, params=None,
     return summary, toks
 
 
+def horizon_sweep(cfg, base_requests, slots: int, params=None,
+                  horizons=(1, 4, 16), block_size: int = 16,
+                  verbose: bool = True):
+    """Paged engine at each horizon: warmup pass + measured pass.
+
+    The warmup pass compiles every horizon executable the schedule grants;
+    the measured pass re-runs the identical stream (all-arrived, greedy,
+    deterministic) and reads steady-state throughput off the stats deltas.
+    Greedy streams must be bit-identical across horizons.
+    """
+    if not horizons or horizons[0] != 1:
+        raise SystemExit(
+            f"--horizons must start with 1 (the parity/speedup baseline), "
+            f"got {list(horizons)}")
+    spec_max = max(r.prompt_len + r.max_new for r in base_requests)
+    max_len = -(-spec_max // block_size) * block_size
+
+    def fresh(rid0):
+        return [Request(rid=rid0 + r.rid, prompt=r.prompt, max_new=r.max_new,
+                        arrival=0.0) for r in base_requests]
+
+    cells, streams = [], []
+    for H in horizons:
+        engine = ServingEngine(cfg, slots=slots, max_len=max_len,
+                               block_size=block_size, params=params,
+                               paged=True, horizon=H)
+        engine.run(fresh(0))                       # warmup: compile all grants
+        st = engine.stats
+        toks0, time0 = st.decode_tokens, st.decode_time
+        disp0, sync0, steps0 = st.decode_dispatches, st.host_syncs, st.decode_steps
+        reqs = fresh(10_000)
+        engine.run(reqs)
+        d_toks = st.decode_tokens - toks0
+        cell = {
+            "horizon": H,
+            "tokens_per_s": d_toks / max(st.decode_time - time0, 1e-9),
+            "tokens_per_dispatch": d_toks / max(st.decode_dispatches - disp0, 1),
+            "decode_dispatches": st.decode_dispatches - disp0,
+            "host_syncs": st.host_syncs - sync0,
+            "decode_steps": st.decode_steps - steps0,
+            "decode_tokens": d_toks,
+        }
+        cells.append(cell)
+        streams.append(tuple(
+            tuple(tuple(np.asarray(t).ravel().tolist()) for t in r.generated)
+            for r in sorted(reqs, key=lambda r: r.rid)))
+        if verbose:
+            print(f"horizon H={H:2d}: {cell['tokens_per_s']:8.1f} tok/s  "
+                  f"{cell['tokens_per_dispatch']:6.2f} tok/dispatch  "
+                  f"{cell['decode_dispatches']:4d} dispatches")
+    base_tps = cells[0]["tokens_per_s"]
+    out = {
+        "slots": slots,
+        "cells": cells,
+        "tokens_match": bool(all(s == streams[0] for s in streams)),
+        "speedup_vs_h1": {c["horizon"]: c["tokens_per_s"] / max(base_tps, 1e-9)
+                          for c in cells},
+    }
+    if verbose:
+        best = max(out["speedup_vs_h1"].values())
+        print(f"horizon sweep: best {best:.2f}× decode tok/s vs H=1, "
+              f"tokens_match={out['tokens_match']}")
+    return out
+
+
 def run(verbose: bool = True, n_requests: int = 16, slots_sweep=(2, 4),
         rates=(float("inf"),), arch: str = "phi4-mini-3.8b",
         json_path=None, bench_json=None, check: bool = False,
-        check_paged: bool = False):
+        check_paged: bool = False, check_horizon: bool = False,
+        horizons=(1, 4, 16)):
     block_size = 16
     cfg = registry.get_smoke(arch)
     attribution_cfg = registry.get_config(arch)   # bill energy at full scale
@@ -165,6 +238,9 @@ def run(verbose: bool = True, n_requests: int = 16, slots_sweep=(2, 4),
     ratios = [c["kv_bytes_ratio"] for c in out["cells"] if c["kv_bytes_ratio"]]
     out["best_kv_bytes_ratio"] = max(ratios) if ratios else None
     out["all_tokens_match"] = all(c["tokens_match"] for c in out["cells"])
+    out["horizon"] = horizon_sweep(cfg, base_requests, max(slots_sweep),
+                                   params=params, horizons=tuple(horizons),
+                                   block_size=block_size, verbose=verbose)
     if verbose:
         print(f"best decode-throughput speedup over static batching: "
               f"{out['best_speedup']:.2f}×; paged vs dense engine: "
@@ -191,6 +267,14 @@ def run(verbose: bool = True, n_requests: int = 16, slots_sweep=(2, 4),
                 f"paged engine shows neither ≥1.3× decode throughput "
                 f"({out['best_paged_vs_dense_speedup']:.2f}×) nor ≥2× lower "
                 f"peak KV ({out['best_kv_bytes_ratio']}) vs the dense engine")
+    if check_horizon:
+        hz = out["horizon"]
+        if not hz["tokens_match"]:
+            raise SystemExit("horizon decode token streams diverge from H=1")
+        top = max(hz["speedup_vs_h1"].values())
+        if top < 1.5:
+            raise SystemExit(
+                f"horizon decode speedup {top:.2f}× < required 1.5× vs H=1")
     return out
 
 
@@ -210,11 +294,18 @@ def main():
                     help="exit non-zero unless the paged engine matches dense "
                          "token streams AND shows ≥1.3× tok/s or ≥2× lower "
                          "peak KV memory")
+    ap.add_argument("--check-horizon", action="store_true",
+                    help="exit non-zero unless horizon-batched decode shows "
+                         "≥1.5× tok/s at the top horizon vs H=1 with "
+                         "bit-identical greedy token streams")
+    ap.add_argument("--horizons", type=int, nargs="+", default=[1, 4, 16],
+                    help="horizon sweep values (first must be 1, the baseline)")
     args = ap.parse_args()
     rates = tuple(args.rates) if args.rates else (float("inf"),)
     run(n_requests=args.requests, slots_sweep=tuple(args.slots), rates=rates,
         arch=args.arch, json_path=args.json, bench_json=args.bench_json,
-        check=args.check, check_paged=args.check_paged)
+        check=args.check, check_paged=args.check_paged,
+        check_horizon=args.check_horizon, horizons=tuple(args.horizons))
 
 
 if __name__ == "__main__":

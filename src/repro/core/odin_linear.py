@@ -66,13 +66,18 @@ def get_luts(stream_len: int, n_levels: int, lut_seed: int, max_depth: int = 20)
     return lut_a, lut_w, selects
 
 
-def _rail_matmul(a_q, w_q, cfg: OdinConfig):
-    """One unipolar rail-pair product, returned in integer-dot units (Σ a·w)."""
+def _rail_matmul(a_q, w_q, cfg: OdinConfig, luts=None):
+    """One unipolar rail-pair product, returned in integer-dot units (Σ a·w).
+
+    ``luts`` is the shared ``(lut_a, lut_w, selects)`` bundle for sc mode —
+    fetched ONCE per :func:`odin_linear` call and reused across the four
+    signed-rail products instead of being re-derived per rail.
+    """
     spec = cfg.spec
     K = a_q.shape[-1]
     khat = 1 << sc.tree_depth(K)
     if cfg.mode == "sc":
-        lut_a, lut_w, selects = get_luts(cfg.stream_len, cfg.n_levels, cfg.lut_seed)
+        lut_a, lut_w, selects = luts
         block_k = cfg.sc_block_k
         if block_k and khat > block_k:
             # hybrid: per-block MUX subtree + popcount, binary accumulate
@@ -119,19 +124,21 @@ def odin_linear(x: jax.Array, w: jax.Array, cfg: OdinConfig = OdinConfig()) -> j
     K = x.shape[-1]
     x2 = x.reshape(-1, K)
 
+    luts = (get_luts(cfg.stream_len, cfg.n_levels, cfg.lut_seed)
+            if cfg.mode == "sc" else None)
     w_pos, w_neg, wq = quantize_signed_tworail(w)
     if cfg.signed_activations:
         a_pos, a_neg, aq = quantize_signed_tworail(x2)
         # (A⁺−A⁻)(W⁺−W⁻) — four unipolar trees, recombined in binary domain.
         out = (
-            _rail_matmul(a_pos, w_pos, cfg)
-            + _rail_matmul(a_neg, w_neg, cfg)
-            - _rail_matmul(a_pos, w_neg, cfg)
-            - _rail_matmul(a_neg, w_pos, cfg)
+            _rail_matmul(a_pos, w_pos, cfg, luts)
+            + _rail_matmul(a_neg, w_neg, cfg, luts)
+            - _rail_matmul(a_pos, w_neg, cfg, luts)
+            - _rail_matmul(a_neg, w_pos, cfg, luts)
         )
     else:
         a_q, aq = quantize_unipolar(x2)
-        out = _rail_matmul(a_q, w_pos, cfg) - _rail_matmul(a_q, w_neg, cfg)
+        out = _rail_matmul(a_q, w_pos, cfg, luts) - _rail_matmul(a_q, w_neg, cfg, luts)
 
     y = out * (aq.scale * wq.scale)
     return y.reshape(*lead, w.shape[-1]).astype(jnp.float32)

@@ -58,7 +58,7 @@ def _pack_last32(cmp_bits: jax.Array) -> jax.Array:
 
 
 def sc_mac_kernel(a_ref, w_ref, ranks_a_ref, ranks_w_ref, selects_ref, out_ref,
-                  *, depth: int, n_k_tiles: int):
+                  *, depth: int):
     """One grid step: out[bm, bn] (+)= popcount(MUXtree_bk(AND(SNG(a), SNG(w)))).
 
     a_ref: int32 [bm, bk]     — quantized activations (0..L-1; 0-padded)
@@ -125,7 +125,7 @@ def sc_mac_pallas_call(
     assert selects.shape[0] >= depth, (selects.shape, depth)
     n_k = K // block_k
 
-    kernel = functools.partial(sc_mac_kernel, depth=depth, n_k_tiles=n_k)
+    kernel = functools.partial(sc_mac_kernel, depth=depth)
     return pl.pallas_call(
         kernel,
         grid=(M // block_m, N // block_n, n_k),

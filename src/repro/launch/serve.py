@@ -140,6 +140,11 @@ def main():
     ap.add_argument("--no-paged", action="store_true",
                     help="keep the dense [slots, max_len] live caches instead "
                          "of the paged physical block store")
+    ap.add_argument("--horizon", type=int, default=1,
+                    help="max decode steps fused into one dispatch (power-of-"
+                         "two grants; 1 = per-token parity baseline)")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="token id that ends a request early (default: none)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy argmax)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -170,7 +175,8 @@ def main():
             block_size=block_size, n_blocks=args.kv_blocks,
             swap_blocks=args.swap_blocks, prefill_chunk=args.chunk,
             seed=args.seed, odin_mode=args.odin_mode,
-            paged=not args.no_paged, temperature=args.temperature,
+            paged=not args.no_paged, horizon=args.horizon, eos_id=args.eos_id,
+            temperature=args.temperature,
             top_k=args.top_k, sample_seed=args.sample_seed)
         summary = engine.run(make_requests(cfg, spec, seed=args.seed))
         print(json.dumps({k: v for k, v in summary.items() if k != "requests"}, indent=2))
@@ -184,6 +190,8 @@ def main():
                                  "prefill_chunk": args.chunk,
                                  "odin_mode": args.odin_mode,
                                  "paged": not args.no_paged,
+                                 "horizon": args.horizon,
+                                 "eos_id": args.eos_id,
                                  "temperature": args.temperature,
                                  "top_k": args.top_k,
                                  "sample_seed": args.sample_seed}

@@ -55,6 +55,7 @@ __all__ = [
     "init_serving_caches",
     "make_slot_prefill_step",
     "make_serving_decode_step",
+    "make_serving_decode_horizon",
     "pageable_block",
 ]
 
@@ -370,25 +371,93 @@ def make_serving_decode_step(cfg: ModelConfig, top_k: int = 0,
 
     def decode_step(params, caches, tokens, lengths, active, tables=None,
                     key=None, temperature=0.0):
-        trash = _pool_trash_block(caches)
-        if tables is not None and trash is not None:
-            tables = jnp.where(active[:, None], tables, jnp.int32(trash))
-        logits, new_caches, _ = lm.forward(params, tokens, cfg, caches=caches,
-                                           start_pos=lengths[:, None],
-                                           moe_no_drop=True, tables=tables)
-
-        def merge(path, old, new):
-            if _leaf_name(path) in POOL_LEAVES:
-                return new          # inactive writes went to the trash block
-            m = active.reshape((1, active.shape[0]) + (1,) * (old.ndim - 2))
-            return jnp.where(m, new, old)
-
-        caches = jax.tree_util.tree_map_with_path(merge, caches, new_caches)
-        nxt = _sample_tokens(logits, cfg, key if sample else None,
-                             temperature, top_k)
+        nxt, caches = _masked_decode(params, caches, tokens, lengths, active,
+                                     tables, key if sample else None,
+                                     temperature, cfg, top_k)
         return nxt, caches
 
     return decode_step
+
+
+def _masked_decode(params, caches, tokens, lengths, active, tables, key,
+                   temperature, cfg: ModelConfig, top_k: int):
+    """One activity-masked decode over all slots (the shared body of the
+    single-step and horizon serving decode).  Returns (next_tokens, caches)."""
+    trash = _pool_trash_block(caches)
+    if tables is not None and trash is not None:
+        tables = jnp.where(active[:, None], tables, jnp.int32(trash))
+    logits, new_caches, _ = lm.forward(params, tokens, cfg, caches=caches,
+                                       start_pos=lengths[:, None],
+                                       moe_no_drop=True, tables=tables)
+
+    def merge(path, old, new):
+        if _leaf_name(path) in POOL_LEAVES:
+            return new              # inactive writes went to the trash block
+        m = active.reshape((1, active.shape[0]) + (1,) * (old.ndim - 2))
+        return jnp.where(m, new, old)
+
+    caches = jax.tree_util.tree_map_with_path(merge, caches, new_caches)
+    nxt = _sample_tokens(logits, cfg, key, temperature, top_k)
+    return nxt, caches
+
+
+def make_serving_decode_horizon(cfg: ModelConfig, H: int, top_k: int = 0,
+                                sample: bool = False) -> Callable:
+    """``H`` decode steps fused into ONE compiled dispatch (``lax.scan``).
+
+    (params, caches, tokens [B,1], lengths [B], active [B], remaining [B],
+     tables [B,P], key, temperature, step0, eos_id)
+        → (token_block [B, H] (or [B, K, H]), counts [B],
+           last_tokens [B, 1] (or [B, K, 1]), caches)
+
+    Each inner step runs the same activity-masked decode as
+    :func:`make_serving_decode_step` and feeds the sampled/argmaxed token back
+    as the next step's input **on-device** — the host pays one dispatch and
+    one sync for ``H`` tokens instead of ``H`` of each.  Per-slot freezing
+    happens mid-horizon on-device: a slot leaves the activity mask once its
+    ``remaining`` generation budget hits zero or it emits ``eos_id``
+    (``eos_id < 0`` disables EOS).  Frozen slots keep flowing through the
+    fixed-shape forward, but their cache updates are discarded, their lengths
+    stop advancing, and their later tokens are not counted.
+
+    ``counts[s]`` is the number of valid tokens for slot ``s`` — because
+    freezing is monotone, slot ``s``'s valid tokens are exactly
+    ``token_block[s, ..., :counts[s]]``.  ``step0`` is the engine's global
+    decode-step counter at horizon entry: inner step ``h`` draws its sampling
+    key as ``fold_in(key, step0 + h)``, the same schedule the single-step
+    path uses, so a horizon run is token-identical to ``H`` single steps
+    (greedy always; sampled whenever the slot schedule matches).
+    """
+
+    def horizon_step(params, caches, tokens, lengths, active, remaining,
+                     tables=None, key=None, temperature=0.0,
+                     step0=0, eos_id=-1):
+        B = lengths.shape[0]
+        tok_mask_shape = (B,) + (1,) * (tokens.ndim - 1)
+
+        def inner(carry, h):
+            caches, tok, lengths, act, rem = carry
+            k = jax.random.fold_in(key, step0 + h) if sample else None
+            nxt, caches = _masked_decode(params, caches, tok, lengths, act,
+                                         tables, k, temperature, cfg, top_k)
+            # EOS on the first codebook (single-codebook: the token itself)
+            first = nxt.reshape(B, -1)[:, 0]
+            hit_eos = (eos_id >= 0) & (first == eos_id)
+            rem = rem - act.astype(jnp.int32)
+            lengths = lengths + act.astype(jnp.int32)
+            new_act = act & (rem > 0) & ~hit_eos
+            tok = jnp.where(act.reshape(tok_mask_shape), nxt, tok)
+            return (caches, tok, lengths, new_act, rem), (nxt, act)
+
+        (caches, tok, lengths, act, rem), (toks, emitted) = jax.lax.scan(
+            inner, (caches, tokens, lengths, active, remaining),
+            jnp.arange(H, dtype=jnp.int32))
+        counts = emitted.astype(jnp.int32).sum(axis=0)              # [B]
+        # toks: [H, B, 1] or [H, B, K, 1] → [B, H] / [B, K, H]
+        block = jnp.moveaxis(toks[..., 0], 0, -1)
+        return block, counts, tok, caches
+
+    return horizon_step
 
 
 # ---------------------------------------------------------------------------

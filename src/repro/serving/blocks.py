@@ -99,6 +99,22 @@ class BlockPool:
             self._allocated.remove(b)
             self._free.append(b)
 
+    def extend_to(self, table: List[int], n_tokens: int) -> bool:
+        """Grow a block table in place until it covers ``n_tokens`` cache rows.
+
+        All-or-nothing like :meth:`alloc`: returns False (table unchanged)
+        when the pool cannot supply every missing block.  Shared by the
+        scheduler's per-step growth and the horizon pre-reservation.
+        """
+        need = self.blocks_for(n_tokens)
+        if need <= len(table):
+            return True
+        got = self.alloc(need - len(table))
+        if got is None:
+            return False
+        table.extend(got)
+        return True
+
 
 @dataclass
 class SwapTicket:

@@ -10,9 +10,17 @@ Each ``step()``:
    (swap-in copy) and admissions (chunked prefill; the prefill's last
    logits yield the request's **first generated token**, so TTFT is stamped
    here),
-3. runs one fixed-shape ``[B_slots, 1]`` decode over every slot with the
-   activity mask, appends tokens to their requests, retires finished
-   requests, and frees their slots/blocks for the next step's admissions.
+3. runs a fixed-shape decode over every slot with the activity mask —
+   either one ``[B_slots, 1]`` step (``horizon=1``, the parity baseline) or
+   a **horizon-batched** dispatch (``horizon>1``): the scheduler grants the
+   largest safe number of lockstep steps (``grant_horizon``), pre-extends
+   block tables for all of them, and one compiled ``lax.scan`` generates up
+   to ``h`` tokens per slot on-device, feeding each sampled token back as
+   the next input and freezing slots mid-horizon at EOS or budget
+   exhaustion.  The host pays ONE dispatch and ONE sync per horizon instead
+   of per token — emitted tokens get interpolated timestamps — then appends
+   tokens, retires finished requests, and frees their slots/blocks for the
+   next step's admissions.
 
 For paged-capable attention families (non-windowed GQA) the device block
 pool IS the physical KV store: the caches hold ``k_pool/v_pool`` block
@@ -47,7 +55,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.launch.steps import (init_serving_caches, make_serving_decode_step,
+from repro.launch.steps import (init_serving_caches,
+                                make_serving_decode_horizon,
+                                make_serving_decode_step,
                                 make_slot_prefill_step, pageable_block)
 from repro.models import lm
 from repro.nn import module as nnmod
@@ -77,19 +87,32 @@ class ServingEngine:
     paged : use the paged physical KV store for paged-capable attention
         families (non-windowed GQA).  ``False`` keeps the PR-1 dense
         ``[slots, max_len]`` live caches everywhere (the benchmark baseline).
+    horizon : max decode steps fused into one dispatch.  1 (default) is the
+        single-step parity baseline; >1 asks ``Scheduler.grant_horizon`` for
+        the largest safe power-of-two grant each step and runs the fused
+        on-device loop.  Greedy token streams are identical for every
+        horizon; sampled streams match whenever the slot schedule does (the
+        per-step key folds the *global* decode-step counter either way).
+    eos_id : token id that ends a request early (None disables; multi-
+        codebook models match on the first codebook).  Checked on-device
+        inside horizons and host-side everywhere else.
     temperature / top_k / sample_seed : decode sampling (0 ⇒ greedy argmax).
         Sampled streams are deterministic for a fixed seed and schedule, but
         NOT preemption-invariant (a resume re-enters the per-step key
         stream); greedy keeps the token-stream parity guarantee.
     odin_mode : override cfg.odin_mode ("exact" | "int8" | "sc").
-    on_token : streaming callback ``(request, token, t_now)`` per emitted token.
+    on_token : streaming callback ``(request, token, t_now)`` per emitted
+        token.  Inside a horizon, per-token timestamps are interpolated
+        across the dispatch's wall time (TTFT from prefill stays exact).
     clock : monotonic seconds callable (injectable for deterministic tests).
     """
 
     def __init__(self, cfg: ModelConfig, *, slots: int, max_len: int,
                  block_size: int = 16, n_blocks: Optional[int] = None,
                  swap_blocks: int = 0, prefill_chunk: Optional[int] = None,
-                 paged: bool = True, temperature: float = 0.0, top_k: int = 0,
+                 paged: bool = True, horizon: int = 1,
+                 eos_id: Optional[int] = None,
+                 temperature: float = 0.0, top_k: int = 0,
                  sample_seed: int = 0,
                  params=None, seed: int = 0, odin_mode: Optional[str] = None,
                  on_token: Optional[Callable] = None,
@@ -99,6 +122,8 @@ class ServingEngine:
             cfg = cfg.with_overrides(odin_mode=odin_mode)
         if max_len % block_size:
             raise ValueError(f"max_len {max_len} not divisible by block_size {block_size}")
+        if horizon < 1:
+            raise ValueError(f"horizon must be >= 1, got {horizon}")
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
@@ -120,6 +145,8 @@ class ServingEngine:
         self.top_k = int(top_k)
         self.sample_seed = int(sample_seed)
         self._sample_key = jax.random.PRNGKey(sample_seed)
+        self.horizon = int(horizon)
+        self.eos_id = None if eos_id is None else int(eos_id)
 
         if n_blocks is None:
             n_blocks = slots * (max_len // block_size)
@@ -141,6 +168,8 @@ class ServingEngine:
             make_serving_decode_step(cfg, top_k=self.top_k,
                                      sample=self.temperature > 0),
             donate_argnums=(1,))
+        # horizon executables, one per granted power-of-two h (built lazily)
+        self._decode_horizon: Dict[int, Callable] = {}
 
         self.pool = BlockPool(n_blocks, block_size)
         self.store = (PagedKVStore(self.caches, swap_blocks, block_size)
@@ -156,6 +185,8 @@ class ServingEngine:
         self._last_tok = jnp.zeros(tok_shape, jnp.int32)
         self._slot_len = np.zeros(slots, np.int32)
         self._tables = np.zeros((slots, self.n_pages), np.int32)
+        self._tables_dev = jnp.asarray(self._tables)
+        self._synced_version = self.sched.table_version
         self._done: List[Request] = []
 
     # ------------------------------------------------------------------ util
@@ -177,13 +208,22 @@ class ServingEngine:
         tok = jnp.asarray(tok, jnp.int32).reshape(self._last_tok.shape[1:])
         self._last_tok = self._last_tok.at[slot].set(tok)
 
-    def _sync_tables(self) -> None:
-        """Mirror running requests' block tables into the [slots, P] array the
-        compiled steps index.  Entries past a table's length are stale ids —
-        harmless, the kernel masks pages at or beyond the slot's length."""
-        for slot, req in self.sched.running.items():
-            bt = req.block_table
-            self._tables[slot, :len(bt)] = bt
+    def _refresh_tables(self) -> jax.Array:
+        """Device mirror of running requests' block tables ([slots, P] int32).
+
+        Dirty-tracked against ``Scheduler.table_version``: the host loop and
+        the host→device upload only run on steps where some table actually
+        changed (growth, admission, preemption, resume, completion, horizon
+        pre-extension) — steady-state decode reuses the cached device array.
+        Entries past a table's length are stale ids — harmless, the kernel
+        masks pages at or beyond the slot's length."""
+        if self._synced_version != self.sched.table_version:
+            for slot, req in self.sched.running.items():
+                bt = req.block_table
+                self._tables[slot, :len(bt)] = bt
+            self._tables_dev = jnp.asarray(self._tables)
+            self._synced_version = self.sched.table_version
+        return self._tables_dev
 
     def _first_token(self, last_logits, req: Request) -> np.ndarray:
         """The request's first generated token from its prefill logits:
@@ -203,6 +243,8 @@ class ServingEngine:
     def _emit(self, req: Request, tok: np.ndarray, now: float) -> None:
         req.generated.append(tok)
         self.stats.generated_tokens += 1
+        if self.eos_id is not None and int(np.ravel(tok)[0]) == self.eos_id:
+            req.eos = True                 # first codebook, same as on-device
         if req.t_first_token is None:
             req.t_first_token = now
         if self.on_token is not None:
@@ -253,8 +295,8 @@ class ServingEngine:
                 pos3d = np.concatenate([pos3d, tail], axis=0)
         t0 = time.perf_counter()
         # prefill writes K/V blocks straight into the pool via this row
-        self._tables[req.slot, :len(req.block_table)] = req.block_table
-        tables = jnp.asarray(self._tables)
+        # (admission bumped table_version, so the mirror refreshes here)
+        tables = self._refresh_tables()
         start = 0
         ll = None
         while start < ntok:
@@ -270,8 +312,10 @@ class ServingEngine:
                 self.params, self.caches, chunk_toks,
                 jnp.int32(req.slot), jnp.int32(start), jnp.bool_(start == 0),
                 tables, **kw)
+            self.stats.dispatches += 1
             start += c
         jax.block_until_ready(ll)
+        self.stats.host_syncs += 1
         self.stats.prefill_time += time.perf_counter() - t0
         self.stats.prefill_tokens += ntok
         req.n_prefill_tokens += ntok
@@ -313,32 +357,107 @@ class ServingEngine:
 
         active_slots = sorted(self.sched.running)
         if active_slots:
-            t0 = time.perf_counter()
-            active = np.zeros(self.slots, bool)
-            active[active_slots] = True
-            self._sync_tables()          # growth may have extended tables
-            key = jax.random.fold_in(self._sample_key, self.stats.decode_steps)
-            nxt, self.caches = self._decode(
-                self.params, self.caches, self._last_tok,
-                jnp.asarray(self._slot_len), jnp.asarray(active),
-                jnp.asarray(self._tables), key,
-                jnp.float32(self.temperature))
-            host = np.asarray(nxt)                       # syncs the step
-            self.stats.decode_time += time.perf_counter() - t0
-            self.stats.decode_steps += 1
-            self.stats.active_slot_steps += len(active_slots)
-            self.stats.slot_steps += self.slots
-            self._last_tok = nxt
-            now = self._now()
-            for s in active_slots:
-                req = self.sched.running[s]
-                self._slot_len[s] += 1
-                self.stats.decode_tokens += 1
-                self._emit(req, host[s, ..., 0], now)
-                if req.done:
-                    self._complete(req, now)
+            h = 1
+            if self.horizon > 1:
+                h = self.sched.grant_horizon(self.horizon, now,
+                                             self._est_step_time())
+            if h > 1:
+                self._decode_horizon_steps(active_slots, h)
+            else:
+                self._decode_single_step(active_slots)
         self.stats.steps += 1
         return self.sched.has_work
+
+    def _decode_single_step(self, active_slots: List[int]) -> None:
+        """One ``[slots, 1]`` decode dispatch (the horizon=1 parity baseline)."""
+        t0 = time.perf_counter()
+        active = np.zeros(self.slots, bool)
+        active[active_slots] = True
+        tables = self._refresh_tables()  # growth may have extended tables
+        key = jax.random.fold_in(self._sample_key, self.stats.decode_steps)
+        nxt, self.caches = self._decode(
+            self.params, self.caches, self._last_tok,
+            jnp.asarray(self._slot_len), jnp.asarray(active),
+            tables, key, jnp.float32(self.temperature))
+        host = np.asarray(nxt)                       # syncs the step
+        self.stats.decode_time += time.perf_counter() - t0
+        self.stats.decode_steps += 1
+        self.stats.dispatches += 1
+        self.stats.decode_dispatches += 1
+        self.stats.host_syncs += 1
+        self.stats.active_slot_steps += len(active_slots)
+        self.stats.slot_steps += self.slots
+        self._last_tok = nxt
+        now = self._now()
+        for s in active_slots:
+            req = self.sched.running[s]
+            self._slot_len[s] += 1
+            self.stats.decode_tokens += 1
+            self._emit(req, host[s, ..., 0], now)
+            if req.done:
+                self._complete(req, now)
+
+    def _decode_horizon_steps(self, active_slots: List[int], h: int) -> None:
+        """One fused dispatch generating up to ``h`` tokens per slot.
+
+        The scheduler has already pre-extended every running table for ``h``
+        rows (``grant_horizon``); slots freeze on-device at EOS / budget
+        exhaustion, so the returned per-slot ``counts`` tell the host which
+        prefix of each slot's ``[h]`` token row is real.  Per-token
+        timestamps are linearly interpolated over the dispatch's span *of the
+        engine clock* (the host cannot observe inner-step boundaries — that
+        is the point; an injected test clock stays self-consistent)."""
+        t0 = time.perf_counter()
+        t_before = self._now()
+        active = np.zeros(self.slots, bool)
+        active[active_slots] = True
+        rem = np.zeros(self.slots, np.int32)
+        for s in active_slots:
+            rem[s] = self.sched.running[s].remaining
+        tables = self._refresh_tables()
+        block, counts, last, self.caches = self._horizon_fn(h)(
+            self.params, self.caches, self._last_tok,
+            jnp.asarray(self._slot_len), jnp.asarray(active),
+            jnp.asarray(rem), tables, self._sample_key,
+            jnp.float32(self.temperature),
+            jnp.int32(self.stats.decode_steps),
+            jnp.int32(-1 if self.eos_id is None else self.eos_id))
+        block, counts = jax.device_get((block, counts))   # ONE sync for h steps
+        self.stats.decode_time += time.perf_counter() - t0
+        self.stats.decode_steps += h
+        self.stats.dispatches += 1
+        self.stats.decode_dispatches += 1
+        self.stats.host_syncs += 1
+        self.stats.active_slot_steps += int(counts.sum())
+        self.stats.slot_steps += self.slots * h
+        self._last_tok = last
+        span = self._now() - t_before            # engine-clock dispatch span
+        for hh in range(h):                      # step-major: matches h=1 order
+            t_h = t_before + (hh + 1) * span / h
+            for s in active_slots:
+                if hh < counts[s]:
+                    self._slot_len[s] += 1
+                    self.stats.decode_tokens += 1
+                    self._emit(self.sched.running[s], block[s, ..., hh], t_h)
+        for s in active_slots:
+            req = self.sched.running[s]
+            if req.done:
+                self._complete(req, t_before + int(counts[s]) * span / h)
+
+    def _horizon_fn(self, h: int) -> Callable:
+        fn = self._decode_horizon.get(h)
+        if fn is None:
+            fn = jax.jit(
+                make_serving_decode_horizon(self.cfg, h, top_k=self.top_k,
+                                            sample=self.temperature > 0),
+                donate_argnums=(1,))
+            self._decode_horizon[h] = fn
+        return fn
+
+    def _est_step_time(self) -> float:
+        """Measured seconds per decode token step (0 until the first step)."""
+        return (self.stats.decode_time / self.stats.decode_steps
+                if self.stats.decode_steps else 0.0)
 
     def run(self, requests: Sequence[Request] = (), max_steps: int = 100_000) -> Dict:
         """Submit ``requests``, drive the loop until drained, return the

@@ -28,7 +28,7 @@ class EngineStats:
     """Counters the engine accumulates across its step loop."""
 
     steps: int = 0
-    decode_steps: int = 0
+    decode_steps: int = 0                 # decode *token* steps (horizon inner)
     decode_time: float = 0.0
     prefill_time: float = 0.0
     prefill_tokens: int = 0
@@ -36,6 +36,9 @@ class EngineStats:
     decode_tokens: int = 0                # tokens emitted by decode steps only
     active_slot_steps: int = 0            # Σ per decode step of active slots
     slot_steps: int = 0                   # Σ per decode step of total slots
+    dispatches: int = 0                   # compiled-step launches (prefill+decode)
+    decode_dispatches: int = 0            # decode launches only (horizon = 1)
+    host_syncs: int = 0                   # blocking device→host syncs
     preempt_swap: int = 0
     preempt_recompute: int = 0
     kv_cache_bytes: int = 0               # device bytes of KV-bearing leaves
@@ -50,6 +53,13 @@ class EngineStats:
         The first token of each request comes out of *prefill* and must not
         inflate this number (its cost sits in prefill_time)."""
         return self.decode_tokens / max(1e-9, self.decode_time)
+
+    @property
+    def tokens_per_dispatch(self) -> float:
+        """Decode tokens amortized per compiled decode launch — the horizon
+        amortization as a first-class observable (1.0 ⇒ no amortization;
+        approaches the granted horizon as slots stay busy)."""
+        return self.decode_tokens / max(1, self.decode_dispatches)
 
 
 class OdinCostModel:
@@ -131,6 +141,10 @@ def summarize(requests, stats: EngineStats, cost: Optional[OdinCostModel] = None
         "prefill_tokens": stats.prefill_tokens,
         "steps": stats.steps,
         "decode_steps": stats.decode_steps,
+        "dispatches": stats.dispatches,
+        "decode_dispatches": stats.decode_dispatches,
+        "host_syncs": stats.host_syncs,
+        "tokens_per_dispatch": stats.tokens_per_dispatch,
         "decode_time_s": stats.decode_time,
         "prefill_time_s": stats.prefill_time,
         "slot_occupancy": stats.occupancy,

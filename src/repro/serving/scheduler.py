@@ -27,6 +27,13 @@ Per step, in order:
 
 Steps 2–3 are skipped on any step that preempted, so blocks freed under
 memory pressure relieve the pressure instead of thrashing.
+
+For horizon-batched decode the engine follows ``plan`` with
+:meth:`Scheduler.grant_horizon`, which returns the largest safe number of
+lockstep decode steps for one fused dispatch and pre-extends every running
+block table to cover it (see the method docstring for the three caps).
+``table_version`` increments on every block-table/slot mutation so the
+engine's device mirror of the tables re-uploads only when something changed.
 """
 from __future__ import annotations
 
@@ -70,6 +77,7 @@ class Request:
     slot: int = -1
     generated: List = field(default_factory=list)
     block_table: List[int] = field(default_factory=list)
+    eos: bool = False                     # emitted the engine's eos_id
     ticket: object = None                 # SwapTicket while SWAPPED
     n_prefill_tokens: int = 0             # includes recompute re-prefills
     n_preempt_swap: int = 0
@@ -94,8 +102,13 @@ class Request:
         return self.prompt_len + max(0, self.n_generated - 1)
 
     @property
+    def remaining(self) -> int:
+        """Decode budget left: tokens this request may still emit."""
+        return max(0, self.max_new - self.n_generated)
+
+    @property
     def done(self) -> bool:
-        return self.n_generated >= self.max_new
+        return self.eos or self.n_generated >= self.max_new
 
 
 @dataclass
@@ -129,6 +142,9 @@ class Scheduler:
         self.swapped: deque = deque()
         self.running: Dict[int, Request] = {}                  # slot → request
         self.free_slots: List[int] = list(range(n_slots - 1, -1, -1))
+        # bumped whenever any request's block table (or slot binding) changes;
+        # the engine re-mirrors its device table array only when this moves
+        self.table_version: int = 0
 
     # -- queries ------------------------------------------------------------
 
@@ -163,6 +179,7 @@ class Scheduler:
         req.slot = -1
         req.state = RequestState.DONE
         req.t_done = now
+        self.table_version += 1
 
     # -- planning -----------------------------------------------------------
 
@@ -180,6 +197,7 @@ class Scheduler:
         dev_ids = list(req.block_table)     # snapshot for the swap-out copy
         self.pool.free(req.block_table)
         req.block_table = []
+        self.table_version += 1
         swap_ids = None
         if self.swap_pool is not None:
             swap_ids = self.swap_pool.alloc(self.swap_pool.blocks_for(req.cached_len))
@@ -199,6 +217,7 @@ class Scheduler:
         req.slot = self.free_slots.pop()
         req.state = RequestState.RUNNING
         self.running[req.slot] = req
+        self.table_version += 1
         if req.t_admit is None:
             req.t_admit = now
 
@@ -210,16 +229,14 @@ class Scheduler:
         for req in sorted(self.running.values(), key=lambda r: (r.arrival, r.rid)):
             if req.slot < 0:               # already preempted this step
                 continue
-            need = self.pool.blocks_for(req.cached_len + 1)
-            while len(req.block_table) < need:
-                got = self.pool.alloc(need - len(req.block_table))
-                if got is not None:
-                    req.block_table.extend(got)
-                    break
+            grew = len(req.block_table)
+            while not self.pool.extend_to(req.block_table, req.cached_len + 1):
                 victim = self._victim()
                 self._preempt(victim, plan)
                 if victim is req:
                     break
+            if len(req.block_table) != grew:
+                self.table_version += 1
 
         if plan.preempt:
             return plan                    # let freed blocks settle one step
@@ -252,3 +269,62 @@ class Scheduler:
             plan.admit.append(req)
 
         return plan
+
+    # -- horizon granting ---------------------------------------------------
+
+    def grant_horizon(self, max_h: int, now: float,
+                      est_step_time: float = 0.0) -> int:
+        """Largest safe number of lockstep decode steps for one dispatch.
+
+        Called after :meth:`plan` (so single-step growth is already settled)
+        and before the engine launches its fused multi-step decode.  The
+        grant is the min of three caps, snapped DOWN to a power of two so the
+        engine compiles at most ``log2(max_h)+1`` horizon executables:
+
+        1. **Completion events.**  While admissions or resumes are blocked on
+           capacity (a swapped request, or an arrived request still queued),
+           the horizon ends at the earliest running completion — min over
+           running slots of remaining budget — so freed slots/blocks turn
+           into admitted work at the boundary instead of idling frozen.
+           (An early EOS can still freeze a slot mid-horizon; that waste is
+           bounded by this same cap.)
+        2. **Arrival events.**  With a free slot and a future arrival, the
+           horizon stops roughly at the admission time (``est_step_time`` is
+           the engine's measured per-token decode time; 0 disables the cap).
+        3. **Block headroom.**  Every granted step must be able to write its
+           KV row: each running request's table is pre-extended to cover
+           ``cached_len + min(h, remaining)`` rows *before* the dispatch, so
+           the paged kernel never indexes an unallocated page mid-horizon.
+           If the pool cannot cover ``h`` steps the grant halves (never
+           preempts — ``h == 1`` falls back to plan()'s growth/preemption).
+        """
+        running = sorted(self.running.values(), key=lambda r: (r.arrival, r.rid))
+        if not running:
+            return 0
+        h = max(1, max_h)
+        if self.swapped or (self.waiting and self.waiting[0][0] <= now):
+            h = min(h, min(r.remaining for r in running))
+        elif self.waiting and self.free_slots and est_step_time > 0:
+            until = self.waiting[0][0] - now
+            h = min(h, max(1, int(until / est_step_time) + 1))
+        h = 1 << (max(1, h).bit_length() - 1)          # snap down to 2^k
+
+        def extra_blocks(hh: int) -> int:
+            return sum(
+                max(0, self.pool.blocks_for(r.cached_len + min(hh, r.remaining))
+                    - len(r.block_table))
+                for r in running)
+
+        while h > 1 and extra_blocks(h) > self.pool.free_blocks:
+            h //= 2
+        if h > 1:
+            grew = False
+            for r in running:
+                rows = r.cached_len + min(h, r.remaining)
+                before = len(r.block_table)
+                ok = self.pool.extend_to(r.block_table, rows)
+                assert ok, "grant_horizon headroom check missed"
+                grew |= len(r.block_table) != before
+            if grew:
+                self.table_version += 1
+        return h

@@ -53,6 +53,18 @@ def test_block_pool_exhaustion_and_validation():
         pool.free([a[0]])                            # double free after bulk free
 
 
+def test_block_pool_extend_to():
+    pool = BlockPool(4, 4)
+    table = []
+    assert pool.extend_to(table, 0) and table == []
+    assert pool.extend_to(table, 9)                  # 3 blocks
+    assert len(table) == 3 and pool.free_blocks == 1
+    assert pool.extend_to(table, 12) and len(table) == 3   # already covered
+    assert not pool.extend_to(table, 20)             # needs 5, has 3+1
+    assert len(table) == 3 and pool.free_blocks == 1 # all-or-nothing: no change
+    assert pool.extend_to(table, 16) and len(table) == 4
+
+
 def test_block_pool_randomized_invariants():
     rng = np.random.default_rng(0)
     pool = BlockPool(32, 2)
@@ -192,6 +204,85 @@ def test_scheduler_randomized_stream_conserves_blocks_and_finishes():
     assert sorted(r.rid for r in done) == list(range(25))
     assert all(r.n_generated >= r.max_new for r in done)
     assert pool.used_blocks == 0
+
+
+def _admit_two(pool_blocks=64, bs=4, slots=2, max_len=64, gens=(12, 5)):
+    """Two running requests (first token emitted), rest of the stream waiting."""
+    pool = BlockPool(pool_blocks, bs)
+    sched = Scheduler(slots, pool, max_len=max_len)
+    reqs = [_mk_req(i, 8, g) for i, g in enumerate(gens)]
+    for r in reqs:
+        sched.submit(r)
+    plan = sched.plan(now=0.0)
+    for r in plan.admit:
+        _drive(r)                                    # first token from prefill
+    return pool, sched, reqs
+
+
+def test_grant_horizon_completion_cap_and_preextension():
+    # an *arrived* waiting request blocks the horizon at the earliest running
+    # completion: min remaining = min(12-1, 5-1) = 4 → already a power of two
+    pool, sched, reqs = _admit_two(gens=(12, 5, 4))
+    h = sched.grant_horizon(16, now=0.0)
+    assert h == 4
+    r0, r1 = reqs[0], reqs[1]
+    # tables pre-extended for the whole grant (capped at each budget)
+    assert len(r0.block_table) >= pool.blocks_for(r0.cached_len + 4)
+    assert len(r1.block_table) >= pool.blocks_for(r1.cached_len + 4)
+    # with no pending work the grant runs to max_h, snapped to a power of two
+    pool2, sched2, reqs2 = _admit_two(gens=(40, 37))
+    assert sched2.grant_horizon(12, now=0.0) == 8    # 12 → 2^3
+    # per-slot extension never exceeds the request's own budget
+    pool3, sched3, reqs3 = _admit_two(gens=(40, 3))
+    h3 = sched3.grant_horizon(16, now=0.0)
+    assert h3 == 16
+    big, small = reqs3
+    assert len(big.block_table) == pool3.blocks_for(big.cached_len + 16)
+    assert len(small.block_table) == pool3.blocks_for(small.cached_len + 2)
+
+
+def test_grant_horizon_block_headroom_shrinks_grant():
+    # 6 blocks × 4 tokens, two prompt-8 requests: 3 blocks each, pool empty.
+    # cached_len 8 → h=4 fits the existing tables (12 rows = 3 blocks) but
+    # h=8 would need a 4th block per slot → the grant halves instead of
+    # preempting.
+    pool, sched, reqs = _admit_two(pool_blocks=6, bs=4, max_len=24,
+                                   gens=(12, 12))
+    assert pool.free_blocks == 0
+    assert sched.grant_horizon(8, now=0.0) == 4
+    assert all(len(r.block_table) == 3 for r in reqs)
+
+
+def test_grant_horizon_arrival_cap_and_empty():
+    pool = BlockPool(64, 4)
+    sched = Scheduler(2, pool, max_len=64)
+    assert sched.grant_horizon(16, now=0.0) == 0     # nothing running
+    sched.submit(_mk_req(0, 8, 30, arrival=0.0))
+    sched.submit(_mk_req(1, 8, 30, arrival=5.0))     # future arrival
+    for r in sched.plan(now=0.0).admit:
+        _drive(r)
+    # free slot + future arrival: cap ≈ steps until admission at 1s/step
+    assert sched.grant_horizon(16, now=0.0, est_step_time=1.0) == 4  # 5+1→4
+    # without an estimate the arrival cap is disabled
+    assert sched.grant_horizon(16, now=0.0) == 16
+
+
+def test_scheduler_table_version_tracks_mutations():
+    pool, sched, reqs = _admit_two(gens=(12, 12))
+    v = sched.table_version
+    assert v > 0                                     # admissions bumped it
+    sched.plan(now=1.0)                              # no growth needed yet
+    assert sched.table_version == v
+    _drive(reqs[0], 8)                               # cached_len 8 → 9: grow
+    sched.plan(now=2.0)
+    assert sched.table_version > v
+    v = sched.table_version
+    assert sched.grant_horizon(8, now=2.0) == 8      # pre-extends r1's table
+    assert sched.table_version > v
+    v = sched.table_version
+    reqs[1].generated.extend([0] * 11)
+    sched.complete(reqs[1], now=3.0)
+    assert sched.table_version > v
 
 
 # ---------------------------------------------------------------------------
@@ -445,6 +536,160 @@ def test_sample_tokens_top_k_membership_and_greedy():
                                       jnp.float32(1.0), 3))[:, 0]
         for b in range(4):
             assert s[b] in top3[b], (b, s[b], top3[b])
+
+
+# ---------------------------------------------------------------------------
+# horizon-batched decode (jax)
+# ---------------------------------------------------------------------------
+
+# One arch per cache family: paged dense GQA, MoE (drop-free routing) over
+# paged GQA, sliding-window ring + SSM state, MLA + MoE, recurrent-only
+# xLSTM.  musicgen adds the multi-codebook [B, K, H] token-block layout.
+HORIZON_ARCHS = ["phi4-mini-3.8b", "qwen3-moe-235b-a22b", "hymba-1.5b",
+                 "deepseek-v3-671b", "xlstm-350m", "musicgen-medium"]
+
+
+@pytest.fixture(scope="module", params=HORIZON_ARCHS)
+def horizon_setup(request):
+    import jax
+    from repro.models import lm as lm_mod, registry
+    from repro.nn import module as nnmod
+    cfg = registry.get_smoke(request.param)
+    params = nnmod.materialize(lm_mod.param_spec(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _run_horizon(cfg, params, horizon, *, n_blocks=None, swap_blocks=0,
+                 eos_id=None, temperature=0.0, top_k=0):
+    from repro.serving import ServingEngine, WorkloadSpec, make_requests
+    eng = ServingEngine(cfg, slots=3, max_len=48, block_size=8,
+                        n_blocks=n_blocks, swap_blocks=swap_blocks,
+                        params=params, horizon=horizon, eos_id=eos_id,
+                        temperature=temperature, top_k=top_k)
+    reqs = make_requests(cfg, WorkloadSpec(n_requests=5, rate=1e9,
+                                           prompt_buckets=(8, 16),
+                                           gen_buckets=(4, 24)), seed=9)
+    summary = eng.run(reqs)
+    toks = {r.rid: [tuple(np.asarray(t).ravel().tolist()) for t in r.generated]
+            for r in reqs}
+    return toks, summary
+
+
+def test_engine_horizon_token_parity_all_families(horizon_setup):
+    """H>1 must be token-for-token identical to H=1 (greedy), with mid-horizon
+    budget freezes exercised by the short gen bucket, while actually
+    amortizing dispatches."""
+    cfg, params = horizon_setup
+    base, s1 = _run_horizon(cfg, params, 1)
+    fused, s8 = _run_horizon(cfg, params, 8)
+    assert base == fused
+    assert s8["decode_dispatches"] < s1["decode_dispatches"]
+    assert s8["tokens_per_dispatch"] > s1["tokens_per_dispatch"]
+    assert s8["decode_tokens"] == s1["decode_tokens"]
+
+
+def test_engine_horizon_sampled_parity():
+    """Sampled decode folds the *global* step counter into the key, so a
+    horizon run reproduces the single-step stream when the slot schedule
+    matches (all-arrived workload, no preemption)."""
+    import jax
+    from repro.models import lm as lm_mod, registry
+    from repro.nn import module as nnmod
+    cfg = registry.get_smoke("phi4-mini-3.8b")
+    params = nnmod.materialize(lm_mod.param_spec(cfg), jax.random.PRNGKey(0))
+    base, _ = _run_horizon(cfg, params, 1, temperature=1.0, top_k=5)
+    fused, _ = _run_horizon(cfg, params, 8, temperature=1.0, top_k=5)
+    greedy, _ = _run_horizon(cfg, params, 8)
+    assert base == fused
+    assert base != greedy
+
+
+def test_engine_horizon_eos_freeze_mid_horizon():
+    """EOS must freeze a slot mid-horizon on-device exactly where the host
+    path stops it: pick a token that actually occurs mid-stream in the
+    baseline, declare it EOS, and require identical truncated streams."""
+    import jax
+    from repro.models import lm as lm_mod, registry
+    from repro.nn import module as nnmod
+    cfg = registry.get_smoke("phi4-mini-3.8b")
+    params = nnmod.materialize(lm_mod.param_spec(cfg), jax.random.PRNGKey(0))
+    base, _ = _run_horizon(cfg, params, 1)
+    rid = idx = eos = None
+    for r, stream in sorted(base.items()):   # first token not repeated earlier
+        for i in range(2, len(stream) - 1):
+            v = stream[i][0]
+            if all(s[0] != v for s in stream[:i]):
+                rid, idx, eos = r, i, v
+                break
+        if eos is not None:
+            break
+    assert eos is not None, "baseline streams have no usable mid-stream token"
+    h1, _ = _run_horizon(cfg, params, 1, eos_id=eos)
+    h8, _ = _run_horizon(cfg, params, 8, eos_id=eos)
+    assert h1 == h8
+    assert len(h1[rid]) == idx + 1           # truncated at the EOS token
+    assert h1[rid][-1][0] == eos
+    assert len(h1[rid]) < len(base[rid])
+    # the non-EOS prefix is unchanged
+    assert base[rid][:idx + 1] == h1[rid]
+
+
+def test_engine_horizon_preemption_at_boundary(smoke_setup):
+    """A tight pool under a horizon engine: grants shrink to the block
+    headroom, preemption (swap AND recompute) lands on horizon boundaries via
+    plan(), and greedy token streams stay identical to the unconstrained
+    run."""
+    cfg, params = smoke_setup
+    base, _ = _run_horizon(cfg, params, 1)
+    swap, s_sw = _run_horizon(cfg, params, 8, n_blocks=8, swap_blocks=32)
+    rec, s_rc = _run_horizon(cfg, params, 8, n_blocks=8, swap_blocks=0)
+    assert s_sw["preemptions"]["swap"] > 0
+    assert s_rc["preemptions"]["recompute"] > 0
+    assert base == swap
+    assert base == rec
+
+
+def test_engine_horizon_timestamps_use_engine_clock():
+    """Interpolated horizon timestamps must come from the *engine* clock, so
+    an injected deterministic clock yields monotone per-request times and
+    non-negative TPOT (regression: mixing in perf_counter spans produced
+    timestamps before TTFT under a fake clock)."""
+    import itertools
+    import jax
+    from repro.models import lm as lm_mod, registry
+    from repro.nn import module as nnmod
+    from repro.serving import Request, ServingEngine
+    cfg = registry.get_smoke("phi4-mini-3.8b")
+    params = nnmod.materialize(lm_mod.param_spec(cfg), jax.random.PRNGKey(0))
+    fake = itertools.count()
+    seen = {}
+    eng = ServingEngine(cfg, slots=2, max_len=32, block_size=8, params=params,
+                        horizon=8, clock=lambda: float(next(fake)),
+                        on_token=lambda r, t, now: seen.setdefault(r.rid, []).append(now))
+    reqs = [Request(rid=i, prompt=np.arange(8, dtype=np.int32) + i, max_new=6)
+            for i in range(3)]
+    summary = eng.run(reqs)
+    for r in reqs:
+        ts = seen[r.rid]
+        assert ts == sorted(ts)
+        assert r.t_first_token >= 0 and r.t_done >= ts[-1]
+    for rec in summary["requests"]:
+        assert rec["ttft_s"] >= 0
+        assert rec["tpot_s"] is None or rec["tpot_s"] >= 0
+
+
+def test_engine_horizon_dispatch_observables():
+    import jax
+    from repro.models import lm as lm_mod, registry
+    from repro.nn import module as nnmod
+    cfg = registry.get_smoke("phi4-mini-3.8b")
+    params = nnmod.materialize(lm_mod.param_spec(cfg), jax.random.PRNGKey(0))
+    _, s = _run_horizon(cfg, params, 4)
+    assert s["decode_dispatches"] > 0
+    assert s["decode_steps"] > s["decode_dispatches"]     # amortization real
+    assert s["host_syncs"] <= s["dispatches"]
+    assert s["tokens_per_dispatch"] == pytest.approx(
+        s["decode_tokens"] / s["decode_dispatches"])
 
 
 def test_engine_streaming_callback_and_order(smoke_setup):
