@@ -22,6 +22,13 @@ steady-state decode tok/s and tokens-per-dispatch.  ``--check-horizon``
 gates on ``H=16`` decode throughput ≥ 1.5× ``H=1`` with bit-identical greedy
 token streams.
 
+The **prefix-sharing cell** serves a shared-system-prompt stream (96 shared
+tokens + unique tails) with refcounted block dedup on vs off.
+``--check-prefix`` gates on token-identical outputs AND ≥ 1.5× logical
+prefill throughput (prompt tokens per prefill second — sharing skips the
+resident rows) or ≥ 1.5× lower steady-state pool occupancy (mean distinct
+blocks referenced by running tables).
+
 Results merge into ``BENCH_serving.json`` (section "serving") next to the
 kernel microbench so the perf trajectory is machine-readable across PRs.
 
@@ -154,11 +161,95 @@ def horizon_sweep(cfg, base_requests, slots: int, params=None,
     return out
 
 
+def prefix_cell(cfg, slots: int, params=None, n_requests: int = 12,
+                shared_prefix: int = 96, block_size: int = 16,
+                verbose: bool = True):
+    """Shared-system-prompt stream with prefix sharing on vs off.
+
+    Both engines serve the identical all-arrived stream (greedy,
+    deterministic); sharing must be invisible in the tokens and visible in
+    the prefill clock and the pool occupancy.
+    """
+    spec = WorkloadSpec(n_requests=n_requests, rate=1e9,
+                        shared_prefix=shared_prefix,
+                        prompt_buckets=(16, 32), gen_buckets=(8, 16))
+    base_requests = make_requests(cfg, spec, seed=13)
+    spec_max = max(r.prompt_len + r.max_new for r in base_requests)
+    max_len = -(-spec_max // block_size) * block_size
+    logical_prompt_tokens = sum(r.prompt_len for r in base_requests)
+
+    def fresh(rid0):
+        return [Request(rid=rid0 + r.rid, prompt=r.prompt, max_new=r.max_new,
+                        arrival=0.0) for r in base_requests]
+
+    def one(sharing: bool):
+        """Two warmup passes (the first compiles the cold-cache chunk
+        lengths and seeds the resident chains; the second compiles the
+        steady-state *tail* lengths those chains produce), then a measured
+        pass read off the stats deltas — the horizon sweep's protocol."""
+        engine = ServingEngine(cfg, slots=slots, max_len=max_len,
+                               block_size=block_size, params=params,
+                               paged=True, prefix_sharing=sharing)
+        engine.run(fresh(0))
+        engine.run(fresh(10_000))
+        st = engine.stats
+        t0, n0 = st.prefill_time, st.prefill_tokens
+        hit0, fork0 = st.prefix_hit_tokens, st.cow_forks
+        sb0 = st.shared_prefix_blocks
+        tb0, ps0 = st.table_block_steps, st.pool_steps
+        reqs = fresh(20_000)
+        engine.run(reqs)
+        toks = tuple(tuple(tuple(np.asarray(t).ravel().tolist())
+                           for t in r.generated)
+                     for r in sorted(reqs, key=lambda r: r.rid))
+        return {
+            "prefill_time_s": st.prefill_time - t0,
+            "prefill_tokens": st.prefill_tokens - n0,
+            "prefix_hit_tokens": st.prefix_hit_tokens - hit0,
+            "cow_forks": st.cow_forks - fork0,
+            "shared_blocks": st.shared_prefix_blocks - sb0,
+            "mean_referenced_blocks": ((st.table_block_steps - tb0)
+                                       / max(1, st.pool_steps - ps0)),
+        }, toks
+
+    base, base_toks = one(False)
+    shared, shared_toks = one(True)
+    prefill_tps = lambda s: logical_prompt_tokens / max(s["prefill_time_s"], 1e-9)
+    cell = {
+        "slots": slots,
+        "n_requests": n_requests,
+        "shared_prefix_tokens": shared_prefix,
+        "tokens_match": bool(base_toks == shared_toks),
+        "prefill_tokens_computed": {"baseline": base["prefill_tokens"],
+                                    "shared": shared["prefill_tokens"]},
+        "prefix_hit_tokens": shared["prefix_hit_tokens"],
+        "shared_blocks": shared["shared_blocks"],
+        "cow_forks": shared["cow_forks"],
+        "prefill_tokens_per_s": {"baseline": prefill_tps(base),
+                                 "shared": prefill_tps(shared)},
+        "prefill_speedup": prefill_tps(shared) / max(prefill_tps(base), 1e-9),
+        "mean_referenced_blocks": {
+            "baseline": base["mean_referenced_blocks"],
+            "shared": shared["mean_referenced_blocks"]},
+        "occupancy_ratio": (base["mean_referenced_blocks"]
+                            / max(shared["mean_referenced_blocks"], 1e-9)),
+    }
+    if verbose:
+        print(f"prefix sharing: prefill {prefill_tps(base):8.1f} → "
+              f"{prefill_tps(shared):8.1f} tok/s ({cell['prefill_speedup']:.2f}×)  "
+              f"pool occupancy {cell['mean_referenced_blocks']['baseline']:.1f} → "
+              f"{cell['mean_referenced_blocks']['shared']:.1f} blocks "
+              f"({cell['occupancy_ratio']:.2f}× less)  "
+              f"hits {cell['prefix_hit_tokens']} tok, forks {cell['cow_forks']}, "
+              f"tokens_match={cell['tokens_match']}")
+    return cell
+
+
 def run(verbose: bool = True, n_requests: int = 16, slots_sweep=(2, 4),
         rates=(float("inf"),), arch: str = "phi4-mini-3.8b",
         json_path=None, bench_json=None, check: bool = False,
         check_paged: bool = False, check_horizon: bool = False,
-        horizons=(1, 4, 16)):
+        check_prefix: bool = False, horizons=(1, 4, 16)):
     block_size = 16
     cfg = registry.get_smoke(arch)
     attribution_cfg = registry.get_config(arch)   # bill energy at full scale
@@ -241,6 +332,9 @@ def run(verbose: bool = True, n_requests: int = 16, slots_sweep=(2, 4),
     out["horizon"] = horizon_sweep(cfg, base_requests, max(slots_sweep),
                                    params=params, horizons=tuple(horizons),
                                    block_size=block_size, verbose=verbose)
+    out["prefix_sharing"] = prefix_cell(cfg, max(slots_sweep), params=params,
+                                        n_requests=max(n_requests * 3 // 4, 4),
+                                        block_size=block_size, verbose=verbose)
     if verbose:
         print(f"best decode-throughput speedup over static batching: "
               f"{out['best_speedup']:.2f}×; paged vs dense engine: "
@@ -275,6 +369,18 @@ def run(verbose: bool = True, n_requests: int = 16, slots_sweep=(2, 4),
         if top < 1.5:
             raise SystemExit(
                 f"horizon decode speedup {top:.2f}× < required 1.5× vs H=1")
+    if check_prefix:
+        px = out["prefix_sharing"]
+        if not px["tokens_match"]:
+            raise SystemExit(
+                "prefix-shared token streams diverge from the no-sharing run")
+        ok = px["prefill_speedup"] >= 1.5 or px["occupancy_ratio"] >= 1.5
+        if not ok:
+            raise SystemExit(
+                f"prefix sharing shows neither ≥1.5× prefill throughput "
+                f"({px['prefill_speedup']:.2f}×) nor ≥1.5× lower steady-state "
+                f"pool occupancy ({px['occupancy_ratio']:.2f}×) on the "
+                f"shared-prompt stream")
     return out
 
 
@@ -298,6 +404,11 @@ def main():
                     help="exit non-zero unless horizon-batched decode shows "
                          "≥1.5× tok/s at the top horizon vs H=1 with "
                          "bit-identical greedy token streams")
+    ap.add_argument("--check-prefix", action="store_true",
+                    help="exit non-zero unless the prefix-sharing cell is "
+                         "token-identical to the no-sharing baseline AND "
+                         "shows ≥1.5× prefill tok/s or ≥1.5× lower "
+                         "steady-state pool occupancy")
     ap.add_argument("--horizons", type=int, nargs="+", default=[1, 4, 16],
                     help="horizon sweep values (first must be 1, the baseline)")
     args = ap.parse_args()
@@ -305,7 +416,8 @@ def main():
     run(n_requests=args.requests, slots_sweep=tuple(args.slots), rates=rates,
         arch=args.arch, json_path=args.json, bench_json=args.bench_json,
         check=args.check, check_paged=args.check_paged,
-        check_horizon=args.check_horizon, horizons=tuple(args.horizons))
+        check_horizon=args.check_horizon, check_prefix=args.check_prefix,
+        horizons=tuple(args.horizons))
 
 
 if __name__ == "__main__":

@@ -140,6 +140,9 @@ def main():
     ap.add_argument("--no-paged", action="store_true",
                     help="keep the dense [slots, max_len] live caches instead "
                          "of the paged physical block store")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable shared-prompt block dedup (refcounted "
+                         "prefix cache; auto-enabled for fully paged models)")
     ap.add_argument("--horizon", type=int, default=1,
                     help="max decode steps fused into one dispatch (power-of-"
                          "two grants; 1 = per-token parity baseline)")
@@ -168,14 +171,16 @@ def main():
     if args.scenario:
         spec = dataclasses.replace(SCENARIOS[args.scenario], n_requests=args.requests)
         block_size = args.block_size or 16
-        max_len = max(spec.prompt_buckets) + max(spec.gen_buckets)
+        max_len = max(spec.prompt_buckets) + spec.shared_prefix + max(spec.gen_buckets)
         max_len = -(-max_len // block_size) * block_size
         engine = ServingEngine(
             cfg, slots=args.slots or 4, max_len=max_len,
             block_size=block_size, n_blocks=args.kv_blocks,
             swap_blocks=args.swap_blocks, prefill_chunk=args.chunk,
             seed=args.seed, odin_mode=args.odin_mode,
-            paged=not args.no_paged, horizon=args.horizon, eos_id=args.eos_id,
+            paged=not args.no_paged,
+            prefix_sharing=False if args.no_prefix_sharing else None,
+            horizon=args.horizon, eos_id=args.eos_id,
             temperature=args.temperature,
             top_k=args.top_k, sample_seed=args.sample_seed)
         summary = engine.run(make_requests(cfg, spec, seed=args.seed))
@@ -190,6 +195,7 @@ def main():
                                  "prefill_chunk": args.chunk,
                                  "odin_mode": args.odin_mode,
                                  "paged": not args.no_paged,
+                                 "prefix_sharing": False if args.no_prefix_sharing else None,
                                  "horizon": args.horizon,
                                  "eos_id": args.eos_id,
                                  "temperature": args.temperature,

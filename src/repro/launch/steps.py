@@ -284,7 +284,12 @@ def make_slot_prefill_step(cfg: ModelConfig, max_len: int,
     initial state first (mLSTM/sLSTM states do not initialize to zeros and
     the slot may hold a previous request's state); pool blocks never need a
     reset because rows at or beyond the slot's ``pos`` are invisible, and the
-    rows below it are overwritten by this very prefill.
+    rows below it are overwritten by this very prefill.  A reset at
+    ``start > 0`` starts the slot *mid-sequence*: ``pos`` leaves reset to
+    ``start`` instead of 0, so a tail-only prefill behind a shared resident
+    prefix (prefix sharing) writes and attends exactly like the later chunks
+    of a full prefill — rows below ``start`` are read through the block
+    table, never recomputed.
     ``slot``/``start`` are traced scalars so one executable serves every slot
     and chunk offset; only distinct chunk *lengths* compile separately.
     """
@@ -303,6 +308,8 @@ def make_slot_prefill_step(cfg: ModelConfig, max_len: int,
                 sl.append(leaf)                      # shared pool: pass whole
             else:
                 s = jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=1)
+                if _leaf_name(path) == "pos":
+                    ini = ini + start                # mid-sequence reset
                 sl.append(jnp.where(reset, ini, s))
         sl = jax.tree_util.tree_unflatten(treedef, sl)
         trow = (jax.lax.dynamic_slice_in_dim(tables, slot, 1, axis=0)

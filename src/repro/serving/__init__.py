@@ -23,13 +23,15 @@ See src/repro/serving/README.md for the full walkthrough.
 from repro.serving.blocks import BlockPool, PagedKVStore, SwapTicket
 from repro.serving.engine import ServingEngine
 from repro.serving.metrics import EngineStats, OdinCostModel, summarize
-from repro.serving.scheduler import Request, RequestState, Scheduler, StepPlan
+from repro.serving.scheduler import (PrefixCache, PrefixGrant, Request,
+                                     RequestState, Scheduler, StepPlan)
 from repro.serving.workload import SCENARIOS, WorkloadSpec, make_requests, poisson_arrivals
 
 __all__ = [
     "BlockPool", "PagedKVStore", "SwapTicket",
     "ServingEngine",
     "EngineStats", "OdinCostModel", "summarize",
+    "PrefixCache", "PrefixGrant",
     "Request", "RequestState", "Scheduler", "StepPlan",
     "SCENARIOS", "WorkloadSpec", "make_requests", "poisson_arrivals",
 ]

@@ -2,16 +2,20 @@
 
 Two tiers, mirroring the classic paged-KV serving design:
 
-* :class:`BlockPool` — a pure-accounting free-list allocator over fixed-size
-  token blocks.  One pool instance budgets the *device* KV memory — for
-  paged-capable attention families that budget IS the physical store (the
-  ``k_pool/v_pool`` leaves the paged-attention kernel indexes); for the
-  remaining dense families (MLA latents, sliding-window rings) it meters the
-  ``[B_slots, S_max]`` live-cache rows.  A second instance inside
+* :class:`BlockPool` — a pure-accounting, **refcounted** free-list allocator
+  over fixed-size token blocks.  One pool instance budgets the *device* KV
+  memory — for paged-capable attention families that budget IS the physical
+  store (the ``k_pool/v_pool`` leaves the paged-attention kernel indexes);
+  for the remaining dense families (MLA latents, sliding-window rings) it
+  meters the ``[B_slots, S_max]`` live-cache rows.  A second instance inside
   :class:`PagedKVStore` budgets the swap tier.  Requests hold their blocks in
   a per-sequence block table (``Request.block_table``) and grow it one block
   at a time as decode crosses block boundaries; admission control and
-  preemption both key off this pool.
+  preemption both key off this pool.  Refcounts let tables *alias* blocks
+  (prefix sharing: ``share`` attaches, ``fork`` is the copy-on-write
+  primitive, release happens at refcount 0) and let the scheduler's prefix
+  cache retain prompt chains past their request's lifetime, evicted through
+  the ``reclaimer`` hook only under allocation pressure.
 
 * :class:`PagedKVStore` — block-granular storage for *preempted* sequences.
   Two leaf families:
@@ -31,7 +35,7 @@ Two tiers, mirroring the classic paged-KV serving design:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,10 +60,24 @@ def _leaf_key(path) -> str:
 
 
 class BlockPool:
-    """Free-list allocator over ``n_blocks`` fixed-size token blocks.
+    """Refcounted free-list allocator over ``n_blocks`` fixed-size token blocks.
 
     All-or-nothing ``alloc`` (returns None when the request cannot be met in
     full), double-free checked ``free``.  Pure bookkeeping — no arrays.
+
+    Blocks carry a **refcount** so block tables may alias the same physical
+    block (prefix sharing): ``alloc`` hands out blocks at refcount 1,
+    ``share`` adds a claim, ``free`` drops one — the block returns to the
+    free list only when its last claim is gone.  ``fork`` is the
+    copy-on-write primitive: trading a claim on a shared block for a fresh
+    exclusive block (the caller copies the contents before writing).
+
+    A ``reclaimer`` (duck-typed: ``reclaimable() -> int`` and
+    ``reclaim(n) -> int``) may be attached by a block cache that retains
+    otherwise-unreferenced blocks (the scheduler's prefix cache); ``alloc``
+    asks it to release blocks before failing, so cached prefixes are evicted
+    lazily under allocation pressure instead of eagerly on request
+    completion.
     """
 
     def __init__(self, n_blocks: int, block_size: int):
@@ -68,7 +86,8 @@ class BlockPool:
         self.n_blocks = n_blocks
         self.block_size = block_size
         self._free: List[int] = list(range(n_blocks - 1, -1, -1))
-        self._allocated: set = set()
+        self._refs: Dict[int, int] = {}
+        self.reclaimer = None
 
     @property
     def free_blocks(self) -> int:
@@ -76,37 +95,92 @@ class BlockPool:
 
     @property
     def used_blocks(self) -> int:
-        return len(self._allocated)
+        return len(self._refs)
+
+    @property
+    def available_blocks(self) -> int:
+        """Blocks an ``alloc`` could obtain right now: free + reclaimable."""
+        extra = self.reclaimer.reclaimable() if self.reclaimer is not None else 0
+        return len(self._free) + extra
+
+    def refs(self, bid: int) -> int:
+        """Current claim count on block ``bid`` (0 ⇒ free or out of range)."""
+        return self._refs.get(bid, 0)
 
     def blocks_for(self, n_tokens: int) -> int:
         """Blocks needed to hold ``n_tokens`` cache rows."""
         return -(-max(n_tokens, 0) // self.block_size)
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Pop ``n`` block ids, or None (and no change) if unavailable."""
+        """Pop ``n`` block ids at refcount 1, or None (no change) if
+        unavailable even after asking the reclaimer to evict.  Eviction is
+        only asked for when it can actually cover the shortfall — a doomed
+        allocation must not wipe the resident prefix cache for nothing."""
         if n < 0:
             raise ValueError(n)
+        if n > len(self._free) and self.reclaimer is not None \
+                and n <= len(self._free) + self.reclaimer.reclaimable():
+            self.reclaimer.reclaim(n - len(self._free))
         if n > len(self._free):
             return None
         ids = [self._free.pop() for _ in range(n)]
-        self._allocated.update(ids)
+        for b in ids:
+            self._refs[b] = 1
         return ids
 
-    def free(self, ids: List[int]) -> None:
+    def share(self, ids: List[int]) -> None:
+        """Add one claim to each allocated block (prefix-sharing attach)."""
         for b in ids:
-            if b not in self._allocated:
+            if b not in self._refs:
+                raise ValueError(f"share of unallocated block {b}")
+        for b in ids:
+            self._refs[b] += 1
+
+    def free(self, ids: List[int]) -> None:
+        """Drop one claim per id; blocks are released at refcount 0."""
+        for b in ids:
+            if b not in self._refs:
                 raise ValueError(f"double free of block {b}")
-            self._allocated.remove(b)
-            self._free.append(b)
+            self._refs[b] -= 1
+            if self._refs[b] == 0:
+                del self._refs[b]
+                self._free.append(b)
+
+    def fork(self, bid: int) -> Optional[int]:
+        """Copy-on-write fork of one claim on ``bid``.
+
+        Exclusive block (refcount 1): returned as-is — the caller may write
+        in place.  Shared block: allocates a fresh block, releases the
+        caller's claim on ``bid``, and returns the new id; the caller must
+        copy the block contents before writing.  None ⇒ pool exhausted (the
+        claim on ``bid`` is kept so the caller can roll back).
+        """
+        if bid not in self._refs:
+            raise ValueError(f"fork of unallocated block {bid}")
+        if self._refs[bid] == 1:
+            return bid
+        got = self.alloc(1)
+        if got is None:
+            return None
+        self.free([bid])
+        return got[0]
 
     def extend_to(self, table: List[int], n_tokens: int) -> bool:
         """Grow a block table in place until it covers ``n_tokens`` cache rows.
 
         All-or-nothing like :meth:`alloc`: returns False (table unchanged)
         when the pool cannot supply every missing block.  Shared by the
-        scheduler's per-step growth and the horizon pre-reservation.
+        scheduler's per-step growth and the horizon pre-reservation.  A
+        target beyond the pool's total capacity can never be satisfied — it
+        raises instead of letting the caller retry (and preempt victims)
+        forever on a grant the pool cannot honor.
         """
         need = self.blocks_for(n_tokens)
+        if need > self.n_blocks:
+            raise ValueError(
+                f"block-table grant for {n_tokens} tokens needs {need} blocks "
+                f"but the pool only has {self.n_blocks} — the grant exceeds "
+                f"pool capacity and can never be satisfied")
         if need <= len(table):
             return True
         got = self.alloc(need - len(table))
@@ -114,6 +188,10 @@ class BlockPool:
             return False
         table.extend(got)
         return True
+
+    def snapshot(self) -> Tuple[List[int], Dict[int, int]]:
+        """(free ids, refcounts) copies — for invariant-checking tests."""
+        return list(self._free), dict(self._refs)
 
 
 @dataclass

@@ -62,9 +62,10 @@ from repro.launch.steps import (init_serving_caches,
 from repro.models import lm
 from repro.nn import module as nnmod
 from repro.nn.attention import POOL_LEAVES
-from repro.serving.blocks import SEQ_LEAVES, BlockPool, PagedKVStore
+from repro.serving.blocks import (SEQ_LEAVES, BlockPool, PagedKVStore,
+                                  _leaf_name)
 from repro.serving.metrics import EngineStats, OdinCostModel, summarize
-from repro.serving.scheduler import Request, Scheduler
+from repro.serving.scheduler import PrefixCache, PrefixGrant, Request, Scheduler
 
 __all__ = ["ServingEngine"]
 
@@ -87,6 +88,16 @@ class ServingEngine:
     paged : use the paged physical KV store for paged-capable attention
         families (non-windowed GQA).  ``False`` keeps the PR-1 dense
         ``[slots, max_len]`` live caches everywhere (the benchmark baseline).
+    prefix_sharing : dedup identical prompt prefixes across requests via
+        refcounted block aliasing + copy-on-write forks (scheduler
+        PrefixCache): admissions alias resident prefix blocks and prefill
+        only the unmatched tail.  ``None`` (default) enables it exactly when
+        the whole model state is paged — every cache leaf lives in the block
+        pool (non-windowed GQA stacks); MLA / sliding-window / recurrent
+        families keep per-slot dense state a shared block cannot cover, so
+        sharing silently stays off.  ``True`` raises if the model is not
+        fully paged; requests carrying ``extras`` (vision patch embeddings —
+        KV not token-determined) always bypass matching and registration.
     horizon : max decode steps fused into one dispatch.  1 (default) is the
         single-step parity baseline; >1 asks ``Scheduler.grant_horizon`` for
         the largest safe power-of-two grant each step and runs the fused
@@ -110,7 +121,8 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, *, slots: int, max_len: int,
                  block_size: int = 16, n_blocks: Optional[int] = None,
                  swap_blocks: int = 0, prefill_chunk: Optional[int] = None,
-                 paged: bool = True, horizon: int = 1,
+                 paged: bool = True, prefix_sharing: Optional[bool] = None,
+                 horizon: int = 1,
                  eos_id: Optional[int] = None,
                  temperature: float = 0.0, top_k: int = 0,
                  sample_seed: int = 0,
@@ -172,10 +184,29 @@ class ServingEngine:
         self._decode_horizon: Dict[int, Callable] = {}
 
         self.pool = BlockPool(n_blocks, block_size)
+        # prefix sharing needs the block pool to BE the whole model state:
+        # every cache leaf either lives in the pool or is the per-slot `pos`
+        # counter the tail prefill re-derives.  Any dense KV row or recurrent
+        # state would be skipped by a shared-prefix (tail-only) prefill.
+        fully_paged = self.paged and all(
+            _leaf_name(p) in POOL_LEAVES + ("pos",)
+            for p, _ in jax.tree_util.tree_flatten_with_path(self.caches)[0])
+        if prefix_sharing is None:
+            prefix_sharing = fully_paged
+        elif prefix_sharing and not fully_paged:
+            raise ValueError(
+                "prefix_sharing=True needs a fully paged cache layout "
+                "(non-windowed GQA families with paged=True); this model "
+                "keeps per-slot dense/recurrent state a shared block cannot "
+                "cover")
+        self.prefix_sharing = bool(prefix_sharing)
+        prefix_cache = (PrefixCache(self.pool, block_size)
+                        if self.prefix_sharing else None)
         self.store = (PagedKVStore(self.caches, swap_blocks, block_size)
                       if swap_blocks else None)
         self.sched = Scheduler(slots, self.pool, max_len,
-                               swap_pool=self.store.pool if self.store else None)
+                               swap_pool=self.store.pool if self.store else None,
+                               prefix_cache=prefix_cache)
         self.stats = EngineStats()
         self.stats.kv_cache_bytes = self._kv_bytes()
         self.cost_model = OdinCostModel(attribution_cfg or cfg)
@@ -202,7 +233,7 @@ class ServingEngine:
         names = SEQ_LEAVES + POOL_LEAVES
         return int(sum(
             l.nbytes for p, l in jax.tree_util.tree_flatten_with_path(self.caches)[0]
-            if jax.tree_util.keystr(p[-1:]).strip("[]'\"") in names))
+            if _leaf_name(p) in names))
 
     def _set_last_tok(self, slot: int, tok) -> None:
         tok = jnp.asarray(tok, jnp.int32).reshape(self._last_tok.shape[1:])
@@ -267,17 +298,29 @@ class ServingEngine:
         self.sched.complete(req, now)
         self._done.append(req)
 
-    def _prefill_request(self, req: Request, now: float) -> None:
+    def _cow_fork(self, src: int, dst: int) -> None:
+        """Execute a COW fork: copy pool block ``src`` into ``dst`` on every
+        pool leaf, before the forking slot writes its tail rows into ``dst``."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(self.caches)
+        out = []
+        for path, leaf in flat:
+            if _leaf_name(path) in POOL_LEAVES:
+                leaf = leaf.at[:, dst].set(leaf[:, src])
+            out.append(leaf)
+        self.caches = jax.tree_util.tree_unflatten(treedef, out)
+        self.stats.cow_forks += 1
+
+    def _prefill_request(self, req: Request, now: float,
+                         grant: Optional[PrefixGrant] = None) -> None:
         """Chunked prefill into the request's slot; emits the first token for
         fresh admissions (readmitted requests already hold their pending
-        token — re-prefill only rebuilds the KV they lost)."""
+        token — re-prefill only rebuilds the KV they lost).  A shared-prefix
+        ``grant`` skips the resident rows: after the COW fork copy (if any),
+        only ``[grant.start:]`` of the replay tokens run through the model —
+        their queries read the shared prefix through the slot's block table.
+        """
         fresh = req.n_generated == 0
-        if fresh:
-            toks = np.asarray(req.prompt)
-        else:  # recompute path: prompt + all generated except the pending one
-            gen = np.stack(req.generated[:-1], axis=-1).astype(np.int32) \
-                if req.n_generated > 1 else np.zeros((*np.asarray(req.prompt).shape[:-1], 0), np.int32)
-            toks = np.concatenate([np.asarray(req.prompt), gen], axis=-1)
+        toks = req.replay_tokens()
         ntok = toks.shape[-1]
         extras = req.extras or {}
         if extras and ntok > self.chunk:
@@ -293,11 +336,18 @@ class ServingEngine:
                 tail = np.repeat(np.arange(pos3d.shape[0], ntok,
                                            dtype=pos3d.dtype)[:, None], 3, axis=1)
                 pos3d = np.concatenate([pos3d, tail], axis=0)
+        start0 = 0
+        if grant is not None:
+            if grant.fork is not None:
+                self._cow_fork(*grant.fork)
+            start0 = grant.start
+            self.stats.prefix_hit_tokens += start0
+            self.stats.shared_prefix_blocks += grant.shared_blocks
         t0 = time.perf_counter()
         # prefill writes K/V blocks straight into the pool via this row
         # (admission bumped table_version, so the mirror refreshes here)
         tables = self._refresh_tables()
-        start = 0
+        start = start0
         ll = None
         while start < ntok:
             c = min(self.chunk, ntok - start)
@@ -310,15 +360,15 @@ class ServingEngine:
                     kw["pos3d"] = jnp.asarray(pos3d)[None][:, start:start + c]
             ll, self.caches = self._prefill(
                 self.params, self.caches, chunk_toks,
-                jnp.int32(req.slot), jnp.int32(start), jnp.bool_(start == 0),
+                jnp.int32(req.slot), jnp.int32(start), jnp.bool_(start == start0),
                 tables, **kw)
             self.stats.dispatches += 1
             start += c
         jax.block_until_ready(ll)
         self.stats.host_syncs += 1
         self.stats.prefill_time += time.perf_counter() - t0
-        self.stats.prefill_tokens += ntok
-        req.n_prefill_tokens += ntok
+        self.stats.prefill_tokens += ntok - start0
+        req.n_prefill_tokens += ntok - start0
         self._slot_len[req.slot] = ntok
         if fresh:
             tok = self._first_token(ll, req)                   # [] or [K]
@@ -348,12 +398,20 @@ class ServingEngine:
             self._slot_len[req.slot] = req.cached_len
             self._set_last_tok(req.slot, req.generated[-1])
         for req in plan.admit:
-            self._prefill_request(req, now)
+            self._prefill_request(req, now, plan.grants.get(req.rid))
 
         # requests may finish straight out of prefill (max_new == 1)
         for req in list(self.sched.running.values()):
             if req.done:
                 self._complete(req, self._now())
+
+        # steady-state pool occupancy sample: distinct device blocks the
+        # running tables reference (shared blocks count once)
+        held = set()
+        for r in self.sched.running.values():
+            held.update(r.block_table)
+        self.stats.table_block_steps += len(held)
+        self.stats.pool_steps += 1
 
         active_slots = sorted(self.sched.running)
         if active_slots:

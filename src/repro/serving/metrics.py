@@ -42,10 +42,22 @@ class EngineStats:
     preempt_swap: int = 0
     preempt_recompute: int = 0
     kv_cache_bytes: int = 0               # device bytes of KV-bearing leaves
+    prefix_hit_tokens: int = 0            # prefill rows served from shared blocks
+    shared_prefix_blocks: int = 0         # Σ aliased blocks over admissions
+    cow_forks: int = 0                    # partial-block copy-on-write forks
+    table_block_steps: int = 0            # Σ per step of distinct table blocks
+    pool_steps: int = 0                   # steps the occupancy sample covers
 
     @property
     def occupancy(self) -> float:
         return self.active_slot_steps / max(1, self.slot_steps)
+
+    @property
+    def mean_referenced_blocks(self) -> float:
+        """Steady-state pool occupancy: mean distinct device blocks referenced
+        by running block tables per engine step (shared blocks count once —
+        the observable prefix sharing shrinks)."""
+        return self.table_block_steps / max(1, self.pool_steps)
 
     @property
     def decode_tps(self) -> float:
@@ -150,6 +162,12 @@ def summarize(requests, stats: EngineStats, cost: Optional[OdinCostModel] = None
         "slot_occupancy": stats.occupancy,
         "preemptions": {"swap": stats.preempt_swap, "recompute": stats.preempt_recompute},
         "kv_cache_bytes": stats.kv_cache_bytes,
+        "prefix": {
+            "hit_tokens": stats.prefix_hit_tokens,
+            "shared_blocks": stats.shared_prefix_blocks,
+            "cow_forks": stats.cow_forks,
+            "mean_referenced_blocks": stats.mean_referenced_blocks,
+        },
     }
     if cost is not None:
         out["odin_total"] = cost.attribute(stats.prefill_tokens + stats.decode_tokens)

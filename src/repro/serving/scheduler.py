@@ -34,6 +34,19 @@ lockstep decode steps for one fused dispatch and pre-extends every running
 block table to cover it (see the method docstring for the three caps).
 ``table_version`` increments on every block-table/slot mutation so the
 engine's device mirror of the tables re-uploads only when something changed.
+
+**Prefix sharing.**  With a :class:`PrefixCache` attached, admission matches
+the incoming request's prompt against resident block chains at block
+granularity: matched full blocks are *aliased* into the new table (refcount
+bump, zero prefill work), a partially-matching block is COW-forked (the
+engine copies it before the slot writes its tail into it), and only the
+unmatched tail is prefilled — the admission allocates the **marginal** new
+blocks, not the full prompt footprint.  The cache holds one claim per
+registered block, so prompt blocks of completed/preempted requests stay
+resident (system-prompt caching) until allocation pressure evicts them LRU
+through the pool's reclaimer hook.  ``free``/preemption decrement refcounts,
+so a block shared with another slot (or retained by the cache) is never
+physically released while still read.
 """
 from __future__ import annotations
 
@@ -47,7 +60,8 @@ import numpy as np
 
 from repro.serving.blocks import BlockPool
 
-__all__ = ["Request", "RequestState", "Scheduler", "StepPlan"]
+__all__ = ["PrefixCache", "PrefixGrant", "Request", "RequestState",
+           "Scheduler", "StepPlan"]
 
 
 class RequestState(enum.Enum):
@@ -110,6 +124,35 @@ class Request:
     def done(self) -> bool:
         return self.eos or self.n_generated >= self.max_new
 
+    def replay_tokens(self) -> np.ndarray:
+        """Tokens a (re-)prefill of this request feeds the model: the prompt
+        plus every generated token except the pending one (whose KV row is
+        written by its own decode step).  Shape [.., cached_len]."""
+        prompt = np.asarray(self.prompt)
+        if self.n_generated <= 1:
+            return prompt
+        gen = np.stack(self.generated[:-1], axis=-1).astype(np.int32)
+        return np.concatenate([prompt, gen.reshape(*prompt.shape[:-1], -1)],
+                              axis=-1)
+
+
+@dataclass
+class PrefixGrant:
+    """Shared-prefix admission grant for one request.
+
+    ``start`` cache rows are already resident through the request's block
+    table — the engine prefills only ``[start:]`` of the replay tokens.
+    ``shared_blocks`` leading table entries are aliased (refcounted) blocks;
+    ``fork`` is a ``(src, dst)`` pool-block copy the engine must execute
+    *before* the tail prefill (the COW fork of a partially-matched block —
+    rows below ``start % block_size`` of ``dst`` become the copied prefix
+    rows, and the slot's own writes land at ``start`` onward).
+    """
+
+    start: int
+    shared_blocks: int
+    fork: Optional[Tuple[int, int]] = None
+
 
 @dataclass
 class StepPlan:
@@ -123,21 +166,219 @@ class StepPlan:
     pool frees them; the engine's swap-out copy runs before anything written
     this step (growth/prefill lands in the decode phase), so the handoff is
     race-free within the step.  ``resume``/``admit`` requests already have
-    their new slot and device block table assigned.
+    their new slot and device block table assigned.  ``grants`` maps an
+    admitted request's rid to its :class:`PrefixGrant` (absent ⇒ full
+    prefill from row 0).
     """
 
     preempt: List[Tuple[Request, str, Optional[List[int]], int, List[int]]] = field(default_factory=list)
     resume: List[Request] = field(default_factory=list)
     admit: List[Request] = field(default_factory=list)
+    grants: Dict[int, PrefixGrant] = field(default_factory=dict)
+
+
+class _PrefixNode:
+    """One resident block of a registered prompt chain."""
+
+    __slots__ = ("key", "parent", "block_id", "tokens", "stamp")
+
+    def __init__(self, key: int, parent: int, block_id: int,
+                 tokens: np.ndarray, stamp: int):
+        self.key = key
+        self.parent = parent
+        self.block_id = block_id
+        self.tokens = tokens          # [.., t] prompt tokens held by the block
+        self.stamp = stamp            # LRU clock of the last match/registration
+
+
+class PrefixCache:
+    """Prompt-prefix trie over resident pool blocks (block granularity).
+
+    Chain keys hash the *path* of block contents from the prompt start
+    (``key_i = hash(key_{i-1}, tokens_i)``), so a lookup walks the incoming
+    prompt block by block with O(1) dict probes; a final scan of the matched
+    node's children finds the longest partial-block match (the COW-fork
+    case), comparing actual tokens — never hashes — so a hash collision can
+    at worst miss a share, not corrupt one.
+
+    Every registered node holds **one pool claim** on its block
+    (``pool.share``): prompt blocks survive their request's completion or
+    preemption and are evicted LRU only when allocation pressure asks for
+    them back through the pool's reclaimer hook (``reclaimable``/``reclaim``
+    — only nodes whose block has no other claim are evictable, since
+    releasing a block some table still reads would free nothing and lose the
+    entry).  Node contents are immutable by construction: tables never write
+    a row into a block another table aliases (prefill/decode writes always
+    land at or beyond the grant's ``start``), and a node's ``tokens`` cover
+    only the prompt rows its owner wrote before registration.
+    """
+
+    _ROOT = 0
+
+    def __init__(self, pool: BlockPool, block_size: int):
+        self.pool = pool
+        self.block_size = block_size
+        self._nodes: Dict[int, _PrefixNode] = {}     # chain key → node
+        self._by_block: Dict[int, int] = {}          # block id → chain key
+        self._children: Dict[int, List[int]] = {}    # parent key → child keys
+        self._clock = 0
+        self.hit_tokens = 0
+        self.forks = 0
+        pool.reclaimer = self
+
+    # -- reclaimer protocol (BlockPool) -------------------------------------
+
+    def reclaimable(self) -> int:
+        return sum(1 for n in self._nodes.values()
+                   if self.pool.refs(n.block_id) == 1)
+
+    def reclaim(self, n: int) -> int:
+        """Evict up to ``n`` LRU nodes whose block only the cache holds.
+
+        Leaf-first: a chain's nodes share LRU stamps root-to-leaf, so a pure
+        min-stamp pick would evict the *root* and strand every still-resident
+        descendant unmatchable.  Preferring childless nodes shortens chains
+        from the tail, keeping the surviving prefix usable.  (Both scans are
+        O(cached nodes) — fine at serving scale; an evictability index is
+        the lever if caches ever grow to many thousands of blocks.)
+        """
+        freed = 0
+        while freed < n:
+            victim = fallback = None
+            for node in self._nodes.values():
+                if self.pool.refs(node.block_id) != 1:
+                    continue
+                if self._children.get(node.key):
+                    if fallback is None or node.stamp < fallback.stamp:
+                        fallback = node
+                elif victim is None or node.stamp < victim.stamp:
+                    victim = node
+            victim = victim or fallback
+            if victim is None:
+                break
+            self._evict(victim)
+            freed += 1
+        return freed
+
+    def _evict(self, node: _PrefixNode) -> None:
+        del self._nodes[node.key]
+        del self._by_block[node.block_id]
+        kids = self._children.get(node.parent)
+        if kids is not None:
+            kids.remove(node.key)
+            if not kids:
+                del self._children[node.parent]
+        self.pool.free([node.block_id])
+
+    # -- queries ------------------------------------------------------------
+
+    def holds(self, bid: int) -> bool:
+        return bid in self._by_block
+
+    def held_blocks(self) -> List[int]:
+        return list(self._by_block)
+
+    def __len__(self) -> int:
+        return len(self._nodes)
+
+    # -- matching / registration --------------------------------------------
+
+    @staticmethod
+    def _key(parent: int, chunk: np.ndarray) -> int:
+        return hash((parent, chunk.shape[-1], chunk.tobytes()))
+
+    def _tick(self, node: _PrefixNode) -> None:
+        self._clock += 1
+        node.stamp = self._clock
+
+    def match(self, toks: np.ndarray, limit: int
+              ) -> Tuple[List[int], int, Optional[int]]:
+        """Longest resident prefix of ``toks`` (int array, [.., S]).
+
+        Returns ``(full_block_ids, partial_tokens, partial_src_block)``: the
+        aliasable full blocks, then the longest common prefix (< block) with
+        any resident continuation block — the COW-fork source.  At most
+        ``limit`` tokens ever match, so the caller always keeps ≥ 1 tail
+        token to prefill (the logits that mint the next token).
+        """
+        bs = self.block_size
+        ids: List[int] = []
+        parent = self._ROOT
+        while (len(ids) + 1) * bs <= min(toks.shape[-1], limit):
+            chunk = toks[..., len(ids) * bs:(len(ids) + 1) * bs]
+            node = self._nodes.get(self._key(parent, chunk))
+            if node is None or not np.array_equal(node.tokens, chunk):
+                break
+            self._tick(node)
+            ids.append(node.block_id)
+            parent = node.key
+        off = len(ids) * bs
+        best_p, best_node = 0, None
+        cap = min(toks.shape[-1], limit) - off
+        if cap > 0:
+            for ck in self._children.get(parent, ()):
+                node = self._nodes[ck]
+                n = min(node.tokens.shape[-1], cap)
+                if n <= best_p:
+                    continue
+                eq = (node.tokens[..., :n] == toks[..., off:off + n])
+                col = eq.reshape(-1, n).all(axis=0)
+                p = int(col.sum()) if col.all() else int(np.argmin(col))
+                if p > best_p:
+                    best_p, best_node = p, node
+        if best_node is not None:
+            self._tick(best_node)
+        return ids, best_p, best_node.block_id if best_node else None
+
+    def register(self, req: Request) -> None:
+        """Index the request's *prompt* blocks (full chain + partial tail).
+
+        Already-present chains are skipped (aliased blocks re-register as
+        no-ops); each newly indexed block gains the cache's claim.
+        """
+        toks = np.asarray(req.prompt)
+        bs = self.block_size
+        S = toks.shape[-1]
+        parent = self._ROOT
+        for j in range(S // bs):
+            chunk = toks[..., j * bs:(j + 1) * bs]
+            key = self._key(parent, chunk)
+            node = self._nodes.get(key)
+            if node is None or not np.array_equal(node.tokens, chunk):
+                if node is not None:       # hash collision: keep the old node
+                    break
+                node = self._insert(key, parent, req.block_table[j], chunk)
+            parent = key
+        p = S % bs
+        if p:
+            chunk = toks[..., S - p:]
+            key = self._key(parent, chunk)
+            node = self._nodes.get(key)
+            if node is None:
+                self._insert(key, parent, req.block_table[S // bs], chunk)
+
+    def _insert(self, key: int, parent: int, bid: int,
+                chunk: np.ndarray) -> _PrefixNode:
+        if bid in self._by_block:          # block already indexed (aliased)
+            return self._nodes[self._by_block[bid]]
+        self.pool.share([bid])
+        self._clock += 1
+        node = _PrefixNode(key, parent, bid, np.array(chunk), self._clock)
+        self._nodes[key] = node
+        self._by_block[bid] = key
+        self._children.setdefault(parent, []).append(key)
+        return node
 
 
 class Scheduler:
     def __init__(self, n_slots: int, pool: BlockPool, max_len: int,
-                 swap_pool: Optional[BlockPool] = None):
+                 swap_pool: Optional[BlockPool] = None,
+                 prefix_cache: Optional[PrefixCache] = None):
         self.n_slots = n_slots
         self.pool = pool
         self.max_len = max_len
         self.swap_pool = swap_pool
+        self.prefix_cache = prefix_cache
         self.waiting: List[Tuple[float, int, Request]] = []    # heap
         self.swapped: deque = deque()
         self.running: Dict[int, Request] = {}                  # slot → request
@@ -221,6 +462,69 @@ class Scheduler:
         if req.t_admit is None:
             req.t_admit = now
 
+    def _check_write_block(self, req: Request) -> None:
+        """The block the request's next decode writes (row ``cached_len``)
+        must be table-exclusive — aliased by no other table, at most retained
+        by the prefix cache.  A violation means a COW fork was missed; fail
+        loudly here instead of silently corrupting a shared prefix."""
+        idx = req.cached_len // self.pool.block_size
+        if idx >= len(req.block_table):
+            return                          # request was preempted this step
+        bid = req.block_table[idx]
+        refs = self.pool.refs(bid)
+        if self.prefix_cache is not None and self.prefix_cache.holds(bid):
+            refs -= 1
+        if refs != 1:
+            raise RuntimeError(
+                f"request {req.rid}: decode write row {req.cached_len} lands "
+                f"in block {bid} carrying {refs} table claims — missed COW "
+                f"fork would corrupt a shared prefix")
+
+    def _admission_blocks(self, req: Request
+                          ) -> Tuple[Optional[List[int]], Optional[PrefixGrant]]:
+        """Block table for an admission: aliased shared-prefix blocks (+ one
+        COW fork) plus freshly allocated *marginal* blocks.  None ⇒ the pool
+        cannot cover the marginal need (claims rolled back, nothing leaked).
+        """
+        need = self.pool.blocks_for(req.cached_len + 1)
+        if self.prefix_cache is not None and not req.extras:
+            toks = req.replay_tokens()
+            ids, p, src = self.prefix_cache.match(toks, limit=toks.shape[-1] - 1)
+            if (ids or p) and self.pool.available_blocks < need - len(ids):
+                # cannot cover the marginal need even with eviction: bail
+                # before touching any claims, so a stalled head-of-queue
+                # request retried every step neither churns fork blocks nor
+                # evicts resident chains for nothing
+                return None, None
+            if ids or p:
+                self.pool.share(ids)
+                table = list(ids)
+                fork = None
+                if p:
+                    self.pool.share([src])
+                    dst = self.pool.fork(src)
+                    if dst is None:        # exhausted mid-fork: roll back
+                        self.pool.free([src])
+                        self.pool.free(ids)
+                        return None, None
+                    table.append(dst)
+                    fork = (src, dst)
+                got = self.pool.alloc(need - len(table))
+                if got is None:            # marginal blocks unavailable
+                    self.pool.free(table[len(ids):])   # the fork block
+                    self.pool.free(ids)
+                    return None, None
+                table += got
+                # cache hit/fork accounting only on *placed* admissions
+                self.prefix_cache.hit_tokens += len(ids) * self.pool.block_size + p
+                if fork is not None:
+                    self.prefix_cache.forks += 1
+                grant = PrefixGrant(start=len(ids) * self.pool.block_size + p,
+                                    shared_blocks=len(ids), fork=fork)
+                return table, grant
+        got = self.pool.alloc(need)
+        return (got, None) if got is not None else (None, None)
+
     def plan(self, now: float) -> StepPlan:
         plan = StepPlan()
 
@@ -237,6 +541,8 @@ class Scheduler:
                     break
             if len(req.block_table) != grew:
                 self.table_version += 1
+            if req.slot >= 0:
+                self._check_write_block(req)
 
         if plan.preempt:
             return plan                    # let freed blocks settle one step
@@ -256,16 +562,23 @@ class Scheduler:
         # 3. admit arrived requests into the remaining free slots.  Not while
         # a swapped request is starved for blocks: a new admission would eat
         # the very blocks it is waiting for (resume priority must hold for
-        # blocks, not just slots).
+        # blocks, not just slots).  Admission allocates only the *marginal*
+        # blocks beyond the resident shared prefix, and registers the new
+        # prompt chain so later arrivals can share it.
         while self.waiting and self.free_slots and not resume_starved:
             arrival, _, req = self.waiting[0]
             if arrival > now:
                 break
-            got = self.pool.alloc(self.pool.blocks_for(req.cached_len + 1))
-            if got is None:
+            table, grant = self._admission_blocks(req)
+            if table is None:
                 break
             heapq.heappop(self.waiting)
-            self._place(req, got, now)
+            self._place(req, table, now)
+            if grant is not None:
+                plan.grants[req.rid] = grant
+            if self.prefix_cache is not None and not req.extras:
+                self.prefix_cache.register(req)
+            self._check_write_block(req)
             plan.admit.append(req)
 
         return plan
@@ -315,7 +628,7 @@ class Scheduler:
                     - len(r.block_table))
                 for r in running)
 
-        while h > 1 and extra_blocks(h) > self.pool.free_blocks:
+        while h > 1 and extra_blocks(h) > self.pool.available_blocks:
             h //= 2
         if h > 1:
             grew = False

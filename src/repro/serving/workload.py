@@ -29,6 +29,12 @@ class WorkloadSpec:
     prompt_weights: Optional[Tuple[float, ...]] = None
     gen_buckets: Tuple[int, ...] = (8, 32)
     gen_weights: Optional[Tuple[float, ...]] = None
+    # shared system prompt: every request's prompt starts with the same
+    # ``shared_prefix`` tokens (drawn once per seed), split over
+    # ``share_groups`` distinct system prompts round-robin — the workload
+    # prefix sharing dedups.  ``prompt_buckets`` then sizes the unique tail.
+    shared_prefix: int = 0
+    share_groups: int = 1
 
 
 # Scenario presets (lengths are smoke-scale; scale up for full configs).
@@ -41,6 +47,9 @@ SCENARIOS: Dict[str, WorkloadSpec] = {
     # bursty arrivals of long-tail requests — exercises queueing + preemption
     "bursty": WorkloadSpec(burst=4, rate=10.0, prompt_buckets=(16, 48),
                            gen_buckets=(8, 64), gen_weights=(0.7, 0.3)),
+    # shared system prompt + unique user tails — the prefix-sharing workload
+    "shared": WorkloadSpec(shared_prefix=96, prompt_buckets=(8, 16),
+                           gen_buckets=(8, 16)),
 }
 
 
@@ -60,15 +69,27 @@ def _draw(rng, buckets, weights, n):
 
 def make_requests(cfg: ModelConfig, spec: WorkloadSpec, seed: int = 0,
                   start_rid: int = 0) -> List[Request]:
-    """Build ``spec.n_requests`` synthetic requests for ``cfg``."""
+    """Build ``spec.n_requests`` synthetic requests for ``cfg``.
+
+    With ``spec.shared_prefix > 0``, request ``i`` prepends system prompt
+    ``i % spec.share_groups`` (each ``shared_prefix`` tokens, drawn once) to
+    its unique ``prompt_buckets``-sized tail.
+    """
     rng = np.random.default_rng(seed)
     arrivals = poisson_arrivals(rng, spec.n_requests, spec.rate, spec.burst)
     plens = _draw(rng, spec.prompt_buckets, spec.prompt_weights, spec.n_requests)
     gens = _draw(rng, spec.gen_buckets, spec.gen_weights, spec.n_requests)
+    lead = lambda n: (cfg.n_codebooks, n) if cfg.n_codebooks > 1 else (n,)
+    systems = [rng.integers(0, cfg.vocab, size=lead(spec.shared_prefix),
+                            dtype=np.int32)
+               for _ in range(spec.share_groups)] if spec.shared_prefix else []
     out = []
     for i in range(spec.n_requests):
-        shape = (cfg.n_codebooks, int(plens[i])) if cfg.n_codebooks > 1 else (int(plens[i]),)
-        prompt = rng.integers(0, cfg.vocab, size=shape, dtype=np.int32)
+        prompt = rng.integers(0, cfg.vocab, size=lead(int(plens[i])),
+                              dtype=np.int32)
+        if systems:
+            prompt = np.concatenate(
+                [systems[i % spec.share_groups], prompt], axis=-1)
         out.append(Request(rid=start_rid + i, prompt=prompt,
                            max_new=int(gens[i]), arrival=float(arrivals[i])))
     return out

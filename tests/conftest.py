@@ -7,3 +7,25 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # NOTE: device count is deliberately NOT forced here — smoke tests and
 # benches must see the 1 real CPU device.  Multi-device tests spawn
 # subprocesses with XLA_FLAGS set (tests/test_distributed.py).
+
+# Hypothesis profiles for the property suites (test_serving_props.py,
+# test_paged_attn.py fuzz).  "ci" bounds examples and points at an explicit
+# on-disk example database so a failing run's falsifying examples can be
+# uploaded as a CI artifact and replayed locally; the seed is pinned from
+# the CLI (--hypothesis-seed=0) rather than derandomize=True, because
+# derandomizing disables the database and would leave the artifact empty.
+# Select with --hypothesis-profile=ci.  Optional: the suites fall back to
+# seeded sweeps when hypothesis is absent.
+try:
+    from hypothesis import settings
+    from hypothesis.database import DirectoryBasedExampleDatabase
+
+    settings.register_profile(
+        "ci", max_examples=40, deadline=None, print_blob=True,
+        database=DirectoryBasedExampleDatabase(
+            os.path.join(os.path.dirname(__file__), "..", ".hypothesis",
+                         "examples")))
+    settings.register_profile("dev", max_examples=15, deadline=None)
+    settings.load_profile("dev")
+except ImportError:
+    pass

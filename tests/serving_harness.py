@@ -1,0 +1,68 @@
+"""Shared harness for serving-engine parity test families.
+
+Every engine parity family (dense-vs-paged, H>1-vs-H=1, preempted-vs-
+unconstrained, prefix-shared-vs-unshared) runs the same shape of experiment:
+build an engine with one knob flipped, drive an identical request stream,
+and compare token streams + summaries.  This module holds that one copy —
+``run_workload`` — plus the smoke-config materializer and the standard
+mixed-length workload, so each new parity family is a few lines instead of
+another private ``_run_*`` helper.
+
+Token streams are returned as ``{rid: [token-tuple, ...]}`` with each token
+flattened to a tuple, which makes single- and multi-codebook models compare
+under the same ``==``.
+"""
+import numpy as np
+
+# One arch per cache family: dense GQA, sliding-window hybrid (ring buffer +
+# SSM state), MLA + MoE (batch-coupled capacity routing is the trap here).
+PARITY_ARCHS = ["phi4-mini-3.8b", "hymba-1.5b", "deepseek-v3-671b"]
+
+# One arch per cache family plus MoE-over-paged-GQA, recurrent-only xLSTM and
+# the multi-codebook [B, K, H] token-block layout.
+HORIZON_ARCHS = ["phi4-mini-3.8b", "qwen3-moe-235b-a22b", "hymba-1.5b",
+                 "deepseek-v3-671b", "xlstm-350m", "musicgen-medium"]
+
+
+def materialize(arch: str):
+    """(smoke config, materialized params) for one arch id."""
+    import jax
+    from repro.models import lm as lm_mod, registry
+    from repro.nn import module as nnmod
+    cfg = registry.get_smoke(arch)
+    params = nnmod.materialize(lm_mod.param_spec(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def mixed_spec(n_requests: int = 5, **overrides):
+    """The standard mixed-length all-arrived stream the parity families use."""
+    from repro.serving import WorkloadSpec
+    kw = dict(n_requests=n_requests, rate=1e9, prompt_buckets=(8, 16),
+              gen_buckets=(4, 24))
+    kw.update(overrides)
+    return WorkloadSpec(**kw)
+
+
+def token_streams(requests):
+    """{rid: [token-tuple, ...]} — codebook-agnostic comparable form."""
+    return {r.rid: [tuple(np.asarray(t).ravel().tolist()) for t in r.generated]
+            for r in requests}
+
+
+def run_workload(cfg, params, *, slots: int = 3, max_len: int = 48,
+                 block_size: int = 8, spec=None, seed: int = 9,
+                 requests=None, **engine_kwargs):
+    """Drive one engine over a request stream; returns (token streams, summary).
+
+    ``engine_kwargs`` carry the knob under test (``paged=``, ``horizon=``,
+    ``n_blocks=``/``swap_blocks=``, ``prefix_sharing=``, sampling…).
+    ``requests`` overrides the synthetic stream (e.g. extras-carrying
+    requests); otherwise ``spec`` (default :func:`mixed_spec`) generates it.
+    """
+    from repro.serving import ServingEngine, make_requests
+    eng = ServingEngine(cfg, slots=slots, max_len=max_len,
+                        block_size=block_size, params=params, **engine_kwargs)
+    if requests is None:
+        requests = make_requests(cfg, spec or mixed_spec(), seed=seed)
+    summary = eng.run(requests)
+    return token_streams(requests), summary

@@ -96,6 +96,93 @@ def test_zero_length_slot_yields_zeros_not_nan():
     assert np.abs(out[1]).max() > 0
 
 
+def test_duplicate_block_ids_across_slots_alias_same_memory():
+    """Prefix sharing points *different slots'* tables at the SAME pool
+    blocks.  Two slots whose tables share a block prefix (same ids, same
+    lengths over that prefix) must read identical K/V through the alias —
+    and the reference oracle must agree on arbitrary duplicated tables."""
+    rng = np.random.default_rng(11)
+    B, H, Hkv, D, bs, P = 4, 4, 2, 16, 8, 5
+    q, kp, vp, tables, lengths = _rand_pool(rng, B, H, Hkv, D, bs, P)
+    t = np.array(tables)
+    t[1, :3] = t[0, :3]                   # slots 0/1 share a 3-block prefix
+    t[3] = t[2]                           # slot 3 fully aliases slot 2
+    tables = jnp.asarray(t)
+    lengths = jnp.asarray([3 * bs, 3 * bs, 17, 17], jnp.int32)
+    out = paged_attention(q, kp, vp, tables, lengths)
+    ref = paged_attn_ref(q.reshape(B, Hkv, H // Hkv, D), kp, vp, tables,
+                         lengths).reshape(B, H, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+    # identical query + fully shared prefix ⇒ identical attention output
+    q2 = q.at[1].set(q[0]).at[3].set(q[2])
+    out2 = np.asarray(paged_attention(q2, kp, vp, tables, lengths))
+    np.testing.assert_allclose(out2[0], out2[1], atol=2e-5)
+    np.testing.assert_allclose(out2[2], out2[3], atol=2e-5)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_kernel_fuzz_random_geometry_vs_ref_seeded(seed):
+    """Seeded slice of the fuzz sweep (runs without hypothesis): random
+    (lengths, block_size, window, int8, GQA ratio, duplicated tables) must
+    match the reference oracle."""
+    _fuzz_case(np.random.default_rng(seed))
+
+
+def _fuzz_case(rng, geom=None):
+    B = int(geom["B"]) if geom else int(rng.integers(1, 4))
+    Hkv = int(geom["Hkv"]) if geom else int(rng.integers(1, 3))
+    G = int(geom["G"]) if geom else int(rng.integers(1, 5))
+    D = int(geom["D"]) if geom else int(rng.choice([8, 16]))
+    bs = int(geom["bs"]) if geom else int(rng.choice([4, 8]))
+    P = int(geom["P"]) if geom else int(rng.integers(2, 6))
+    window = int(geom["window"]) if geom else int(rng.choice([0, 0, 5, 12]))
+    int8 = bool(geom["int8"]) if geom else bool(rng.integers(0, 2))
+    dup = bool(geom["dup"]) if geom else bool(rng.integers(0, 2))
+    H = Hkv * G
+    q, kp, vp, tables, lengths = _rand_pool(rng, B, H, Hkv, D, bs, P, int8)
+    lengths = jnp.asarray(rng.integers(0, P * bs + 1, B), jnp.int32)
+    if dup and B > 1:
+        t = np.array(tables)
+        k = int(rng.integers(1, P + 1))
+        t[1, :k] = t[0, :k]               # cross-slot duplicated ids
+        tables = jnp.asarray(t)
+    kv_scale = KV_SCALE if int8 else None
+    out = paged_attention(q, kp, vp, tables, lengths, window=window,
+                          kv_scale=kv_scale)
+    ref = paged_attn_ref(q.reshape(B, Hkv, G, D), kp, vp, tables, lengths,
+                         window=window, kv_scale=kv_scale).reshape(B, H, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5,
+                               err_msg=str((B, Hkv, G, D, bs, P, window,
+                                            int8, dup, np.asarray(lengths))))
+
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    @pytest.mark.slow
+    @settings(max_examples=20, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(data=st.data(), seed=st.integers(0, 2**31 - 1))
+    def test_kernel_fuzz_random_geometry_vs_ref_hypothesis(data, seed):
+        """Hypothesis-driven fuzz over the same geometry space, shrinking
+        failures to a minimal (geometry, seed) pair."""
+        geom = {
+            "B": data.draw(st.integers(1, 3)),
+            "Hkv": data.draw(st.integers(1, 2)),
+            "G": data.draw(st.integers(1, 4)),
+            "D": data.draw(st.sampled_from([8, 16])),
+            "bs": data.draw(st.sampled_from([4, 8])),
+            "P": data.draw(st.integers(2, 5)),
+            "window": data.draw(st.sampled_from([0, 5, 12])),
+            "int8": data.draw(st.booleans()),
+            "dup": data.draw(st.booleans()),
+        }
+        _fuzz_case(np.random.default_rng(seed), geom)
+except ImportError:                       # container without test extras
+    pass
+
+
 def test_stale_block_contents_invisible():
     """Rows at or beyond a slot's length live in reallocated blocks that may
     hold a previous occupant's K/V — they must not leak into the output."""

@@ -4,13 +4,18 @@ randomized request stream, and end-to-end engine correctness.
 The engine tests pin the strongest property available: the continuous-
 batching path is *token-for-token* equal to (a) the static-batch loop on a
 uniform workload and (b) an unconstrained run when preemption (swap AND
-recompute) is forced by a tight block pool.
+recompute) is forced by a tight block pool, and (c) a prefix-shared run is
+token-identical to the unshared engine on shared-prompt streams.  The engine
+parity families share one harness (tests/serving_harness.py).
 """
 import numpy as np
 import pytest
 
+from serving_harness import (HORIZON_ARCHS, PARITY_ARCHS, materialize,
+                             mixed_spec, run_workload, token_streams)
+
 from repro.serving.blocks import BlockPool
-from repro.serving.scheduler import Request, RequestState, Scheduler
+from repro.serving.scheduler import PrefixCache, Request, RequestState, Scheduler
 
 
 # ---------------------------------------------------------------------------
@@ -60,9 +65,17 @@ def test_block_pool_extend_to():
     assert pool.extend_to(table, 9)                  # 3 blocks
     assert len(table) == 3 and pool.free_blocks == 1
     assert pool.extend_to(table, 12) and len(table) == 3   # already covered
-    assert not pool.extend_to(table, 20)             # needs 5, has 3+1
-    assert len(table) == 3 and pool.free_blocks == 1 # all-or-nothing: no change
+    # a grant beyond *total* pool capacity can never be satisfied: it must
+    # fail loudly instead of silently reporting "try again later" (the
+    # caller would preempt victims forever without ever meeting it)
+    with pytest.raises(ValueError):
+        pool.extend_to(table, 20)                    # needs 5, pool has 4
+    assert len(table) == 3 and pool.free_blocks == 1 # no change on failure
     assert pool.extend_to(table, 16) and len(table) == 4
+    # within capacity but currently short stays the quiet all-or-nothing False
+    other: list = []
+    assert not pool.extend_to(other, 8)
+    assert other == []
 
 
 def test_block_pool_randomized_invariants():
@@ -286,6 +299,185 @@ def test_scheduler_table_version_tracks_mutations():
 
 
 # ---------------------------------------------------------------------------
+# prefix cache: refcounted sharing + COW forks (pure bookkeeping, no jax)
+# ---------------------------------------------------------------------------
+
+def test_block_pool_refcounts_share_free_fork():
+    pool = BlockPool(8, 4)
+    a = pool.alloc(2)
+    pool.share(a)                                     # second claim
+    assert all(pool.refs(b) == 2 for b in a)
+    pool.free(a)
+    assert all(pool.refs(b) == 1 for b in a)          # still allocated
+    assert pool.free_blocks == 6
+    # COW fork: exclusive → in place; shared → fresh block, claim moved
+    assert pool.fork(a[0]) == a[0]
+    pool.share([a[0]])
+    dst = pool.fork(a[0])
+    assert dst not in a and pool.refs(dst) == 1 and pool.refs(a[0]) == 1
+    pool.free(a)
+    pool.free([dst])
+    assert pool.free_blocks == 8 and pool.used_blocks == 0
+    with pytest.raises(ValueError):
+        pool.share([a[0]])                            # share of a free block
+    with pytest.raises(ValueError):
+        pool.fork(a[0])
+
+
+def _sched_with_cache(n_blocks=16, bs=4, slots=4, max_len=64):
+    pool = BlockPool(n_blocks, bs)
+    cache = PrefixCache(pool, bs)
+    sched = Scheduler(slots, pool, max_len=max_len, prefix_cache=cache)
+    return pool, cache, sched
+
+
+def _tok_req(rid, toks, gen, arrival=0.0):
+    return Request(rid=rid, prompt=np.asarray(toks, np.int32), max_new=gen,
+                   arrival=arrival)
+
+
+def test_prefix_admission_aliases_blocks_and_allocates_marginal():
+    pool, cache, sched = _sched_with_cache()
+    base = list(range(11))                           # 2 full blocks + 3 partial
+    r0 = _tok_req(0, base + [90], 4)                 # 12 tokens: 3 full blocks
+    r1 = _tok_req(1, base + [91], 4)                 # shares 8 full + 3 partial
+    sched.submit(r0), sched.submit(r1)
+    plan = sched.plan(0.0)
+    assert [r.rid for r in plan.admit] == [0, 1]
+    g1 = plan.grants[1]
+    assert 0 not in plan.grants                      # nothing resident for r0
+    assert g1.shared_blocks == 2 and g1.start == 11  # 8 aliased + 3 via fork
+    assert g1.fork is not None
+    src, dst = g1.fork
+    assert src == r0.block_table[2] and dst == r1.block_table[2]
+    assert r1.block_table[:2] == r0.block_table[:2]  # aliased ids
+    # refcounts: shared full blocks = r0 + r1 + cache; r0's partial = r0 + cache
+    for b in r0.block_table[:2]:
+        assert pool.refs(b) == 3
+    assert pool.refs(src) == 2
+    # marginal accounting: r1 allocated only its fork + unshared tail
+    need = pool.blocks_for(r1.cached_len + 1)
+    held = {b for r in (r0, r1) for b in r.block_table}
+    assert len(held) == pool.blocks_for(r0.cached_len + 1) + need - 2
+    # completion releases claims; the cache retains the prompt chain but the
+    # decode-tail block (no prompt rows) goes back to the free list
+    t0 = list(r0.block_table)
+    r0.generated.extend([0] * 4)
+    sched.complete(r0, 1.0)
+    assert r0.block_table == []
+    assert all(pool.refs(b) >= 1 for b in t0[:3])    # prompt blocks retained
+    assert pool.refs(t0[3]) == 0
+
+
+def test_prefix_cache_retains_after_completion_and_rematches():
+    pool, cache, sched = _sched_with_cache()
+    toks = list(range(10))
+    r0 = _tok_req(0, toks, 2)
+    sched.submit(r0)
+    sched.plan(0.0)
+    t0 = list(r0.block_table)
+    r0.generated.extend([0, 0])
+    sched.complete(r0, 1.0)
+    assert len(cache) == 3                           # 2 full + 1 partial node
+    assert pool.used_blocks == 3                     # retained by the cache
+    r1 = _tok_req(1, toks, 2, arrival=2.0)           # identical prompt, later
+    sched.submit(r1)
+    plan = sched.plan(2.0)
+    g = plan.grants[1]
+    assert g.shared_blocks == 2 and g.start == 9     # limit = prompt_len - 1
+    assert r1.block_table[:2] == t0[:2]
+    assert g.fork is not None and g.fork[0] == t0[2]
+
+
+def test_prefix_cache_evicts_lru_under_pressure():
+    pool, cache, sched = _sched_with_cache(n_blocks=6, bs=4, slots=2, max_len=24)
+    r0 = _tok_req(0, list(range(8)), 2)              # 2 full blocks + 1 row
+    sched.submit(r0)
+    sched.plan(0.0)
+    r0.generated.extend([0, 0])
+    sched.complete(r0, 1.0)
+    assert pool.used_blocks == 2 and cache.reclaimable() == 2
+    # a non-matching admission needs 6 blocks: the cache must give its 2 back
+    r1 = _tok_req(1, [50 + i for i in range(20)], 4, arrival=2.0)
+    sched.submit(r1)
+    plan = sched.plan(2.0)
+    assert [r.rid for r in plan.admit] == [1]
+    # r0's chain was evicted to make room (unmatchable now); the cache holds
+    # only r1's freshly registered 5-block prompt chain
+    ids, p, src = cache.match(np.asarray(list(range(8)), np.int32), limit=7)
+    assert ids == [] and p == 0
+    assert len(cache) == 5
+    held = set(r1.block_table)
+    assert pool.free_blocks + len(held) == pool.n_blocks
+
+
+def test_prefix_shared_block_never_freed_while_referenced():
+    """Preempting (recompute) a request that shares prefix blocks must only
+    drop its claims: the co-resident request still reads those blocks."""
+    pool, cache, sched = _sched_with_cache(n_blocks=8, bs=4, slots=2, max_len=32)
+    toks = list(range(8))
+    r0 = _tok_req(0, toks, 16, arrival=0.0)
+    r1 = _tok_req(1, toks, 16, arrival=0.1)
+    sched.submit(r0), sched.submit(r1)
+    plan = sched.plan(1.0)
+    # limit = prompt_len - 1 = 7: one aliased full block + COW fork of the 2nd
+    assert len(plan.admit) == 2 and plan.grants[1].shared_blocks == 1
+    assert plan.grants[1].fork is not None
+    shared = r0.block_table[:1]
+    for r in plan.admit:
+        r.generated.append(0)
+    # drive both until the pool runs dry → youngest (r1) preempts
+    for step in range(32):
+        for r in list(sched.running.values()):
+            r.generated.append(0)
+        plan = sched.plan(2.0 + step)
+        if plan.preempt:
+            break
+    assert plan.preempt and plan.preempt[0][0] is r1
+    # r1's claims dropped, but the shared blocks still carry r0 + cache
+    for b in shared:
+        assert pool.refs(b) == 2
+    held = {b for r in sched.running.values() for b in r.block_table}
+    assert set(shared) <= held
+
+
+def test_write_block_guard_detects_missed_cow_fork():
+    """If a block the next decode writes is aliased by another table, plan()
+    must fail loudly instead of corrupting the shared prefix."""
+    pool, cache, sched = _sched_with_cache()
+    r0 = _tok_req(0, list(range(9)), 4)
+    sched.submit(r0)
+    sched.plan(0.0)
+    r0.generated.append(0)
+    # simulate a missed COW fork: another table aliases r0's write block
+    pool.share([r0.block_table[2]])
+    with pytest.raises(RuntimeError, match="COW"):
+        sched.plan(1.0)
+
+
+def test_extend_to_capacity_overflow_fails_loudly_in_growth():
+    """Regression: a mid-horizon grant whose target exceeds *total* pool
+    capacity must raise out of extend_to, not silently under-deliver.  The
+    scheduler path cannot reach it (submit validates), so drive extend_to
+    the way grant_horizon does with a tight pool."""
+    pool = BlockPool(3, 4)
+    table = pool.alloc(3)
+    with pytest.raises(ValueError, match="exceeds.*capacity|capacity"):
+        pool.extend_to(table, 16)                    # 4 blocks > 3 total
+    assert len(table) == 3                           # untouched
+    # grant_horizon on a tight pool halves the grant instead of tripping it
+    pool2 = BlockPool(6, 4)
+    sched = Scheduler(2, pool2, max_len=24)
+    for i, g in enumerate((12, 12)):
+        sched.submit(_mk_req(i, 8, g))
+    plan = sched.plan(0.0)
+    for r in plan.admit:
+        _drive(r)
+    assert pool2.free_blocks == 0
+    assert sched.grant_horizon(8, now=0.0) == 4      # headroom-capped, no raise
+
+
+# ---------------------------------------------------------------------------
 # paged store: block-table handoff swap (jax, no model)
 # ---------------------------------------------------------------------------
 
@@ -346,19 +538,10 @@ def test_paged_store_requires_dev_ids_for_pool_leaves():
 # engine end-to-end (jax)
 # ---------------------------------------------------------------------------
 
-# One arch per cache family: dense GQA, sliding-window hybrid (ring buffer +
-# SSM state), MLA + MoE (batch-coupled capacity routing is the trap here).
-PARITY_ARCHS = ["phi4-mini-3.8b", "hymba-1.5b", "deepseek-v3-671b"]
-
 
 @pytest.fixture(scope="module", params=PARITY_ARCHS)
 def smoke_setup(request):
-    import jax
-    from repro.models import lm as lm_mod, registry
-    from repro.nn import module as nnmod
-    cfg = registry.get_smoke(request.param)
-    params = nnmod.materialize(lm_mod.param_spec(cfg), jax.random.PRNGKey(0))
-    return cfg, params
+    return materialize(request.param)
 
 
 def test_engine_parity_with_static_serve(smoke_setup):
@@ -386,16 +569,7 @@ def test_engine_chunked_prefill_matches_single_chunk(smoke_setup):
 
 
 def _run_workload(cfg, params, n_blocks, swap_blocks):
-    from repro.serving import ServingEngine, WorkloadSpec, make_requests
-    eng = ServingEngine(cfg, slots=3, max_len=48, block_size=8,
-                        n_blocks=n_blocks, swap_blocks=swap_blocks,
-                        params=params)
-    reqs = make_requests(cfg, WorkloadSpec(n_requests=5, rate=1e9,
-                                           prompt_buckets=(8, 16),
-                                           gen_buckets=(4, 24)), seed=9)
-    summary = eng.run(reqs)
-    toks = {r.rid: [int(np.asarray(t)) for t in r.generated] for r in reqs}
-    return toks, summary
+    return run_workload(cfg, params, n_blocks=n_blocks, swap_blocks=swap_blocks)
 
 
 def test_engine_continuous_batching_mixed_lengths(smoke_setup):
@@ -447,12 +621,9 @@ def test_engine_vision_extras_survive_recompute_preemption():
         return out
 
     def run(n_blocks):
-        eng = ServingEngine(cfg, slots=3, max_len=48, block_size=8,
-                            n_blocks=n_blocks, params=params)
-        reqs = mk_reqs()
-        s = eng.run(reqs)
-        return ({r.rid: [int(np.asarray(t).ravel()[0]) for t in r.generated]
-                 for r in reqs}, s["preemptions"]["recompute"])
+        toks, s = run_workload(cfg, params, n_blocks=n_blocks,
+                               requests=mk_reqs())
+        return toks, s["preemptions"]["recompute"]
 
     rng = np.random.default_rng(0)
     full, _ = run(3 * 6)
@@ -466,26 +637,11 @@ def test_engine_paged_vs_dense_cache_parity():
     """The paged physical block store must be token-for-token equal to the
     PR-1 dense live cache, with and without memory pressure, while holding
     measurably fewer device KV bytes on a tight pool."""
-    import jax
-    from repro.models import lm as lm_mod, registry
-    from repro.nn import module as nnmod
-    cfg = registry.get_smoke("phi4-mini-3.8b")
-    params = nnmod.materialize(lm_mod.param_spec(cfg), jax.random.PRNGKey(0))
-
-    def run(paged, n_blocks):
-        from repro.serving import ServingEngine, WorkloadSpec, make_requests
-        eng = ServingEngine(cfg, slots=3, max_len=48, block_size=8,
-                            n_blocks=n_blocks, params=params, paged=paged)
-        reqs = make_requests(cfg, WorkloadSpec(n_requests=5, rate=1e9,
-                                               prompt_buckets=(8, 16),
-                                               gen_buckets=(4, 24)), seed=9)
-        s = eng.run(reqs)
-        return ({r.rid: [int(np.asarray(t)) for t in r.generated] for r in reqs}, s)
-
-    dense, sd = run(False, None)
-    paged, sp = run(True, None)
-    tight, st = run(True, 7)                         # 18 dense-equivalent blocks → 7+1
-    assert dense == paged == tight
+    cfg, params = materialize("phi4-mini-3.8b")
+    dense, sd = run_workload(cfg, params, paged=False)
+    paged, sp = run_workload(cfg, params, paged=True)
+    tight, st = run_workload(cfg, params, paged=True, n_blocks=7)
+    assert dense == paged == tight                   # 18 dense-equiv blocks → 7+1
     assert st["preemptions"]["recompute"] > 0        # pressure actually hit
     assert st["kv_cache_bytes"] < sd["kv_cache_bytes"] / 2
 
@@ -542,37 +698,14 @@ def test_sample_tokens_top_k_membership_and_greedy():
 # horizon-batched decode (jax)
 # ---------------------------------------------------------------------------
 
-# One arch per cache family: paged dense GQA, MoE (drop-free routing) over
-# paged GQA, sliding-window ring + SSM state, MLA + MoE, recurrent-only
-# xLSTM.  musicgen adds the multi-codebook [B, K, H] token-block layout.
-HORIZON_ARCHS = ["phi4-mini-3.8b", "qwen3-moe-235b-a22b", "hymba-1.5b",
-                 "deepseek-v3-671b", "xlstm-350m", "musicgen-medium"]
-
 
 @pytest.fixture(scope="module", params=HORIZON_ARCHS)
 def horizon_setup(request):
-    import jax
-    from repro.models import lm as lm_mod, registry
-    from repro.nn import module as nnmod
-    cfg = registry.get_smoke(request.param)
-    params = nnmod.materialize(lm_mod.param_spec(cfg), jax.random.PRNGKey(0))
-    return cfg, params
+    return materialize(request.param)
 
 
-def _run_horizon(cfg, params, horizon, *, n_blocks=None, swap_blocks=0,
-                 eos_id=None, temperature=0.0, top_k=0):
-    from repro.serving import ServingEngine, WorkloadSpec, make_requests
-    eng = ServingEngine(cfg, slots=3, max_len=48, block_size=8,
-                        n_blocks=n_blocks, swap_blocks=swap_blocks,
-                        params=params, horizon=horizon, eos_id=eos_id,
-                        temperature=temperature, top_k=top_k)
-    reqs = make_requests(cfg, WorkloadSpec(n_requests=5, rate=1e9,
-                                           prompt_buckets=(8, 16),
-                                           gen_buckets=(4, 24)), seed=9)
-    summary = eng.run(reqs)
-    toks = {r.rid: [tuple(np.asarray(t).ravel().tolist()) for t in r.generated]
-            for r in reqs}
-    return toks, summary
+def _run_horizon(cfg, params, horizon, **kwargs):
+    return run_workload(cfg, params, horizon=horizon, **kwargs)
 
 
 def test_engine_horizon_token_parity_all_families(horizon_setup):
@@ -592,11 +725,7 @@ def test_engine_horizon_sampled_parity():
     """Sampled decode folds the *global* step counter into the key, so a
     horizon run reproduces the single-step stream when the slot schedule
     matches (all-arrived workload, no preemption)."""
-    import jax
-    from repro.models import lm as lm_mod, registry
-    from repro.nn import module as nnmod
-    cfg = registry.get_smoke("phi4-mini-3.8b")
-    params = nnmod.materialize(lm_mod.param_spec(cfg), jax.random.PRNGKey(0))
+    cfg, params = materialize("phi4-mini-3.8b")
     base, _ = _run_horizon(cfg, params, 1, temperature=1.0, top_k=5)
     fused, _ = _run_horizon(cfg, params, 8, temperature=1.0, top_k=5)
     greedy, _ = _run_horizon(cfg, params, 8)
@@ -608,11 +737,7 @@ def test_engine_horizon_eos_freeze_mid_horizon():
     """EOS must freeze a slot mid-horizon on-device exactly where the host
     path stops it: pick a token that actually occurs mid-stream in the
     baseline, declare it EOS, and require identical truncated streams."""
-    import jax
-    from repro.models import lm as lm_mod, registry
-    from repro.nn import module as nnmod
-    cfg = registry.get_smoke("phi4-mini-3.8b")
-    params = nnmod.materialize(lm_mod.param_spec(cfg), jax.random.PRNGKey(0))
+    cfg, params = materialize("phi4-mini-3.8b")
     base, _ = _run_horizon(cfg, params, 1)
     rid = idx = eos = None
     for r, stream in sorted(base.items()):   # first token not repeated earlier
@@ -679,17 +804,135 @@ def test_engine_horizon_timestamps_use_engine_clock():
 
 
 def test_engine_horizon_dispatch_observables():
-    import jax
-    from repro.models import lm as lm_mod, registry
-    from repro.nn import module as nnmod
-    cfg = registry.get_smoke("phi4-mini-3.8b")
-    params = nnmod.materialize(lm_mod.param_spec(cfg), jax.random.PRNGKey(0))
+    cfg, params = materialize("phi4-mini-3.8b")
     _, s = _run_horizon(cfg, params, 4)
     assert s["decode_dispatches"] > 0
     assert s["decode_steps"] > s["decode_dispatches"]     # amortization real
     assert s["host_syncs"] <= s["dispatches"]
     assert s["tokens_per_dispatch"] == pytest.approx(
         s["decode_tokens"] / s["decode_dispatches"])
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing end-to-end (jax)
+# ---------------------------------------------------------------------------
+
+def _shared_spec(**kw):
+    return mixed_spec(n_requests=6, shared_prefix=kw.pop("shared_prefix", 16),
+                      prompt_buckets=(8, 16), gen_buckets=(4, 24), **kw)
+
+
+# phi4 pins the single-codebook paged family; musicgen pins the multi-
+# codebook [K, S] prompt hashing + token-block layout.
+@pytest.mark.parametrize("arch", ["phi4-mini-3.8b", "musicgen-medium"])
+def test_engine_prefix_sharing_token_parity_and_savings(arch):
+    """Shared-prompt streams must be token-identical with sharing on vs off,
+    while actually skipping prefill work and referencing fewer blocks."""
+    cfg, params = materialize(arch)
+    base, sb = run_workload(cfg, params, max_len=64, spec=_shared_spec(),
+                            prefix_sharing=False)
+    shared, ss = run_workload(cfg, params, max_len=64, spec=_shared_spec(),
+                              prefix_sharing=True)
+    assert base == shared
+    assert ss["prefix"]["hit_tokens"] > 0
+    assert ss["prefix"]["shared_blocks"] > 0
+    assert ss["prefill_tokens"] < sb["prefill_tokens"]
+    assert (ss["prefix"]["mean_referenced_blocks"]
+            < sb["prefix"]["mean_referenced_blocks"])
+    # attribution bills only the forwards actually run: shared rows are free
+    for rec in ss["requests"]:
+        assert rec["odin"]["tokens"] == (rec["prefill_tokens"]
+                                         + max(0, rec["generated_tokens"] - 1))
+
+
+def test_engine_prefix_cow_fork_non_aligned_prefix():
+    """Prompts sharing a non-block-aligned prefix take the COW-fork path:
+    the partially matched block is copied before the tail overwrites it."""
+    cfg, params = materialize("phi4-mini-3.8b")
+    spec = _shared_spec(shared_prefix=21, share_groups=2)
+    base, _ = run_workload(cfg, params, max_len=64, spec=spec, prefix_sharing=False)
+    shared, ss = run_workload(cfg, params, max_len=64, spec=spec, prefix_sharing=True)
+    assert base == shared
+    assert ss["prefix"]["cow_forks"] > 0
+    assert ss["prefix"]["hit_tokens"] > 0
+
+
+def test_engine_prefix_sharing_preemption_parity(smoke_setup):
+    """Sharing + preemption (swap AND recompute) of slots holding shared
+    blocks: token streams still match the unconstrained unshared run.  On
+    non-fully-paged families (hymba ring+SSM, deepseek MLA) sharing auto-
+    disables and this degenerates to the plain preemption parity check."""
+    cfg, params = smoke_setup
+    spec = _shared_spec()
+    base, _ = run_workload(cfg, params, max_len=64, spec=spec, prefix_sharing=False)
+    swap, s_sw = run_workload(cfg, params, max_len=64, spec=spec, n_blocks=11,
+                              swap_blocks=32)
+    rec, s_rc = run_workload(cfg, params, max_len=64, spec=spec, n_blocks=11)
+    assert s_sw["preemptions"]["swap"] > 0
+    assert s_rc["preemptions"]["recompute"] > 0
+    assert base == swap
+    assert base == rec
+
+
+def test_engine_prefix_sharing_horizon_parity():
+    """Prefix sharing composes with horizon-batched decode: pre-extended
+    tables append exclusive blocks after the shared prefix."""
+    cfg, params = materialize("phi4-mini-3.8b")
+    base, _ = run_workload(cfg, params, max_len=64, spec=_shared_spec(),
+                           prefix_sharing=False)
+    fused, s8 = run_workload(cfg, params, max_len=64, spec=_shared_spec(), horizon=8)
+    assert base == fused
+    assert s8["prefix"]["hit_tokens"] > 0
+    assert s8["tokens_per_dispatch"] > 1.0
+
+
+def test_engine_prefix_cache_retained_across_completion():
+    """System-prompt caching: a request arriving after every sharer finished
+    still hits the resident chain (the cache's claim outlives the request)."""
+    import itertools
+    from repro.serving import Request, ServingEngine
+    cfg, params = materialize("phi4-mini-3.8b")
+    prompt = (np.arange(20, dtype=np.int32) * 7 + 3) % cfg.vocab
+    fake = itertools.count()
+    eng = ServingEngine(cfg, slots=2, max_len=32, block_size=8, params=params,
+                        clock=lambda: float(next(fake)))
+    assert eng.prefix_sharing                        # auto-on: fully paged
+    reqs = [Request(rid=0, prompt=prompt, max_new=4, arrival=0.0),
+            Request(rid=1, prompt=prompt.copy(), max_new=4, arrival=50.0)]
+    s = eng.run(reqs)
+    assert s["prefix"]["hit_tokens"] == 19           # prompt_len - 1 (16 + 3)
+    assert s["prefix"]["cow_forks"] == 1
+    assert token_streams(reqs)[0] == token_streams(reqs)[1]
+
+
+def test_engine_prefix_sharing_eligibility_and_extras_bypass():
+    """Non-fully-paged families auto-disable sharing (forcing it raises);
+    extras-carrying requests never match or register even when sharing is
+    on (their KV is not token-determined)."""
+    import jax
+    from repro.models import lm as lm_mod, registry
+    from repro.nn import module as nnmod
+    from repro.serving import Request, ServingEngine
+    for arch in ("hymba-1.5b", "deepseek-v3-671b", "xlstm-350m"):
+        cfg, params = materialize(arch)
+        eng = ServingEngine(cfg, slots=2, max_len=32, block_size=8,
+                            params=params)
+        assert not eng.prefix_sharing
+        with pytest.raises(ValueError, match="fully paged"):
+            ServingEngine(cfg, slots=2, max_len=32, block_size=8,
+                          params=params, prefix_sharing=True)
+    cfg = registry.get_smoke("qwen2-vl-2b")
+    params = nnmod.materialize(lm_mod.param_spec(cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    reqs = [Request(rid=i, prompt=prompt.copy(), max_new=4,
+                    extras={"patch_embeds": np.full((4, cfg.d_model), i, np.float32),
+                            "pos3d": np.repeat(np.arange(16, dtype=np.int32)[:, None], 3, 1)})
+            for i in range(3)]
+    toks, s = run_workload(cfg, params, slots=3, max_len=32, requests=reqs)
+    assert s["prefix"]["hit_tokens"] == 0            # same tokens, different KV
+    # different patch embeds ⇒ the streams must NOT be forced equal by sharing
+    assert len(toks[0]) == len(toks[1]) == 4
 
 
 def test_engine_streaming_callback_and_order(smoke_setup):
