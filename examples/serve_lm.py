@@ -27,12 +27,14 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--horizon", type=int, default=1,
                     help="max decode steps fused into one dispatch")
+    ap.add_argument("--spec-ngram", type=int, default=0, metavar="K",
+                    help="n-gram self-speculative decode draft length (0 = off)")
     ap.add_argument("--odin-mode", choices=["exact", "int8", "sc"], default=None)
     args = ap.parse_args()
 
     cfg = registry.get_config(args.arch) if args.full else registry.get_smoke(args.arch)
     spec = dataclasses.replace(SCENARIOS[args.scenario], n_requests=args.requests)
-    max_len = max(spec.prompt_buckets) + max(spec.gen_buckets)
+    max_len = max(spec.prompt_buckets) + spec.shared_prefix + max(spec.gen_buckets)
     max_len = -(-max_len // 16) * 16
 
     streamed = {}
@@ -42,13 +44,15 @@ def main():
 
     engine = ServingEngine(cfg, slots=args.slots, max_len=max_len,
                            block_size=16, odin_mode=args.odin_mode,
-                           horizon=args.horizon, on_token=on_token)
+                           horizon=args.horizon, spec_ngram=args.spec_ngram,
+                           on_token=on_token)
     summary = engine.run(make_requests(cfg, spec, seed=0))
 
     print(f"arch={args.arch} ({'full' if args.full else 'smoke'}) "
           f"scenario={args.scenario}: {summary['generated_tokens']} tokens, "
           f"{summary['decode_tokens_per_s']:.1f} tok/s decode "
-          f"({summary['tokens_per_dispatch']:.1f} tok/dispatch), "
+          f"({summary['tokens_per_dispatch']:.1f} tok/dispatch, "
+          f"accept_rate {summary['speculation']['accept_rate']:.2f}), "
           f"occupancy {summary['slot_occupancy']:.2f}")
     print(f"TTFT p50/p90 = {summary['ttft_s']['p50']*1e3:.0f}/{summary['ttft_s']['p90']*1e3:.0f} ms, "
           f"TPOT p50/p90 = {summary['tpot_s']['p50']*1e3:.1f}/{summary['tpot_s']['p90']*1e3:.1f} ms")

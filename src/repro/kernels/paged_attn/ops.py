@@ -4,6 +4,10 @@
 decode path calls per layer: GQA head grouping, kernel dispatch, and the
 interpret-mode fallback so tier-1 tests run on CPU.  ``use_kernel=False``
 routes to the pure-jnp oracle (ref.py) for debugging.
+
+``q`` may carry a small leading query axis (``[B, Q, H, D]``, the speculative
+verify tile): the Q tokens are packed into the kernel's query tile and
+causally masked per row — one dispatch scores a whole draft.
 """
 from __future__ import annotations
 
@@ -23,27 +27,42 @@ __all__ = ["paged_attention"]
 def paged_attention(q, k_pool, v_pool, tables, lengths, *, window: int = 0,
                     kv_scale=None, use_kernel: bool = True,
                     interpret=None) -> jax.Array:
-    """q [B, H, D] against pools [N, bs, H_kv, D] via tables [B, P] → [B, H, D].
+    """q [B, H, D] (decode) or [B, Q, H, D] (Q-token verify) against pools
+    [N, bs, H_kv, D] via tables [B, P] → output of q's shape.
 
-    ``lengths [B]`` counts visible tokens per sequence (the current token's
-    K/V must already be written at row ``lengths-1``).  ``kv_scale`` set ⇒
-    pools hold fixed-point int8 (values/kv_scale).  ``interpret=None`` picks
-    compiled on TPU, interpreter everywhere else.
+    ``lengths [B]`` counts visible tokens per sequence *including every query
+    token* (each query's K/V must already be written; query ``j`` of Q sits
+    at absolute position ``lengths - Q + j`` and attends causally).
+    ``kv_scale`` set ⇒ pools hold fixed-point int8 (values/kv_scale).
+    ``interpret=None`` picks compiled on TPU, interpreter everywhere else.
     """
-    B, H, D = q.shape
+    if q.ndim == 3:
+        B, H, D = q.shape
+        Q = 1
+    else:
+        B, Q, H, D = q.shape
     Hkv = k_pool.shape[2]
     if H % Hkv:
         raise ValueError(f"n_heads {H} not a multiple of n_kv_heads {Hkv}")
-    qg = q.reshape(B, Hkv, H // Hkv, D)
+    G = H // Hkv
+    if q.ndim == 3:
+        qt = q.reshape(B, Hkv, G, D)
+    else:
+        # pack the Q tokens into the query tile: row q·G + g
+        # [B, Q, Hkv, G, D] → [B, Hkv, Q, G, D] → [B, Hkv, Q·G, D]
+        qt = q.reshape(B, Q, Hkv, G, D).transpose(0, 2, 1, 3, 4)
+        qt = qt.reshape(B, Hkv, Q * G, D)
     tables = tables.astype(jnp.int32)
     lengths = lengths.astype(jnp.int32)
     if use_kernel:
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
-        o = paged_attn_pallas_call(qg, k_pool, v_pool, tables, lengths,
+        o = paged_attn_pallas_call(qt, k_pool, v_pool, tables, lengths,
                                    window=window, kv_scale=kv_scale,
-                                   interpret=interpret)
+                                   q_len=Q, interpret=interpret)
     else:
-        o = paged_attn_ref(qg, k_pool, v_pool, tables, lengths,
-                           window=window, kv_scale=kv_scale)
-    return o.reshape(B, H, D)
+        o = paged_attn_ref(qt, k_pool, v_pool, tables, lengths,
+                           window=window, kv_scale=kv_scale, q_len=Q)
+    if q.ndim == 3:
+        return o.reshape(B, H, D)
+    return o.reshape(B, Hkv, Q, G, D).transpose(0, 2, 1, 3, 4).reshape(B, Q, H, D)

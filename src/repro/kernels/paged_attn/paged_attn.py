@@ -23,9 +23,17 @@ Layout (the standard TPU paged-attention shape):
 * int8 pools (the ODIN fixed-8-bit KV working set) dequantize in-kernel:
   the kernel reads half the bytes per page and rescales after the load.
 
-Per-tile VMEM at the ``block_size=16, d_head=128`` default: q 1 KB + k/v
-2×4 KB (int8) + acc/m/l ≈ 1 KB ≪ budget; arithmetic is one ``[G, bs]·[bs,D]``
-MXU pass per page.  ``interpret=True`` runs the same kernel on CPU (tier-1).
+Multi-token queries (``q_len > 1``, speculative verify): the query tile packs
+``Q`` in-flight tokens — query row ``q·G + g`` sits at absolute position
+``length - Q + q`` and is causally masked against the page axis per row, so
+one kernel pass scores a whole draft (each draft token sees the committed
+prefix *and* the earlier draft rows, which its forward already wrote into the
+slot's tail blocks).  ``q_len == 1`` reduces exactly to the decode case.
+
+Per-tile VMEM at the ``block_size=16, d_head=128`` default: q Q·1 KB + k/v
+2×4 KB (int8) + acc/m/l ≈ Q·1 KB ≪ budget; arithmetic is one
+``[Q·G, bs]·[bs, D]`` MXU pass per page.  ``interpret=True`` runs the same
+kernel on CPU (tier-1).
 """
 from __future__ import annotations
 
@@ -44,12 +52,14 @@ NEG_INF = -1e30
 
 def paged_attn_kernel(lengths_ref, tables_ref, q_ref, k_ref, v_ref, o_ref,
                       m_ref, l_ref, acc_ref, *, block_size: int, n_pages: int,
-                      window: int, scale: float, kv_scale):
+                      window: int, scale: float, kv_scale, q_len: int,
+                      n_groups: int):
     """One (sequence b, kv-head h, page i) grid step of online-softmax GQA.
 
-    q_ref [1,1,G,D] · k_ref/v_ref [1,bs,1,D] (page ``tables[b, i]`` of the
-    pool) → o_ref [1,1,G,D]; m/l/acc scratch carry the softmax state over the
-    page axis.
+    q_ref [1,1,Q·G,D] · k_ref/v_ref [1,bs,1,D] (page ``tables[b, i]`` of the
+    pool) → o_ref [1,1,Q·G,D]; m/l/acc scratch carry the softmax state over
+    the page axis.  Query row ``q·G + g`` is query token ``q`` at absolute
+    position ``length - Q + q`` (``Q = q_len``; Q == 1 is plain decode).
     """
     b, i = pl.program_id(0), pl.program_id(2)
     length = lengths_ref[b]
@@ -60,14 +70,16 @@ def paged_attn_kernel(lengths_ref, tables_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # Page overlaps the visible range [max(0, length-window), length)?
+    # Page overlaps the union of the rows' visible ranges?  The last query
+    # sits at length-1; the first at length-Q, seeing back to length-Q-window.
     live = i * block_size < length
     if window:
-        live = jnp.logical_and(live, (i + 1) * block_size > length - window)
+        live = jnp.logical_and(
+            live, (i + 1) * block_size > length - q_len - window + 1)
 
     @pl.when(live)
     def _page():
-        q = q_ref[0, 0].astype(jnp.float32)                  # [G, D]
+        q = q_ref[0, 0].astype(jnp.float32)                  # [Q·G, D]
         k = k_ref[0, :, 0, :].astype(jnp.float32)            # [bs, D]
         v = v_ref[0, :, 0, :].astype(jnp.float32)
         if kv_scale is not None:                             # int8 pool dequant
@@ -75,16 +87,22 @@ def paged_attn_kernel(lengths_ref, tables_ref, q_ref, k_ref, v_ref, o_ref,
             v = v * (1.0 / kv_scale)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * scale      # [G, bs]
+            preferred_element_type=jnp.float32) * scale      # [Q·G, bs]
         pos = i * block_size + jax.lax.broadcasted_iota(
             jnp.int32, (1, block_size), 1)
-        ok = pos < length
+        # per-row causal limit: row q·G+g is the query at length - Q + q
+        q_pos = length - q_len + jax.lax.broadcasted_iota(
+            jnp.int32, (q_len * n_groups, 1), 0) // n_groups
+        ok = pos <= q_pos
         if window:
-            ok = jnp.logical_and(ok, pos > length - 1 - window)
+            ok = jnp.logical_and(ok, pos > q_pos - window)
         s = jnp.where(ok, s, NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
-        p = jnp.exp(s - m_new)
+        # mask p, not just s: a fully-masked row (q_pos < 0, a query tile
+        # longer than the sequence) has m_new == NEG_INF and exp(s - m_new)
+        # would resurrect every masked column as exp(0) = 1
+        p = jnp.where(ok, jnp.exp(s - m_new), 0.0)
         corr = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
         acc_ref[...] = acc_ref[...] * corr + jnp.dot(
@@ -99,44 +117,47 @@ def paged_attn_kernel(lengths_ref, tables_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def paged_attn_pallas_call(
-    q: jax.Array,            # [B, H_kv, G, D] current-token queries
+    q: jax.Array,            # [B, H_kv, Q·G, D] current-token queries
     k_pool: jax.Array,       # [n_blocks, block_size, H_kv, D] physical store
     v_pool: jax.Array,       # [n_blocks, block_size, H_kv, D]
     tables: jax.Array,       # int32 [B, n_pages] pool block ids per slot page
-    lengths: jax.Array,      # int32 [B] visible tokens (incl. current)
+    lengths: jax.Array,      # int32 [B] visible tokens (incl. all Q current)
     *,
     window: int = 0,
     kv_scale=None,           # pool is int8 fixed-point with this scale
+    q_len: int = 1,          # Q query tokens packed per sequence
     interpret: bool = True,
 ) -> jax.Array:
-    B, Hkv, G, D = q.shape
+    B, Hkv, QG, D = q.shape
+    if QG % q_len:
+        raise ValueError(f"query tile {QG} not a multiple of q_len {q_len}")
     bs = k_pool.shape[1]
     n_pages = tables.shape[1]
     scale = 1.0 / np.sqrt(D)
     kernel = functools.partial(
         paged_attn_kernel, block_size=bs, n_pages=n_pages, window=window,
-        scale=scale, kv_scale=kv_scale)
+        scale=scale, kv_scale=kv_scale, q_len=q_len, n_groups=QG // q_len)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, Hkv, n_pages),
         in_specs=[
-            pl.BlockSpec((1, 1, G, D), lambda b, h, i, lens, tabs: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, QG, D), lambda b, h, i, lens, tabs: (b, h, 0, 0)),
             pl.BlockSpec((1, bs, 1, D),
                          lambda b, h, i, lens, tabs: (tabs[b, i], 0, h, 0)),
             pl.BlockSpec((1, bs, 1, D),
                          lambda b, h, i, lens, tabs: (tabs[b, i], 0, h, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, G, D),
+        out_specs=pl.BlockSpec((1, 1, QG, D),
                                lambda b, h, i, lens, tabs: (b, h, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((G, 1), jnp.float32),     # m: running max
-            pltpu.VMEM((G, 1), jnp.float32),     # l: running denominator
-            pltpu.VMEM((G, D), jnp.float32),     # acc: running numerator
+            pltpu.VMEM((QG, 1), jnp.float32),     # m: running max
+            pltpu.VMEM((QG, 1), jnp.float32),     # l: running denominator
+            pltpu.VMEM((QG, D), jnp.float32),     # acc: running numerator
         ],
     )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, QG, D), q.dtype),
         interpret=interpret,
     )(lengths, tables, q, k_pool, v_pool)

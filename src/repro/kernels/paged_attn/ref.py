@@ -17,11 +17,18 @@ NEG_INF = -1e30
 
 
 def paged_attn_ref(q, k_pool, v_pool, tables, lengths, *, window: int = 0,
-                   kv_scale=None):
-    """q [B,Hkv,G,D], pools [N,bs,Hkv,D], tables [B,P], lengths [B] → [B,Hkv,G,D]."""
-    B, Hkv, G, D = q.shape
+                   kv_scale=None, q_len: int = 1):
+    """q [B,Hkv,Q·G,D], pools [N,bs,Hkv,D], tables [B,P], lengths [B]
+    → [B,Hkv,Q·G,D].
+
+    Row ``q·G + g`` of the query tile is query token ``q`` at absolute
+    position ``lengths - q_len + q`` (causally masked per row); ``q_len=1``
+    is plain decode.
+    """
+    B, Hkv, QG, D = q.shape
     bs = k_pool.shape[1]
     P = tables.shape[1]
+    G = QG // q_len
     k = k_pool[tables].reshape(B, P * bs, Hkv, D).astype(jnp.float32)
     v = v_pool[tables].reshape(B, P * bs, Hkv, D).astype(jnp.float32)
     if kv_scale is not None:
@@ -29,10 +36,12 @@ def paged_attn_ref(q, k_pool, v_pool, tables, lengths, *, window: int = 0,
         v = v * (1.0 / kv_scale)
     s = jnp.einsum("bhgd,bkhd->bhgk", q.astype(jnp.float32), k) / np.sqrt(D)
     pos = jnp.arange(P * bs, dtype=jnp.int32)[None, :]          # [1, P·bs]
-    ok = pos < lengths[:, None]
+    q_pos = (lengths[:, None] - q_len
+             + jnp.arange(QG, dtype=jnp.int32)[None, :] // G)   # [B, Q·G]
+    ok = pos[:, None, :] <= q_pos[..., None]                    # [B, Q·G, P·bs]
     if window:
-        ok = ok & (pos > lengths[:, None] - 1 - window)
-    okb = ok[:, None, None, :]
+        ok = ok & (pos[:, None, :] > q_pos[..., None] - window)
+    okb = ok[:, None, :, :]                                     # [B,1,Q·G,P·bs]
     s = jnp.where(okb, s, NEG_INF)
     m = s.max(axis=-1, keepdims=True)
     p = jnp.where(okb, jnp.exp(s - m), 0.0)                     # exact 0 when empty

@@ -146,6 +146,10 @@ def main():
     ap.add_argument("--horizon", type=int, default=1,
                     help="max decode steps fused into one dispatch (power-of-"
                          "two grants; 1 = per-token parity baseline)")
+    ap.add_argument("--spec-ngram", type=int, default=0, metavar="K",
+                    help="n-gram self-speculative decode: draft K tokens per "
+                         "inner step by prompt-lookup and verify them in one "
+                         "multi-token forward (greedy only; 0 = off)")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="token id that ends a request early (default: none)")
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -180,7 +184,8 @@ def main():
             seed=args.seed, odin_mode=args.odin_mode,
             paged=not args.no_paged,
             prefix_sharing=False if args.no_prefix_sharing else None,
-            horizon=args.horizon, eos_id=args.eos_id,
+            horizon=args.horizon, spec_ngram=args.spec_ngram,
+            eos_id=args.eos_id,
             temperature=args.temperature,
             top_k=args.top_k, sample_seed=args.sample_seed)
         summary = engine.run(make_requests(cfg, spec, seed=args.seed))
@@ -197,6 +202,7 @@ def main():
                                  "paged": not args.no_paged,
                                  "prefix_sharing": False if args.no_prefix_sharing else None,
                                  "horizon": args.horizon,
+                                 "spec_ngram": args.spec_ngram,
                                  "eos_id": args.eos_id,
                                  "temperature": args.temperature,
                                  "top_k": args.top_k,

@@ -56,7 +56,10 @@ __all__ = [
     "make_slot_prefill_step",
     "make_serving_decode_step",
     "make_serving_decode_horizon",
+    "make_serving_spec_horizon",
+    "ngram_propose",
     "pageable_block",
+    "speculable",
 ]
 
 
@@ -465,6 +468,158 @@ def make_serving_decode_horizon(cfg: ModelConfig, H: int, top_k: int = 0,
         return block, counts, tok, caches
 
     return horizon_step
+
+
+# ---------------------------------------------------------------------------
+# n-gram self-speculative decode (draft-free prompt-lookup verification)
+# ---------------------------------------------------------------------------
+
+def speculable(cfg: ModelConfig) -> bool:
+    """Whether the config supports n-gram self-speculative serving decode.
+
+    Speculation rolls back rejected KV writes by *not advancing* per-slot
+    lengths — sound exactly when every piece of decode state is
+    position-addressed (paged pool blocks, dense KV rows, MLA latents: stale
+    rows past the length are invisible to every later query).  Recurrent
+    state (Hymba's SSM branch, xLSTM cells) advances per token and cannot be
+    truncated, and multi-codebook token frames have no scalar n-gram to
+    match, so both stay on the plain decode paths.
+    """
+    return cfg.n_codebooks == 1 and all(
+        b.kind in ("dense", "moe") and b.attn is not None for b in cfg.blocks)
+
+
+def ngram_propose(hist, K: int, n: int = 2):
+    """Draft ``K`` tokens per slot by prompt-lookup over the token history.
+
+    ``hist [B, W]`` holds each slot's most recent context tokens
+    right-aligned (prompt tail + generated ids, ``-1`` padding on the left).
+    The final ``n``-gram is matched against every earlier offset in one
+    vectorized comparison; the draft is the ``K`` tokens that followed the
+    most recent match — the classic prompt-lookup heuristic, entirely
+    on-device (no host round-trip inside the horizon scan).  No match (or a
+    match into padding) degenerates to repeating the last token, which the
+    verify step simply rejects.
+    """
+    B, W = hist.shape
+    J = W - n - K + 1               # candidate starts; excludes the tail itself
+    if J < 1:
+        raise ValueError(f"history window {W} too short for n={n}, K={K}")
+    tail = hist[:, W - n:]
+    m = jnp.ones((B, J), bool)
+    for i in range(n):
+        m = m & (hist[:, i:i + J] == tail[:, i:i + 1])
+    best = jnp.max(jnp.where(m, jnp.arange(J, dtype=jnp.int32), -1), axis=1)
+    has = best >= 0
+    cols = jnp.maximum(best, 0)[:, None] + n + jnp.arange(K, dtype=jnp.int32)
+    draft = jnp.take_along_axis(hist, cols, axis=1)            # [B, K]
+    draft = jnp.where(has[:, None], draft, hist[:, -1:])
+    return jnp.maximum(draft, 0)    # padding can leak into a boundary draft
+
+
+def _spec_merge(old_caches, new_caches, active, m):
+    """Merge a K+1-token verify forward's cache updates with per-slot
+    rollback: ``pos`` leaves advance by the per-slot accepted count ``m``
+    (not the K+1 rows the forward wrote — rows past ``pos + m`` hold
+    rejected-draft K/V and stay invisible to every later query), pool leaves
+    keep their writes (inactive slots wrote to the trash block), and other
+    per-slot leaves select by the activity mask."""
+
+    def merge(path, old, new):
+        name = _leaf_name(path)
+        if name in POOL_LEAVES:
+            return new
+        if name == "pos":
+            return old + m[None, :]             # [L, B] + [1, B]
+        mask = active.reshape((1, active.shape[0]) + (1,) * (old.ndim - 2))
+        return jnp.where(mask, new, old)
+
+    return jax.tree_util.tree_map_with_path(merge, old_caches, new_caches)
+
+
+def make_serving_spec_horizon(cfg: ModelConfig, H: int, K: int,
+                              n: int = 2) -> Callable:
+    """``H`` draft→verify→accept steps fused into ONE compiled dispatch.
+
+    (params, caches, tokens [B,1], lengths [B], active [B], remaining [B],
+     hist [B,W], tables [B,P], eos_id)
+        → (token_block [B, H, K+1], counts [B, H], last_tokens [B, 1],
+           hist, caches)
+
+    Each inner step of the ``lax.scan``:
+
+    1. **draft** — :func:`ngram_propose` reads the slot's on-device token
+       history and emits ``K`` draft tokens;
+    2. **verify** — ONE forward over ``[pending, d_1..d_K]`` (the
+       multi-token-query paged kernel / batched dense decode) yields
+       ``K+1`` greedy logits at positions ``len..len+K``;
+    3. **accept** — the longest prefix of drafts matching their greedy
+       argmax is accepted; the next argmax rides along as the *bonus* token,
+       so the step emits ``a+1 ∈ [1, K+1]`` tokens — every one of them an
+       argmax of model logits, which is what makes greedy speculation
+       token-identical to plain decode by construction;
+    4. **rollback** — per-slot lengths advance by the emitted count only
+       (clamped by the slot's ``remaining`` budget and a mid-run EOS);
+       rejected rows were written into the slot's own pre-extended tail
+       blocks and stay invisible, so rollback is a length decrement, never a
+       copy;
+    5. the bonus/last-emitted token feeds back as the next step's pending
+       input and the history ring shifts the emitted run in — all on-device.
+
+    ``counts[s, h]`` is the number of valid tokens in ``token_block[s, h]``
+    (0 once the slot froze); freezing is monotone over ``h``.  Greedy only:
+    the accept rule compares argmaxes, so there is no sampling path here
+    (the engine enforces ``temperature == 0`` for speculation).
+    """
+    if K < 1:
+        raise ValueError(f"spec draft length K must be >= 1, got {K}")
+
+    def spec_step(params, caches, tokens, lengths, active, remaining, hist,
+                  tables=None, eos_id=-1):
+        B = lengths.shape[0]
+        W = hist.shape[1]
+        trash = _pool_trash_block(caches)
+
+        def inner(carry, _):
+            caches, tok, lengths, act, rem, hist = carry
+            draft = ngram_propose(hist, K, n)                   # [B, K]
+            tabs = tables
+            if tabs is not None and trash is not None:
+                tabs = jnp.where(act[:, None], tabs, jnp.int32(trash))
+            tin = jnp.concatenate([tok, draft], axis=1)         # [B, K+1]
+            logits, new_caches, _ = lm.forward(
+                params, tin, cfg, caches=caches, start_pos=lengths[:, None],
+                moe_no_drop=True, tables=tabs, spec_decode=True)
+            g = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # [B, K+1]
+            # longest accepted draft prefix: d_j must equal the argmax of the
+            # logits one position earlier (the token that would have been
+            # decoded there)
+            match = (draft == g[:, :K]).astype(jnp.int32)
+            acc = jnp.cumprod(match, axis=1).sum(axis=1)        # [B] ∈ [0, K]
+            is_eos = (eos_id >= 0) & (g == eos_id)
+            has_eos = is_eos.any(axis=1)
+            eos_cut = jnp.where(has_eos, jnp.argmax(is_eos, axis=1) + 1, K + 1)
+            m = jnp.minimum(jnp.minimum(acc + 1, rem), eos_cut)
+            m = jnp.where(act, m, 0)                            # emitted count
+            caches = _spec_merge(caches, new_caches, act, m)
+            lengths = lengths + m
+            rem = rem - m
+            last = jnp.take_along_axis(g, jnp.maximum(m - 1, 0)[:, None], axis=1)
+            tok = jnp.where((m > 0)[:, None], last, tok)
+            hit_eos = has_eos & (eos_cut <= m)                  # eos was emitted
+            act = act & (rem > 0) & ~hit_eos
+            ext = jnp.concatenate([hist, g], axis=1)            # [B, W+K+1]
+            hist = jnp.take_along_axis(
+                ext, m[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :], axis=1)
+            return (caches, tok, lengths, act, rem, hist), (g, m)
+
+        (caches, tok, lengths, act, rem, hist), (toks, counts) = jax.lax.scan(
+            inner, (caches, tokens, lengths, active, remaining, hist),
+            jnp.arange(H, dtype=jnp.int32))
+        # toks: [H, B, K+1] → [B, H, K+1]; counts: [H, B] → [B, H]
+        return toks.swapaxes(0, 1), counts.T, tok, hist, caches
+
+    return spec_step
 
 
 # ---------------------------------------------------------------------------

@@ -72,7 +72,7 @@ def param_spec(cfg: ModelConfig) -> Dict:
 
 def _segment_apply(params_stacked, x, bcfg: BlockConfig, caches, positions, pos3d,
                    odin, remat: str, norm_eps: float, moe_no_drop: bool = False,
-                   tables=None):
+                   tables=None, spec_decode: bool = False):
     """Scan one homogeneous segment of layers over the sequence activations."""
     spec1 = block_spec(bcfg, x.shape[-1])
 
@@ -88,7 +88,7 @@ def _segment_apply(params_stacked, x, bcfg: BlockConfig, caches, positions, pos3
         )
         y, c2 = block_apply(p, x, bcfg, cache=c, positions=positions, pos3d=pos3d,
                             odin=odin, norm_eps=norm_eps, moe_no_drop=moe_no_drop,
-                            tables=tables)
+                            tables=tables, spec_decode=spec_decode)
         # pin the scanned activation sharding so carry propagation never
         # settles on "replicated" (no-op outside a logical_sharding context)
         y = constrain(y, ("batch", "act_seq", None))
@@ -106,7 +106,8 @@ def _segment_apply(params_stacked, x, bcfg: BlockConfig, caches, positions, pos3
 
 
 def forward(params, tokens, cfg: ModelConfig, caches=None, patch_embeds=None,
-            pos3d=None, start_pos=None, moe_no_drop: bool = False, tables=None):
+            pos3d=None, start_pos=None, moe_no_drop: bool = False, tables=None,
+            spec_decode: bool = False):
     """tokens: [B,S] (or [B,K,S] multi-codebook) → (logits, new_caches).
 
     logits: [B,S,V] (or [B,S,K,V]).  ``caches``: list of per-segment stacked
@@ -116,6 +117,9 @@ def forward(params, tokens, cfg: ModelConfig, caches=None, patch_embeds=None,
     deterministic routing; training keeps the capped capacity).  ``tables``:
     per-slot KV block tables [B, n_pages] when the caches carry the paged
     block pool (one table serves every layer; scan-invariant).
+    ``spec_decode``: the S tokens are an in-flight speculative draft —
+    paged attention runs the multi-token-query decode kernel instead of the
+    prefill gather path.
     """
     odin = _odin(cfg)
     if cfg.n_codebooks > 1:
@@ -144,7 +148,7 @@ def forward(params, tokens, cfg: ModelConfig, caches=None, patch_embeds=None,
         else:
             x, c2 = _segment_apply(params["segments"][i], x, bcfg, c, positions, pos3d,
                                    odin, cfg.remat, cfg.norm_eps, moe_no_drop,
-                                   tables=tables)
+                                   tables=tables, spec_decode=spec_decode)
             new_caches.append(c2)
 
     hidden = x

@@ -251,7 +251,8 @@ def _positions(batch: int, start, seq: int):
     return start + jnp.arange(seq, dtype=jnp.int32)[None, :] + jnp.zeros((batch, 1), jnp.int32)
 
 
-def _paged_gqa_core(q, k, v, cfg: AttnConfig, positions, cache, tables):
+def _paged_gqa_core(q, k, v, cfg: AttnConfig, positions, cache, tables,
+                    spec_decode: bool = False):
     """Write the new K/V rows into the block pool and attend through it.
 
     ``pos`` must be a per-slot [B] vector (paged caches exist only in the
@@ -259,17 +260,28 @@ def _paged_gqa_core(q, k, v, cfg: AttnConfig, positions, cache, tables):
     blocks.  Decode (S == 1) runs the Pallas paged kernel — K/V blocks are
     read in place from the pool; chunked prefill (S > 1) gathers the table's
     pages once and reuses the blockwise/direct sdpa core (prefill is not the
-    per-token hot path, and its cost is O(max_len) regardless).
+    per-token hot path, and its cost is O(max_len) regardless).  A
+    speculative verify (``spec_decode``, small S = draft+1) keeps the kernel
+    path with an S-row query tile instead — per-token decode semantics, no
+    O(max_len) gather in the per-dispatch hot loop.
+
+    Writes for rows at or past the table's page span (a verify tile near a
+    slot's ``max_len``, where rejected draft rows may overhang the budget)
+    are redirected to the pool's write-off block — reading a stale table
+    entry there could alias another slot's live block.
     """
     if tables is None:
         raise ValueError("paged attention cache requires block tables")
     B, S = q.shape[0], q.shape[1]
+    P = tables.shape[1]
     pos = cache["pos"]
     kp, vp = cache["k_pool"], cache["v_pool"]
     cdt = kp.dtype
     bs = kp.shape[1]
     rows = pos[:, None] + jnp.arange(S, dtype=jnp.int32)           # [B, S]
-    bids = jnp.take_along_axis(tables, rows // bs, axis=1)         # [B, S]
+    page = rows // bs
+    bids = jnp.take_along_axis(tables, jnp.minimum(page, P - 1), axis=1)
+    bids = jnp.where(page >= P, jnp.int32(kp.shape[0] - 1), bids)  # [B, S]
     kp = kp.at[bids, rows % bs].set(_cache_write(k, cdt))
     vp = vp.at[bids, rows % bs].set(_cache_write(v, cdt))
     new_cache = {"k_pool": kp, "v_pool": vp, "pos": pos + S}
@@ -277,6 +289,9 @@ def _paged_gqa_core(q, k, v, cfg: AttnConfig, positions, cache, tables):
     if S == 1:
         o = paged_attention(q[:, 0], kp, vp, tables, pos + 1,
                             window=cfg.window, kv_scale=kv_scale)[:, None]
+    elif spec_decode:
+        o = paged_attention(q, kp, vp, tables, pos + S,
+                            window=cfg.window, kv_scale=kv_scale)
     else:
         P = tables.shape[1]
         Hkv, D = kp.shape[2], kp.shape[3]
@@ -290,7 +305,7 @@ def _paged_gqa_core(q, k, v, cfg: AttnConfig, positions, cache, tables):
 
 
 def _gqa_attention(p, x, cfg: AttnConfig, positions, pos3d, cache, odin,
-                   tables=None):
+                   tables=None, spec_decode: bool = False):
     B, S, _ = x.shape
     H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
     q = linear(x, p["q"], odin).reshape(B, S, H, D)
@@ -311,7 +326,8 @@ def _gqa_attention(p, x, cfg: AttnConfig, positions, pos3d, cache, odin,
         o = sdpa(q, k, v, positions, k_pos, cfg.window)
         new_cache = None
     elif "k_pool" in cache:
-        o, new_cache = _paged_gqa_core(q, k, v, cfg, positions, cache, tables)
+        o, new_cache = _paged_gqa_core(q, k, v, cfg, positions, cache, tables,
+                                       spec_decode=spec_decode)
     else:
         pos = cache["pos"]
         size = cache["k"].shape[1]
@@ -422,9 +438,13 @@ def _mla_attention(p, x, cfg: AttnConfig, positions, cache, odin):
 
 
 def attention(p, x, cfg: AttnConfig, positions=None, pos3d=None, cache=None,
-              odin: Optional[OdinConfig] = None, tables=None):
+              odin: Optional[OdinConfig] = None, tables=None,
+              spec_decode: bool = False):
     """Returns (output [B,S,d_model], new_cache).  ``tables`` are the per-slot
-    block tables of the paged serving cache (ignored by dense/MLA caches)."""
+    block tables of the paged serving cache (ignored by dense/MLA caches).
+    ``spec_decode``: the S tokens are an in-flight speculative draft — paged
+    caches attend through the multi-token-query kernel instead of the prefill
+    gather (dense/MLA caches already handle S > 1 with decode semantics)."""
     B, S, _ = x.shape
     if positions is None:
         start = cache["pos"] if cache is not None else jnp.int32(0)
@@ -433,4 +453,5 @@ def attention(p, x, cfg: AttnConfig, positions=None, pos3d=None, cache=None,
         positions = _positions(B, start, S)
     if cfg.kind == "mla":
         return _mla_attention(p, x, cfg, positions, cache, odin)
-    return _gqa_attention(p, x, cfg, positions, pos3d, cache, odin, tables)
+    return _gqa_attention(p, x, cfg, positions, pos3d, cache, odin, tables,
+                          spec_decode=spec_decode)

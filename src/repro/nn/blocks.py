@@ -97,15 +97,18 @@ def block_cache(cfg: BlockConfig, d_model: int, batch: int, max_len: int, dtype=
 
 def block_apply(p, x, cfg: BlockConfig, cache=None, positions=None, pos3d=None,
                 odin: Optional[OdinConfig] = None, norm_eps: float = 1e-5,
-                moe_no_drop: bool = False, tables=None):
+                moe_no_drop: bool = False, tables=None,
+                spec_decode: bool = False):
     """(params, x [B,S,d], cache) → (x', cache').  ``tables``: per-slot block
-    tables when the attention cache is the paged block pool (serving)."""
+    tables when the attention cache is the paged block pool (serving);
+    ``spec_decode``: the S tokens are a speculative draft tile (paged
+    attention takes the multi-token-query kernel path)."""
     new_cache = dict(cache) if cache is not None else None
     if cfg.kind in ("dense", "moe"):
         a, ac = attention(p["attn"], rmsnorm(x, p["ln1"], norm_eps), cfg.attn,
                           positions=positions, pos3d=pos3d,
                           cache=None if cache is None else cache["attn"], odin=odin,
-                          tables=tables)
+                          tables=tables, spec_decode=spec_decode)
         x = x + a
         h = rmsnorm(x, p["ln2"], norm_eps)
         if cfg.kind == "dense":

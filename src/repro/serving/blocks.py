@@ -197,11 +197,18 @@ class BlockPool:
 @dataclass
 class SwapTicket:
     """Handle for one swapped-out sequence: swap-tier block ids plus the
-    non-paged slot state (recurrent states, per-slot position vectors)."""
+    non-paged slot state (recurrent states, per-slot position vectors).
+
+    ``skip_blocks`` leading device blocks were *retained* instead of copied
+    (sharing-aware swap: the scheduler kept refcount claims on blocks other
+    tables or the prefix cache still hold on-device) — the ticket covers only
+    the exclusive suffix, and swap-in restores into table rows
+    ``skip_blocks`` onward."""
 
     block_ids: List[int]
     n_tokens: int
     side: Dict[str, jax.Array] = field(default_factory=dict)
+    skip_blocks: int = 0
 
 
 class PagedKVStore:
@@ -245,30 +252,36 @@ class PagedKVStore:
         return min(nb, leaf.shape[2] // self.block_size)
 
     def swap_out(self, caches, slot: int, block_ids: List[int], n_tokens: int,
-                 dev_ids: Optional[List[int]] = None) -> SwapTicket:
+                 dev_ids: Optional[List[int]] = None,
+                 skip: int = 0) -> SwapTicket:
         """Copy ``slot``'s cache state into swap blocks; returns the ticket.
 
         ``dev_ids`` is the request's device block table at preemption time —
         pool leaves copy those blocks directly (block-table handoff); dense
-        sequence leaves scatter the slot's rows as before.
+        sequence leaves scatter the slot's rows as before.  ``skip`` leading
+        device blocks are retained on-device by the scheduler (sharing-aware
+        swap) and excluded from the copy — the ticket covers device blocks
+        ``skip`` onward.
         """
         bs = self.block_size
         ids = jnp.asarray(block_ids, jnp.int32)
-        ticket = SwapTicket(list(block_ids), n_tokens)
+        ticket = SwapTicket(list(block_ids), n_tokens, skip_blocks=skip)
         for path, leaf in jax.tree_util.tree_flatten_with_path(caches)[0]:
             key = _leaf_key(path)
             if key in self.pool_keys:
                 if dev_ids is None:
                     raise ValueError(f"pool leaf {key} needs dev_ids to swap out")
-                nbl = min(len(block_ids), len(dev_ids))
-                seg = leaf[:, jnp.asarray(dev_ids[:nbl], jnp.int32)]  # [L,nbl,bs,..]
+                nbl = min(len(block_ids), len(dev_ids) - skip)
+                src = jnp.asarray(dev_ids[skip:skip + nbl], jnp.int32)
+                seg = leaf[:, src]                                 # [L,nbl,bs,..]
                 self.bufs[key] = self.bufs[key].at[ids[:nbl]].set(seg.swapaxes(0, 1))
                 continue
             sl = jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=1)
             if key in self.bufs:
-                nbl = self._nb_leaf(leaf, len(block_ids))
+                nbl = max(0, self._nb_leaf(leaf, skip + len(block_ids)) - skip)
                 L, trail = leaf.shape[0], leaf.shape[3:]
-                seg = sl[:, 0, :nbl * bs].reshape(L, nbl, bs, *trail).swapaxes(0, 1)
+                seg = sl[:, 0, skip * bs:(skip + nbl) * bs]
+                seg = seg.reshape(L, nbl, bs, *trail).swapaxes(0, 1)
                 self.bufs[key] = self.bufs[key].at[ids[:nbl]].set(seg)
             else:
                 ticket.side[key] = sl
@@ -280,9 +293,12 @@ class PagedKVStore:
 
         ``dev_ids``: the freshly allocated device block table of the resumed
         request — pool leaves restore into those blocks (the table handoff's
-        other half).
+        other half).  A ticket with ``skip_blocks`` restores into table rows
+        ``skip_blocks`` onward; the leading blocks were never copied out
+        (they stayed resident under retained claims).
         """
         bs = self.block_size
+        skip = ticket.skip_blocks
         ids = jnp.asarray(ticket.block_ids, jnp.int32)
         flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
         out = []
@@ -291,15 +307,18 @@ class PagedKVStore:
             if key in self.pool_keys:
                 if dev_ids is None:
                     raise ValueError(f"pool leaf {key} needs dev_ids to swap in")
-                nbl = min(len(ticket.block_ids), len(dev_ids))
+                nbl = min(len(ticket.block_ids), len(dev_ids) - skip)
                 seg = self.bufs[key][ids[:nbl]].swapaxes(0, 1)     # [L,nbl,bs,..]
-                out.append(leaf.at[:, jnp.asarray(dev_ids[:nbl], jnp.int32)].set(seg))
+                dst = jnp.asarray(dev_ids[skip:skip + nbl], jnp.int32)
+                out.append(leaf.at[:, dst].set(seg))
             elif key in self.bufs:
-                nbl = self._nb_leaf(leaf, len(ticket.block_ids))
+                nbl = max(0, self._nb_leaf(leaf, skip + len(ticket.block_ids))
+                          - skip)
                 L, trail = leaf.shape[0], leaf.shape[3:]
                 seg = self.bufs[key][ids[:nbl]].swapaxes(0, 1).reshape(L, 1, nbl * bs, *trail)
                 sl = jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=1)
-                sl = jax.lax.dynamic_update_slice(sl, seg, (0,) * sl.ndim)
+                sl = jax.lax.dynamic_update_slice(
+                    sl, seg, (0, 0, skip * bs) + (0,) * (sl.ndim - 3))
                 out.append(jax.lax.dynamic_update_slice_in_dim(leaf, sl, slot, axis=1))
             elif key in ticket.side:
                 out.append(jax.lax.dynamic_update_slice_in_dim(

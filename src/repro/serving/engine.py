@@ -48,7 +48,8 @@ the bit-parallel stochastic kernels (slow; reference).
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,7 +59,9 @@ from repro.configs.base import ModelConfig
 from repro.launch.steps import (init_serving_caches,
                                 make_serving_decode_horizon,
                                 make_serving_decode_step,
-                                make_slot_prefill_step, pageable_block)
+                                make_serving_spec_horizon,
+                                make_slot_prefill_step, pageable_block,
+                                speculable)
 from repro.models import lm
 from repro.nn import module as nnmod
 from repro.nn.attention import POOL_LEAVES
@@ -104,6 +107,21 @@ class ServingEngine:
         on-device loop.  Greedy token streams are identical for every
         horizon; sampled streams match whenever the slot schedule does (the
         per-step key folds the *global* decode-step counter either way).
+    spec_ngram : draft length K for n-gram self-speculative decode (0
+        disables).  Each horizon inner step drafts K tokens by prompt-lookup
+        over the slot's on-device token history, verifies all K+1 logits in
+        ONE forward through the multi-token-query paged kernel, emits the
+        longest accepted prefix plus the bonus token (1..K+1 tokens per
+        inner step — every one a greedy argmax, so spec-on streams are
+        token-identical to spec-off by construction), and rolls rejected KV
+        rows back by not advancing the slot's length.  Greedy only
+        (temperature must be 0); requires every cache leaf to be
+        position-addressed (no SSM/xLSTM recurrent state) and a
+        single-codebook vocabulary — ``speculable(cfg)``.
+    spec_hist : token-history window for the n-gram draft match (per slot,
+        device-resident; seeded from the prompt tail at admission).
+    jit_cache : max fused decode executables kept compiled (LRU over
+        (horizon, spec) grants; evictions counted in ``EngineStats``).
     eos_id : token id that ends a request early (None disables; multi-
         codebook models match on the first codebook).  Checked on-device
         inside horizons and host-side everywhere else.
@@ -122,7 +140,8 @@ class ServingEngine:
                  block_size: int = 16, n_blocks: Optional[int] = None,
                  swap_blocks: int = 0, prefill_chunk: Optional[int] = None,
                  paged: bool = True, prefix_sharing: Optional[bool] = None,
-                 horizon: int = 1,
+                 horizon: int = 1, spec_ngram: int = 0, spec_hist: int = 64,
+                 jit_cache: int = 8,
                  eos_id: Optional[int] = None,
                  temperature: float = 0.0, top_k: int = 0,
                  sample_seed: int = 0,
@@ -159,6 +178,12 @@ class ServingEngine:
         self._sample_key = jax.random.PRNGKey(sample_seed)
         self.horizon = int(horizon)
         self.eos_id = None if eos_id is None else int(eos_id)
+        self.spec_ngram = int(spec_ngram)
+        self.spec_hist = int(spec_hist)
+        self._spec_n = 2                    # n-gram match length (bigram)
+        self.jit_cache = int(jit_cache)
+        if self.jit_cache < 1:
+            raise ValueError(f"jit_cache must be >= 1, got {self.jit_cache}")
 
         if n_blocks is None:
             n_blocks = slots * (max_len // block_size)
@@ -180,8 +205,34 @@ class ServingEngine:
             make_serving_decode_step(cfg, top_k=self.top_k,
                                      sample=self.temperature > 0),
             donate_argnums=(1,))
-        # horizon executables, one per granted power-of-two h (built lazily)
-        self._decode_horizon: Dict[int, Callable] = {}
+        # fused decode executables, one per granted (power-of-two h, spec K)
+        # pair — built lazily, bounded LRU (horizon × spec grant combinations
+        # must not grow the jit cache without bound)
+        self._fused: "OrderedDict[Tuple[int, int], Callable]" = OrderedDict()
+
+        if self.spec_ngram:
+            if not speculable(cfg):
+                raise ValueError(
+                    "spec_ngram needs a single-codebook model whose decode "
+                    "state is entirely position-addressed (no SSM/xLSTM "
+                    "recurrent segments) — rollback of rejected draft rows "
+                    "is a length decrement, which recurrent state and "
+                    "codebook frames cannot honor")
+            if self.temperature > 0:
+                raise ValueError(
+                    "spec_ngram is greedy-only (the accept rule compares "
+                    "argmaxes); set temperature=0")
+            if self.spec_hist < self.spec_ngram + self._spec_n + 1:
+                raise ValueError(
+                    f"spec_hist {self.spec_hist} too short for K="
+                    f"{self.spec_ngram} drafts with {self._spec_n}-gram match")
+            if any(b.attn is not None and b.attn.window
+                   for b in cfg.blocks) and self.chunk <= self.spec_ngram:
+                raise ValueError(
+                    "sliding-window ring headroom (prefill_chunk = "
+                    f"{self.chunk}) must exceed spec_ngram {self.spec_ngram}: "
+                    "a verify tile may overwrite ring rows up to K past the "
+                    "committed length")
 
         self.pool = BlockPool(n_blocks, block_size)
         # prefix sharing needs the block pool to BE the whole model state:
@@ -206,7 +257,8 @@ class ServingEngine:
                       if swap_blocks else None)
         self.sched = Scheduler(slots, self.pool, max_len,
                                swap_pool=self.store.pool if self.store else None,
-                               prefix_cache=prefix_cache)
+                               prefix_cache=prefix_cache,
+                               write_span=self.spec_ngram + 1)
         self.stats = EngineStats()
         self.stats.kv_cache_bytes = self._kv_bytes()
         self.cost_model = OdinCostModel(attribution_cfg or cfg)
@@ -214,6 +266,10 @@ class ServingEngine:
         K = cfg.n_codebooks
         tok_shape = (slots, K, 1) if K > 1 else (slots, 1)
         self._last_tok = jnp.zeros(tok_shape, jnp.int32)
+        # per-slot token-history ring for the on-device n-gram draft match
+        # (right-aligned, -1 padded; shifted on-device inside the spec scan)
+        self._hist = (jnp.full((slots, self.spec_hist), -1, jnp.int32)
+                      if self.spec_ngram else None)
         self._slot_len = np.zeros(slots, np.int32)
         self._tables = np.zeros((slots, self.n_pages), np.int32)
         self._tables_dev = jnp.asarray(self._tables)
@@ -238,6 +294,18 @@ class ServingEngine:
     def _set_last_tok(self, slot: int, tok) -> None:
         tok = jnp.asarray(tok, jnp.int32).reshape(self._last_tok.shape[1:])
         self._last_tok = self._last_tok.at[slot].set(tok)
+
+    def _seed_hist(self, req: Request) -> None:
+        """(Re)build the slot's draft-match history from the request's full
+        token context (prompt + every generated token, pending included) —
+        host-side only at admission/resume; the spec scan shifts emitted
+        tokens in on-device."""
+        ctx = np.concatenate([np.asarray(req.replay_tokens(), np.int32).ravel(),
+                              np.ravel(req.generated[-1]).astype(np.int32)])
+        row = np.full(self.spec_hist, -1, np.int32)
+        tail = ctx[-self.spec_hist:]
+        row[self.spec_hist - len(tail):] = tail
+        self._hist = self._hist.at[req.slot].set(jnp.asarray(row))
 
     def _refresh_tables(self) -> jax.Array:
         """Device mirror of running requests' block tables ([slots, P] int32).
@@ -377,6 +445,8 @@ class ServingEngine:
         else:
             pending = req.generated[-1]
         self._set_last_tok(req.slot, pending)
+        if self.spec_ngram:
+            self._seed_hist(req)
 
     def step(self) -> bool:
         """One engine iteration; returns True while work remains."""
@@ -386,8 +456,10 @@ class ServingEngine:
         for req, mode, swap_ids, old_slot, dev_ids in plan.preempt:
             if mode == "swap":
                 req.ticket = self.store.swap_out(
-                    self.caches, old_slot, swap_ids, req.cached_len, dev_ids)
+                    self.caches, old_slot, swap_ids, req.cached_len, dev_ids,
+                    skip=len(req.kept_blocks))
                 self.stats.preempt_swap += 1
+                self.stats.swap_skipped_blocks += len(req.kept_blocks)
             else:
                 self.stats.preempt_recompute += 1
         for req in plan.resume:
@@ -397,6 +469,8 @@ class ServingEngine:
             req.ticket = None
             self._slot_len[req.slot] = req.cached_len
             self._set_last_tok(req.slot, req.generated[-1])
+            if self.spec_ngram:
+                self._seed_hist(req)
         for req in plan.admit:
             self._prefill_request(req, now, plan.grants.get(req.rid))
 
@@ -415,14 +489,26 @@ class ServingEngine:
 
         active_slots = sorted(self.sched.running)
         if active_slots:
-            h = 1
-            if self.horizon > 1:
+            if self.spec_ngram:
+                # speculation always rides the fused scan (h == 1 is one
+                # draft→verify→accept step); grant 0 ⇒ the pool cannot cover
+                # the worst-case K+1-row write span — plain single step
                 h = self.sched.grant_horizon(self.horizon, now,
-                                             self._est_step_time())
-            if h > 1:
-                self._decode_horizon_steps(active_slots, h)
+                                             self._est_step_time(),
+                                             spec_k=self.spec_ngram)
+                if h >= 1:
+                    self._decode_spec_steps(active_slots, h)
+                else:
+                    self._decode_single_step(active_slots)
             else:
-                self._decode_single_step(active_slots)
+                h = 1
+                if self.horizon > 1:
+                    h = self.sched.grant_horizon(self.horizon, now,
+                                                 self._est_step_time())
+                if h > 1:
+                    self._decode_horizon_steps(active_slots, h)
+                else:
+                    self._decode_single_step(active_slots)
         self.stats.steps += 1
         return self.sched.has_work
 
@@ -446,6 +532,12 @@ class ServingEngine:
         self.stats.active_slot_steps += len(active_slots)
         self.stats.slot_steps += self.slots
         self._last_tok = nxt
+        if self.spec_ngram:
+            # keep the draft history aligned when speculation fell back to a
+            # plain step (pool too tight for a verify tile this iteration)
+            shifted = jnp.concatenate([self._hist[:, 1:], nxt], axis=1)
+            self._hist = jnp.where(jnp.asarray(active)[:, None], shifted,
+                                   self._hist)
         now = self._now()
         for s in active_slots:
             req = self.sched.running[s]
@@ -502,14 +594,80 @@ class ServingEngine:
             if req.done:
                 self._complete(req, t_before + int(counts[s]) * span / h)
 
+    def _decode_spec_steps(self, active_slots: List[int], h: int) -> None:
+        """One fused dispatch of ``h`` draft→verify→accept inner steps.
+
+        Each inner step emits 1..K+1 tokens per live slot (the accepted
+        draft prefix plus the bonus token); ``counts[s, hh]`` tells the host
+        which prefix of ``block[s, hh]`` is real.  Timestamps interpolate
+        over the dispatch's engine-clock span per inner step, and within a
+        step across its accepted run."""
+        K = self.spec_ngram
+        t0 = time.perf_counter()
+        t_before = self._now()
+        active = np.zeros(self.slots, bool)
+        active[active_slots] = True
+        rem = np.zeros(self.slots, np.int32)
+        for s in active_slots:
+            rem[s] = self.sched.running[s].remaining
+        tables = self._refresh_tables()
+        block, counts, last, hist, self.caches = self._fused_fn(h, K)(
+            self.params, self.caches, self._last_tok,
+            jnp.asarray(self._slot_len), jnp.asarray(active),
+            jnp.asarray(rem), self._hist, tables,
+            jnp.int32(-1 if self.eos_id is None else self.eos_id))
+        block, counts = jax.device_get((block, counts))   # ONE sync
+        self._last_tok = last
+        self._hist = hist
+        self.stats.decode_time += time.perf_counter() - t0
+        self.stats.decode_steps += h
+        self.stats.dispatches += 1
+        self.stats.decode_dispatches += 1
+        self.stats.host_syncs += 1
+        live = counts > 0                                  # [slots, h]
+        self.stats.active_slot_steps += int(live.sum())
+        self.stats.slot_steps += self.slots * h
+        self.stats.spec_drafted += K * int(live.sum())
+        self.stats.spec_accepted += int((counts - live).sum())
+        span = self._now() - t_before
+        last_t = {}
+        for hh in range(h):                      # step-major: matches h=1 order
+            for s in active_slots:
+                m = int(counts[s, hh])
+                for j in range(m):
+                    t_tok = t_before + (hh + (j + 1) / m) * span / h
+                    self._slot_len[s] += 1
+                    self.stats.decode_tokens += 1
+                    self._emit(self.sched.running[s], block[s, hh, j], t_tok)
+                    last_t[s] = t_tok
+        for s in active_slots:
+            req = self.sched.running[s]
+            if req.done:
+                self._complete(req, last_t.get(s, t_before + span))
+
     def _horizon_fn(self, h: int) -> Callable:
-        fn = self._decode_horizon.get(h)
+        return self._fused_fn(h, 0)
+
+    def _fused_fn(self, h: int, k: int) -> Callable:
+        """LRU cache of compiled fused decode executables, keyed (h, k)."""
+        key = (h, k)
+        fn = self._fused.get(key)
         if fn is None:
-            fn = jax.jit(
-                make_serving_decode_horizon(self.cfg, h, top_k=self.top_k,
-                                            sample=self.temperature > 0),
-                donate_argnums=(1,))
-            self._decode_horizon[h] = fn
+            if k:
+                fn = jax.jit(
+                    make_serving_spec_horizon(self.cfg, h, k, n=self._spec_n),
+                    donate_argnums=(1,))
+            else:
+                fn = jax.jit(
+                    make_serving_decode_horizon(self.cfg, h, top_k=self.top_k,
+                                                sample=self.temperature > 0),
+                    donate_argnums=(1,))
+            self._fused[key] = fn
+            if len(self._fused) > self.jit_cache:
+                self._fused.popitem(last=False)
+                self.stats.jit_evictions += 1
+        else:
+            self._fused.move_to_end(key)
         return fn
 
     def _est_step_time(self) -> float:

@@ -47,6 +47,10 @@ class EngineStats:
     cow_forks: int = 0                    # partial-block copy-on-write forks
     table_block_steps: int = 0            # Σ per step of distinct table blocks
     pool_steps: int = 0                   # steps the occupancy sample covers
+    spec_drafted: int = 0                 # n-gram draft tokens verified
+    spec_accepted: int = 0                # draft tokens accepted into streams
+    swap_skipped_blocks: int = 0          # swap-out copies skipped (re-attach)
+    jit_evictions: int = 0                # fused executables dropped (LRU)
 
     @property
     def occupancy(self) -> float:
@@ -72,6 +76,12 @@ class EngineStats:
         amortization as a first-class observable (1.0 ⇒ no amortization;
         approaches the granted horizon as slots stay busy)."""
         return self.decode_tokens / max(1, self.decode_dispatches)
+
+    @property
+    def accept_rate(self) -> float:
+        """Fraction of speculative draft tokens the verify step accepted —
+        the knob the n-gram speedup rides on (0.0 with speculation off)."""
+        return self.spec_accepted / max(1, self.spec_drafted)
 
 
 class OdinCostModel:
@@ -167,7 +177,14 @@ def summarize(requests, stats: EngineStats, cost: Optional[OdinCostModel] = None
             "shared_blocks": stats.shared_prefix_blocks,
             "cow_forks": stats.cow_forks,
             "mean_referenced_blocks": stats.mean_referenced_blocks,
+            "swap_skipped_blocks": stats.swap_skipped_blocks,
         },
+        "speculation": {
+            "drafted": stats.spec_drafted,
+            "accepted": stats.spec_accepted,
+            "accept_rate": stats.accept_rate,
+        },
+        "jit_evictions": stats.jit_evictions,
     }
     if cost is not None:
         out["odin_total"] = cost.attribute(stats.prefill_tokens + stats.decode_tokens)

@@ -91,6 +91,13 @@ class Request:
     slot: int = -1
     generated: List = field(default_factory=list)
     block_table: List[int] = field(default_factory=list)
+    # device blocks a swap preemption kept claims on (sharing-aware swap:
+    # blocks other tables/the prefix cache also hold stay resident instead of
+    # round-tripping through the swap tier; resume re-attaches them), and the
+    # swap-tier blocks its ticket occupies (scheduler-side accounting so a
+    # stuck resume can be downgraded to recompute without engine help)
+    kept_blocks: List[int] = field(default_factory=list)
+    swap_block_ids: List[int] = field(default_factory=list)
     eos: bool = False                     # emitted the engine's eos_id
     ticket: object = None                 # SwapTicket while SWAPPED
     n_prefill_tokens: int = 0             # includes recompute re-prefills
@@ -373,12 +380,16 @@ class PrefixCache:
 class Scheduler:
     def __init__(self, n_slots: int, pool: BlockPool, max_len: int,
                  swap_pool: Optional[BlockPool] = None,
-                 prefix_cache: Optional[PrefixCache] = None):
+                 prefix_cache: Optional[PrefixCache] = None,
+                 write_span: int = 1):
         self.n_slots = n_slots
         self.pool = pool
         self.max_len = max_len
         self.swap_pool = swap_pool
         self.prefix_cache = prefix_cache
+        # rows one decode dispatch may write per slot before rollback:
+        # 1 + the engine's speculative draft length (K)
+        self.write_span = write_span
         self.waiting: List[Tuple[float, int, Request]] = []    # heap
         self.swapped: deque = deque()
         self.running: Dict[int, Request] = {}                  # slot → request
@@ -430,28 +441,69 @@ class Scheduler:
             return None
         return max(self.running.values(), key=lambda r: (r.arrival, r.rid))
 
+    def _kept_prefix(self, req: Request) -> int:
+        """Leading device blocks a swap preemption may keep claims on: fully
+        written blocks (strictly below the next write row) that some *other*
+        claim also holds — another table's alias or the prefix cache.  Those
+        blocks would not be physically freed by our release anyway, so
+        keeping our claim costs nothing now and saves both the swap-tier copy
+        and the swap-in restore; content stays valid because aliased blocks
+        are never written (write-block exclusivity)."""
+        if self.prefix_cache is None:
+            return 0
+        kept = 0
+        limit = min(req.cached_len // self.pool.block_size,
+                    len(req.block_table))
+        while kept < limit and self.pool.refs(req.block_table[kept]) >= 2:
+            kept += 1
+        return kept
+
     def _preempt(self, req: Request, plan: StepPlan) -> None:
         old_slot = req.slot
         self.running.pop(old_slot)
         self.free_slots.append(old_slot)
         req.slot = -1
         dev_ids = list(req.block_table)     # snapshot for the swap-out copy
-        self.pool.free(req.block_table)
-        req.block_table = []
-        self.table_version += 1
         swap_ids = None
+        kept = 0
         if self.swap_pool is not None:
-            swap_ids = self.swap_pool.alloc(self.swap_pool.blocks_for(req.cached_len))
+            kept = self._kept_prefix(req)
+            swap_ids = self.swap_pool.alloc(
+                self.swap_pool.blocks_for(req.cached_len) - kept)
         if swap_ids is not None:
+            req.kept_blocks = dev_ids[:kept]
+            req.swap_block_ids = list(swap_ids)
+            self.pool.free(dev_ids[kept:])  # shared prefix claims stay held
+            req.block_table = []
+            self.table_version += 1
             req.state = RequestState.SWAPPED
             req.n_preempt_swap += 1
             self.swapped.append(req)
             plan.preempt.append((req, "swap", swap_ids, old_slot, dev_ids))
         else:
+            self.pool.free(dev_ids)
+            req.block_table = []
+            self.table_version += 1
             req.state = RequestState.QUEUED
             req.n_preempt_recompute += 1
             heapq.heappush(self.waiting, (req.arrival, req.rid, req))
             plan.preempt.append((req, "recompute", None, old_slot, dev_ids))
+
+    def _downgrade_to_recompute(self, req: Request) -> None:
+        """Convert a swapped request that can never resume (pool fragmented
+        by retained claims, nothing running) into a recompute readmission:
+        release its kept claims and swap-tier blocks, drop the ticket, and
+        requeue — the re-prefill rebuilds the KV from tokens (and typically
+        re-attaches whatever prefix chains survived)."""
+        self.pool.free(req.kept_blocks)
+        req.kept_blocks = []
+        if self.swap_pool is not None and req.swap_block_ids:
+            self.swap_pool.free(req.swap_block_ids)
+        req.swap_block_ids = []
+        req.ticket = None
+        req.state = RequestState.QUEUED
+        req.n_preempt_recompute += 1
+        heapq.heappush(self.waiting, (req.arrival, req.rid, req))
 
     def _place(self, req: Request, blocks: List[int], now: float) -> None:
         req.block_table = blocks
@@ -463,22 +515,30 @@ class Scheduler:
             req.t_admit = now
 
     def _check_write_block(self, req: Request) -> None:
-        """The block the request's next decode writes (row ``cached_len``)
-        must be table-exclusive — aliased by no other table, at most retained
-        by the prefix cache.  A violation means a COW fork was missed; fail
-        loudly here instead of silently corrupting a shared prefix."""
-        idx = req.cached_len // self.pool.block_size
-        if idx >= len(req.block_table):
-            return                          # request was preempted this step
-        bid = req.block_table[idx]
-        refs = self.pool.refs(bid)
-        if self.prefix_cache is not None and self.prefix_cache.holds(bid):
-            refs -= 1
-        if refs != 1:
-            raise RuntimeError(
-                f"request {req.rid}: decode write row {req.cached_len} lands "
-                f"in block {bid} carrying {refs} table claims — missed COW "
-                f"fork would corrupt a shared prefix")
+        """Every block the request's next decode dispatch may write — rows
+        ``cached_len .. cached_len + write_span - 1`` (span > 1 under
+        speculative verify, whose rejected rows roll back) — must be
+        table-exclusive: aliased by no other table, at most retained by the
+        prefix cache.  A violation means a COW fork was missed; fail loudly
+        here instead of silently corrupting a shared prefix.  Blocks past the
+        table's current length are skipped (horizon pre-extension allocates
+        them fresh and exclusive before any multi-row dispatch runs)."""
+        bs = self.pool.block_size
+        first = req.cached_len // bs
+        last = (req.cached_len + self.write_span - 1) // bs
+        for idx in range(first, last + 1):
+            if idx >= len(req.block_table):
+                return                      # not allocated yet / preempted
+            bid = req.block_table[idx]
+            refs = self.pool.refs(bid)
+            if self.prefix_cache is not None and self.prefix_cache.holds(bid):
+                refs -= 1
+            if refs != 1:
+                raise RuntimeError(
+                    f"request {req.rid}: decode write rows "
+                    f"[{req.cached_len}, {req.cached_len + self.write_span}) "
+                    f"land in block {bid} carrying {refs} table claims — "
+                    f"missed COW fork would corrupt a shared prefix")
 
     def _admission_blocks(self, req: Request
                           ) -> Tuple[Optional[List[int]], Optional[PrefixGrant]]:
@@ -547,16 +607,31 @@ class Scheduler:
         if plan.preempt:
             return plan                    # let freed blocks settle one step
 
-        # 2. resume swapped requests into free slots (FIFO)
+        # 2. resume swapped requests into free slots (FIFO).  Blocks the
+        # preemption kept claims on (sharing-aware swap) re-attach in place;
+        # only the exclusive suffix needs fresh blocks + the swap-in copy.
         resume_starved = False
         while self.swapped and self.free_slots:
             req = self.swapped[0]
-            got = self.pool.alloc(self.pool.blocks_for(req.cached_len + 1))
+            got = self.pool.alloc(self.pool.blocks_for(req.cached_len + 1)
+                                  - len(req.kept_blocks))
             if got is None:
-                resume_starved = True
-                break
+                if not self.running:
+                    # nothing running can ever free more capacity, so a
+                    # starved resume would deadlock: retained claims (ours
+                    # and other swapped requests') have fragmented the pool.
+                    # Downgrade the head to recompute-readmission — releasing
+                    # its kept claims and swap blocks is sound because a
+                    # re-prefill rebuilds everything from tokens.
+                    self.swapped.popleft()
+                    self._downgrade_to_recompute(req)
+                    continue
+                resume_starved = True       # kept claims stay held: content
+                break                       # must survive until the resume
             self.swapped.popleft()
-            self._place(req, got, now)
+            table, req.kept_blocks = req.kept_blocks + got, []
+            req.swap_block_ids = []         # engine/driver frees the ticket
+            self._place(req, table, now)
             plan.resume.append(req)
 
         # 3. admit arrived requests into the remaining free slots.  Not while
@@ -586,7 +661,7 @@ class Scheduler:
     # -- horizon granting ---------------------------------------------------
 
     def grant_horizon(self, max_h: int, now: float,
-                      est_step_time: float = 0.0) -> int:
+                      est_step_time: float = 0.0, spec_k: int = 0) -> int:
         """Largest safe number of lockstep decode steps for one dispatch.
 
         Called after :meth:`plan` (so single-step growth is already settled)
@@ -600,42 +675,58 @@ class Scheduler:
            running slots of remaining budget — so freed slots/blocks turn
            into admitted work at the boundary instead of idling frozen.
            (An early EOS can still freeze a slot mid-horizon; that waste is
-           bounded by this same cap.)
+           bounded by this same cap.)  With speculation an inner step emits
+           up to ``spec_k + 1`` tokens, so the earliest completion is
+           ``ceil(remaining / (spec_k+1))`` steps out.
         2. **Arrival events.**  With a free slot and a future arrival, the
            horizon stops roughly at the admission time (``est_step_time`` is
            the engine's measured per-token decode time; 0 disables the cap).
         3. **Block headroom.**  Every granted step must be able to write its
-           KV row: each running request's table is pre-extended to cover
-           ``cached_len + min(h, remaining)`` rows *before* the dispatch, so
-           the paged kernel never indexes an unallocated page mid-horizon.
-           If the pool cannot cover ``h`` steps the grant halves (never
-           preempts — ``h == 1`` falls back to plan()'s growth/preemption).
+           KV rows: each running request's table is pre-extended *before*
+           the dispatch so the paged kernel never indexes an unallocated
+           page mid-horizon.  Speculative dispatches budget the worst case —
+           every inner step writes ``spec_k + 1`` rows even when rejection
+           rolls most of them back, and a slot that freezes on budget still
+           wrote ``spec_k`` rows past its last accepted token — capped at
+           ``max_len`` (the attention write path parks rows beyond the table
+           span on the pool's write-off block).  If the pool cannot cover
+           ``h`` steps the grant halves (never preempts); with speculation,
+           an uncoverable ``h == 1`` returns 0 and the engine falls back to
+           one plain decode step (plan()'s growth already covered one row).
         """
         running = sorted(self.running.values(), key=lambda r: (r.arrival, r.rid))
         if not running:
             return 0
+        per = spec_k + 1
         h = max(1, max_h)
         if self.swapped or (self.waiting and self.waiting[0][0] <= now):
-            h = min(h, min(r.remaining for r in running))
+            h = min(h, max(1, min(-(-r.remaining // per) for r in running)))
         elif self.waiting and self.free_slots and est_step_time > 0:
             until = self.waiting[0][0] - now
             h = min(h, max(1, int(until / est_step_time) + 1))
         h = 1 << (max(1, h).bit_length() - 1)          # snap down to 2^k
 
+        def rows_for(r: Request, hh: int) -> int:
+            return min(self.max_len,
+                       r.cached_len + min(hh * per, r.remaining + spec_k))
+
         def extra_blocks(hh: int) -> int:
             return sum(
-                max(0, self.pool.blocks_for(r.cached_len + min(hh, r.remaining))
+                max(0, self.pool.blocks_for(rows_for(r, hh))
                     - len(r.block_table))
                 for r in running)
 
         while h > 1 and extra_blocks(h) > self.pool.available_blocks:
             h //= 2
-        if h > 1:
+        if spec_k and (extra_blocks(h) > self.pool.available_blocks or any(
+                self.pool.blocks_for(rows_for(r, h)) > self.pool.n_blocks
+                for r in running)):
+            return 0                        # this step cannot verify a draft
+        if h > 1 or spec_k:
             grew = False
             for r in running:
-                rows = r.cached_len + min(h, r.remaining)
                 before = len(r.block_table)
-                ok = self.pool.extend_to(r.block_table, rows)
+                ok = self.pool.extend_to(r.block_table, rows_for(r, h))
                 assert ok, "grant_horizon headroom check missed"
                 grew |= len(r.block_table) != before
             if grew:

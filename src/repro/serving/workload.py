@@ -35,6 +35,11 @@ class WorkloadSpec:
     # prefix sharing dedups.  ``prompt_buckets`` then sizes the unique tail.
     shared_prefix: int = 0
     share_groups: int = 1
+    # repetition-heavy prompts: >0 tiles a per-request random pattern of this
+    # period to the bucket length (structured/templated traffic — the
+    # workload n-gram speculation feeds on; greedy continuations of periodic
+    # prompts fall into cycles the draft match predicts)
+    pattern_period: int = 0
 
 
 # Scenario presets (lengths are smoke-scale; scale up for full configs).
@@ -50,6 +55,10 @@ SCENARIOS: Dict[str, WorkloadSpec] = {
     # shared system prompt + unique user tails — the prefix-sharing workload
     "shared": WorkloadSpec(shared_prefix=96, prompt_buckets=(8, 16),
                            gen_buckets=(8, 16)),
+    # periodic prompts + long generations — repetition-heavy traffic where
+    # greedy continuations cycle and n-gram speculation accepts deep drafts
+    "repetitive": WorkloadSpec(pattern_period=8, prompt_buckets=(32,),
+                               gen_buckets=(160,)),
 }
 
 
@@ -85,8 +94,15 @@ def make_requests(cfg: ModelConfig, spec: WorkloadSpec, seed: int = 0,
                for _ in range(spec.share_groups)] if spec.shared_prefix else []
     out = []
     for i in range(spec.n_requests):
-        prompt = rng.integers(0, cfg.vocab, size=lead(int(plens[i])),
-                              dtype=np.int32)
+        if spec.pattern_period:
+            pat = rng.integers(0, cfg.vocab, size=lead(spec.pattern_period),
+                               dtype=np.int32)
+            reps = -(-int(plens[i]) // spec.pattern_period)
+            tiles = (1,) * (pat.ndim - 1) + (reps,)
+            prompt = np.tile(pat, tiles)[..., :int(plens[i])]
+        else:
+            prompt = rng.integers(0, cfg.vocab, size=lead(int(plens[i])),
+                                  dtype=np.int32)
         if systems:
             prompt = np.concatenate(
                 [systems[i % spec.share_groups], prompt], axis=-1)

@@ -82,6 +82,78 @@ def test_block_table_parity_with_dense_decode(seed, int8):
                                atol=3e-5, rtol=1e-4)
 
 
+def _pack_ref(q4, kp, vp, tables, lengths, **kw):
+    """Run the reference oracle on a [B, Q, H, D] query block (the ops-layer
+    packing: row q·G + g of the kernel tile is query q, group g)."""
+    B, Q, H, D = q4.shape
+    Hkv = kp.shape[2]
+    G = H // Hkv
+    qt = q4.reshape(B, Q, Hkv, G, D).transpose(0, 2, 1, 3, 4).reshape(B, Hkv, Q * G, D)
+    o = paged_attn_ref(qt, kp, vp, tables, lengths, q_len=Q, **kw)
+    return o.reshape(B, Hkv, Q, G, D).transpose(0, 2, 1, 3, 4).reshape(B, Q, H, D)
+
+
+@pytest.mark.parametrize("B,H,Hkv,D,bs,P,Q,window,int8", [
+    (3, 4, 2, 16, 8, 6, 3, 0, False),    # GQA draft tile
+    (2, 4, 4, 32, 16, 4, 5, 0, False),   # MHA
+    (2, 8, 1, 16, 8, 5, 2, 0, False),    # MQA
+    (2, 8, 2, 16, 8, 5, 4, 12, False),   # sliding window
+    (1, 4, 2, 16, 4, 3, 3, 5, True),     # window + int8 pool
+    (3, 4, 2, 16, 8, 6, 5, 0, True),     # int8 fixed-point pool
+])
+def test_multi_query_kernel_matches_reference(B, H, Hkv, D, bs, P, Q, window, int8):
+    """q_len > 1 (speculative verify tiles): kernel == oracle with per-row
+    causal masking of the in-flight draft against the page axis."""
+    rng = np.random.default_rng(B * 1000 + H * 10 + Q)
+    q1, kp, vp, tables, lengths = _rand_pool(rng, B, H, Hkv, D, bs, P, int8)
+    q = jnp.asarray(rng.normal(size=(B, Q, H, D)) * 0.5, jnp.float32)
+    lengths = jnp.asarray(rng.integers(Q, P * bs + 1, B), jnp.int32)
+    kv_scale = KV_SCALE if int8 else None
+    out = paged_attention(q, kp, vp, tables, lengths, window=window,
+                          kv_scale=kv_scale)
+    ref = _pack_ref(q, kp, vp, tables, lengths, window=window,
+                    kv_scale=kv_scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+@pytest.mark.parametrize("window", [0, 9])
+def test_multi_query_rows_match_sequential_decode_calls(window):
+    """The semantic contract speculation rests on: query row j of a Q-token
+    tile must equal a plain single-token decode at length - (Q-1-j) — i.e.
+    the fused verify scores exactly what Q sequential steps would have."""
+    rng = np.random.default_rng(7)
+    B, H, Hkv, D, bs, P, Q = 3, 4, 2, 16, 8, 5, 4
+    q, kp, vp, tables, _ = _rand_pool(rng, B, H, Hkv, D, bs, P)
+    q = jnp.asarray(rng.normal(size=(B, Q, H, D)) * 0.5, jnp.float32)
+    lengths = jnp.asarray(rng.integers(Q, P * bs + 1, B), jnp.int32)
+    fused = paged_attention(q, kp, vp, tables, lengths, window=window)
+    for j in range(Q):
+        single = paged_attention(q[:, j], kp, vp, tables,
+                                 lengths - (Q - 1 - j), window=window)
+        np.testing.assert_allclose(np.asarray(fused[:, j]), np.asarray(single),
+                                   atol=3e-5, err_msg=f"query {j}/{Q}")
+
+
+def test_multi_query_duplicate_tables_and_short_lengths():
+    """Draft tiles over cross-slot duplicated block ids (prefix sharing) and
+    lengths shorter than the tile (fresh slots): rows whose position would be
+    negative must come out finite (fully masked ⇒ zeros), and aliased slots
+    must agree with the oracle."""
+    rng = np.random.default_rng(5)
+    B, H, Hkv, D, bs, P, Q = 4, 4, 2, 16, 8, 5, 4
+    q1, kp, vp, tables, _ = _rand_pool(rng, B, H, Hkv, D, bs, P)
+    t = np.array(tables)
+    t[1, :3] = t[0, :3]
+    tables = jnp.asarray(t)
+    q = jnp.asarray(rng.normal(size=(B, Q, H, D)) * 0.5, jnp.float32)
+    lengths = jnp.asarray([0, 2, Q, 3 * bs], jnp.int32)   # incl. len < Q
+    out = paged_attention(q, kp, vp, tables, lengths)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_array_equal(np.asarray(out[0]), 0.0)
+    ref = _pack_ref(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
 def test_zero_length_slot_yields_zeros_not_nan():
     """Idle serving slots decode at length 0 — the kernel must emit exact
     zeros (empty softmax), never NaN (which would poison activity-masked
@@ -138,6 +210,7 @@ def _fuzz_case(rng, geom=None):
     window = int(geom["window"]) if geom else int(rng.choice([0, 0, 5, 12]))
     int8 = bool(geom["int8"]) if geom else bool(rng.integers(0, 2))
     dup = bool(geom["dup"]) if geom else bool(rng.integers(0, 2))
+    Q = int(geom["Q"]) if geom else int(rng.choice([1, 1, 2, 3, 5]))
     H = Hkv * G
     q, kp, vp, tables, lengths = _rand_pool(rng, B, H, Hkv, D, bs, P, int8)
     lengths = jnp.asarray(rng.integers(0, P * bs + 1, B), jnp.int32)
@@ -147,12 +220,19 @@ def _fuzz_case(rng, geom=None):
         t[1, :k] = t[0, :k]               # cross-slot duplicated ids
         tables = jnp.asarray(t)
     kv_scale = KV_SCALE if int8 else None
-    out = paged_attention(q, kp, vp, tables, lengths, window=window,
-                          kv_scale=kv_scale)
-    ref = paged_attn_ref(q.reshape(B, Hkv, G, D), kp, vp, tables, lengths,
-                         window=window, kv_scale=kv_scale).reshape(B, H, D)
+    if Q > 1:
+        q = jnp.asarray(rng.normal(size=(B, Q, H, D)) * 0.5, jnp.float32)
+        out = paged_attention(q, kp, vp, tables, lengths, window=window,
+                              kv_scale=kv_scale)
+        ref = _pack_ref(q, kp, vp, tables, lengths, window=window,
+                        kv_scale=kv_scale)
+    else:
+        out = paged_attention(q, kp, vp, tables, lengths, window=window,
+                              kv_scale=kv_scale)
+        ref = paged_attn_ref(q.reshape(B, Hkv, G, D), kp, vp, tables, lengths,
+                             window=window, kv_scale=kv_scale).reshape(B, H, D)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5,
-                               err_msg=str((B, Hkv, G, D, bs, P, window,
+                               err_msg=str((B, Hkv, G, D, bs, P, Q, window,
                                             int8, dup, np.asarray(lengths))))
 
 
@@ -177,6 +257,7 @@ try:
             "window": data.draw(st.sampled_from([0, 5, 12])),
             "int8": data.draw(st.booleans()),
             "dup": data.draw(st.booleans()),
+            "Q": data.draw(st.sampled_from([1, 2, 4])),
         }
         _fuzz_case(np.random.default_rng(seed), geom)
 except ImportError:                       # container without test extras

@@ -947,3 +947,336 @@ def test_engine_streaming_callback_and_order(smoke_setup):
     for r in reqs:
         assert seen[r.rid] == [int(np.asarray(t)) for t in r.generated]
         assert len(seen[r.rid]) == 5
+
+
+# ---------------------------------------------------------------------------
+# n-gram self-speculative decode (scheduler accounting + engine end-to-end)
+# ---------------------------------------------------------------------------
+
+# one arch per speculable cache family: paged GQA, MoE-over-paged-GQA, and
+# MLA's dense latent cache (spec rides the generic S>1 decode path there)
+SPEC_ARCHS = ["phi4-mini-3.8b", "qwen3-moe-235b-a22b", "deepseek-v3-671b"]
+
+
+def test_ngram_propose_matches_and_fallback():
+    import jax.numpy as jnp
+    from repro.launch.steps import ngram_propose
+    hist = jnp.asarray([
+        # bigram (7, 8) seen earlier, followed by 9, 1 → draft [9, 1]
+        [-1, -1, 7, 8, 9, 1, 5, 7, 8],
+        # no earlier match → repeat the last token
+        [-1, -1, -1, 1, 2, 3, 4, 5, 6],
+        # most recent match wins: (7, 8) at j=0 and j=3 → follow j=3
+        [7, 8, 3, 7, 8, 5, 0, 7, 8],
+        # padding never matches real tokens, and boundary drafts clamp ≥ 0
+        [-1, -1, -1, -1, -1, -1, -1, 5, 5],
+    ], jnp.int32)
+    draft = np.asarray(ngram_propose(hist, K=2, n=2))
+    np.testing.assert_array_equal(draft[0], [9, 1])
+    np.testing.assert_array_equal(draft[1], [6, 6])
+    np.testing.assert_array_equal(draft[2], [5, 0])
+    assert (draft >= 0).all()
+
+
+def test_speculable_gates_families():
+    from repro.launch.steps import speculable
+    from repro.models import registry
+    assert speculable(registry.get_smoke("phi4-mini-3.8b"))
+    assert speculable(registry.get_smoke("qwen3-moe-235b-a22b"))
+    assert speculable(registry.get_smoke("deepseek-v3-671b"))
+    assert not speculable(registry.get_smoke("hymba-1.5b"))      # SSM state
+    assert not speculable(registry.get_smoke("xlstm-350m"))      # recurrent
+    assert not speculable(registry.get_smoke("musicgen-medium")) # codebooks
+
+
+def test_engine_spec_rejects_unsupported_configs():
+    from repro.models import registry
+    from repro.serving import ServingEngine
+    for arch in ("hymba-1.5b", "xlstm-350m", "musicgen-medium"):
+        with pytest.raises(ValueError, match="spec_ngram|recurrent|codebook"):
+            ServingEngine(registry.get_smoke(arch), slots=2, max_len=32,
+                          block_size=8, spec_ngram=2)
+    cfg = registry.get_smoke("phi4-mini-3.8b")
+    with pytest.raises(ValueError, match="greedy"):
+        ServingEngine(cfg, slots=2, max_len=32, block_size=8, spec_ngram=2,
+                      temperature=0.7)
+    with pytest.raises(ValueError, match="spec_hist"):
+        ServingEngine(cfg, slots=2, max_len=32, block_size=8, spec_ngram=4,
+                      spec_hist=5)
+
+
+def test_grant_horizon_spec_worst_case_preextension_and_fallback():
+    """Speculative grants must pre-extend for the worst case — every inner
+    step writes K+1 rows, and a budget-frozen slot still wrote K rows past
+    its last accepted token — and must return 0 (plain-decode fallback)
+    when the pool cannot cover even one verify tile."""
+    pool, sched, reqs = _admit_two(gens=(40, 37))
+    h = sched.grant_horizon(4, now=0.0, spec_k=3)
+    assert h == 4
+    for r in reqs:
+        rows = min(sched.max_len, r.cached_len + min(4 * 4, r.remaining + 3))
+        assert len(r.block_table) == pool.blocks_for(rows)
+    # completion cap counts accept-aware steps: remaining 4 at K=3 can finish
+    # in one inner step → grant 1 even with arrived work queued
+    pool2, sched2, reqs2 = _admit_two(gens=(5, 5, 8))
+    assert sched2.grant_horizon(16, now=0.0, spec_k=3) == 1
+    # pool too tight for even one K+1-row tile → 0, single-step fallback
+    pool3 = BlockPool(6, 4)
+    sched3 = Scheduler(2, pool3, max_len=24, write_span=4)
+    for i in range(2):
+        sched3.submit(_mk_req(i, 8, 12))
+    for r in sched3.plan(0.0).admit:
+        _drive(r)
+    for r in sched3.running.values():
+        _drive(r, 2)                 # cached_len 10: the verify tile (rows
+    sched3.plan(0.5)                 # 10..13) crosses into a 4th block
+    assert pool3.free_blocks == 0                    # 3 blocks each
+    assert sched3.grant_horizon(1, now=0.0, spec_k=3) == 0
+    # spec-off grants are unchanged by the spec machinery
+    assert sched3.grant_horizon(1, now=0.0) == 1
+
+
+def test_preempt_keeps_shared_prefix_claims_and_resume_reattaches():
+    """Sharing-aware swap: blocks the prefix cache (or a co-reader) still
+    holds keep the swapped request's claim instead of round-tripping through
+    the swap tier; resume re-attaches them and allocates only the exclusive
+    suffix."""
+    pool = BlockPool(16, 4)
+    cache = PrefixCache(pool, 4)
+    swap = BlockPool(8, 4)
+    sched = Scheduler(1, pool, max_len=32, swap_pool=swap, prefix_cache=cache)
+    toks = np.arange(12, dtype=np.int32)
+    req = Request(rid=0, prompt=toks, max_new=8)
+    sched.submit(req)
+    for r in sched.plan(0.0).admit:
+        _drive(r)                                    # first token from prefill
+    _drive(req, 2)                                   # cached_len 14: block 3 live
+    assert len(req.block_table) == 4
+    plan = sched.plan(1.0)
+    sched._preempt(req, plan)
+    # prompt blocks 0..2 are cache-held (refs 2 before free) → kept; the
+    # tail block (rows 12..13, decode-written) is exclusive → swapped
+    assert req.state.value == "swapped"
+    kept_ids = list(req.kept_blocks)
+    assert len(kept_ids) == 3
+    assert all(pool.refs(b) == 2 for b in kept_ids)
+    assert swap.used_blocks == 1                     # only the suffix block
+    # resume: kept blocks lead the new table, only the suffix is allocated
+    plan2 = sched.plan(2.0)
+    assert plan2.resume == [req]
+    assert req.block_table[:3] == kept_ids
+    assert req.kept_blocks == []
+    assert len(req.block_table) == 4
+
+
+def test_swap_ticket_skip_roundtrip():
+    """A ticket with skip_blocks restores into table rows skip onward and
+    never touches the retained leading blocks."""
+    from repro.launch.steps import init_serving_caches
+    from repro.models import registry
+    from repro.serving.blocks import PagedKVStore
+    cfg = registry.get_smoke("phi4-mini-3.8b")
+    caches = init_serving_caches(cfg, batch=2, max_len=32, block_size=8,
+                                 n_blocks=8)
+    kp = caches[0]["attn"]["k_pool"]
+    caches[0]["attn"]["k_pool"] = kp.at[:, 1].set(1.0).at[:, 3].set(3.0)
+    caches[0]["attn"]["pos"] = caches[0]["attn"]["pos"].at[:, 0].set(12)
+    store = PagedKVStore(caches, n_blocks=4, block_size=8)
+    sids = store.pool.alloc(1)                       # suffix only
+    ticket = store.swap_out(caches, slot=0, block_ids=sids, n_tokens=12,
+                            dev_ids=[1, 3], skip=1)
+    assert ticket.skip_blocks == 1
+    # block 1 was retained (never copied): clobber only block 3
+    caches[0]["attn"]["k_pool"] = caches[0]["attn"]["k_pool"].at[:, 3].set(-7.0)
+    caches2 = store.swap_in(caches, slot=0, ticket=ticket, dev_ids=[1, 6])
+    kp2 = np.asarray(caches2[0]["attn"]["k_pool"], np.float32)
+    np.testing.assert_array_equal(kp2[:, 1], 1.0)    # retained block intact
+    np.testing.assert_array_equal(kp2[:, 6], 3.0)    # suffix restored
+
+
+@pytest.fixture(scope="module", params=SPEC_ARCHS)
+def spec_setup(request):
+    return materialize(request.param)
+
+
+def test_engine_spec_token_parity_all_families(spec_setup):
+    """Greedy spec-on streams must be token-identical to spec-off by
+    construction (every emitted token is an argmax), across the paged-GQA,
+    MoE and MLA cache families, while drafting real work."""
+    cfg, params = spec_setup
+    base, s0 = run_workload(cfg, params)
+    for K in (2, 4):
+        spec, s1 = run_workload(cfg, params, spec_ngram=K)
+        assert base == spec, f"spec K={K} diverged"
+        assert s1["decode_tokens"] == s0["decode_tokens"]
+        assert s1["speculation"]["drafted"] > 0
+        assert 0 <= s1["speculation"]["accepted"] <= s1["speculation"]["drafted"]
+
+
+def test_engine_spec_fuses_into_horizon_scan():
+    """spec_ngram composes with horizon>1: one dispatch runs h inner
+    draft→verify steps; parity holds and dispatches drop vs plain h=1."""
+    cfg, params = materialize("phi4-mini-3.8b")
+    base, s0 = run_workload(cfg, params)
+    spec, s1 = run_workload(cfg, params, spec_ngram=2, horizon=8)
+    assert base == spec
+    assert s1["decode_dispatches"] < s0["decode_dispatches"]
+    assert s1["tokens_per_dispatch"] > s0["tokens_per_dispatch"]
+
+
+def test_engine_spec_preemption_parity():
+    """Tight pools under speculation: worst-case write-span budgeting plus
+    swap/recompute preemption must keep streams identical."""
+    cfg, params = materialize("phi4-mini-3.8b")
+    base, _ = run_workload(cfg, params)
+    swap, s_sw = run_workload(cfg, params, spec_ngram=4, n_blocks=8,
+                              swap_blocks=32)
+    rec, s_rc = run_workload(cfg, params, spec_ngram=4, n_blocks=8)
+    assert s_sw["preemptions"]["swap"] > 0
+    assert s_rc["preemptions"]["recompute"] > 0
+    assert base == swap
+    assert base == rec
+
+
+def test_engine_spec_shared_prefix_parity_and_swap_skip():
+    """Speculation over prefix-shared streams: parity with the unshared
+    spec-off run, and sharing-aware swap tickets actually skip resident
+    blocks under pressure."""
+    cfg, params = materialize("phi4-mini-3.8b")
+    wspec = mixed_spec(n_requests=6, shared_prefix=24, prompt_buckets=(8, 16),
+                       gen_buckets=(4, 16))
+    base, _ = run_workload(cfg, params, max_len=64, spec=wspec,
+                           prefix_sharing=False)
+    spec, s1 = run_workload(cfg, params, max_len=64, spec=wspec,
+                            prefix_sharing=True, spec_ngram=4)
+    assert base == spec
+    pressured, s2 = run_workload(cfg, params, max_len=64, spec=wspec,
+                                 prefix_sharing=True, spec_ngram=4,
+                                 n_blocks=12, swap_blocks=32)
+    assert base == pressured
+    if s2["preemptions"]["swap"]:
+        assert s2["prefix"]["swap_skipped_blocks"] > 0
+
+
+def test_engine_spec_eos_parity():
+    """EOS inside an accepted run must truncate exactly where the plain
+    engine stops (on-device accept truncation + host re-check agree)."""
+    cfg, params = materialize("phi4-mini-3.8b")
+    base, _ = run_workload(cfg, params)
+    rid = idx = eos = None
+    for r, stream in sorted(base.items()):
+        for i in range(2, len(stream) - 1):
+            v = stream[i][0]
+            if all(s[0] != v for s in stream[:i]):
+                rid, idx, eos = r, i, v
+                break
+        if eos is not None:
+            break
+    assert eos is not None
+    b_eos, _ = run_workload(cfg, params, eos_id=eos)
+    s_eos, _ = run_workload(cfg, params, eos_id=eos, spec_ngram=4)
+    assert b_eos == s_eos
+    assert len(s_eos[rid]) == idx + 1 and s_eos[rid][-1][0] == eos
+
+
+def test_engine_spec_rollback_never_below_committed_length():
+    """Per-slot KV lengths advance by the accepted count only: stepping the
+    engine manually, a slot's length never decreases while the same request
+    holds it, never grows past h·(K+1) per dispatch, and stays covered by
+    its block table."""
+    import jax
+    from repro.models import lm as lm_mod, registry
+    from repro.nn import module as nnmod
+    from repro.serving import Request, ServingEngine
+    cfg = registry.get_smoke("phi4-mini-3.8b")
+    params = nnmod.materialize(lm_mod.param_spec(cfg), jax.random.PRNGKey(0))
+    K, H = 3, 4
+    eng = ServingEngine(cfg, slots=3, max_len=48, block_size=8, params=params,
+                        spec_ngram=K, horizon=H)
+    rng = np.random.default_rng(0)
+    pat = rng.integers(0, cfg.vocab, 4, dtype=np.int32)
+    reqs = [Request(rid=i, prompt=np.tile(pat, 3), max_new=24)
+            for i in range(4)]
+    for r in reqs:
+        eng.submit(r)
+    guard = 0
+    while eng.sched.has_work:
+        before = dict(eng.sched.running)
+        len_before = eng._slot_len.copy()
+        eng.step()
+        for s, req in before.items():
+            if eng.sched.running.get(s) is req and req.slot == s:
+                grew = int(eng._slot_len[s]) - int(len_before[s])
+                assert 0 <= grew <= H * (K + 1)
+                assert len(req.block_table) * 8 >= req.cached_len
+        guard += 1
+        assert guard < 500
+    assert all(r.n_generated == 24 for r in reqs)
+
+
+def test_engine_spec_accepts_on_repetitive_stream():
+    """The observables must show real speculation wins on repetition-heavy
+    traffic: positive accept rate and more tokens per dispatch than the
+    spec-off engine at the same horizon."""
+    import dataclasses
+    from repro.serving import SCENARIOS, make_requests
+    cfg, params = materialize("phi4-mini-3.8b")
+    wspec = dataclasses.replace(SCENARIOS["repetitive"], n_requests=4,
+                                rate=1e9, gen_buckets=(96,))
+    base, s0 = run_workload(cfg, params, slots=3, max_len=144, block_size=16,
+                            spec=wspec, horizon=4)
+    spec, s1 = run_workload(cfg, params, slots=3, max_len=144, block_size=16,
+                            spec=wspec, horizon=4, spec_ngram=4)
+    assert base == spec
+    assert s1["speculation"]["accept_rate"] > 0.2
+    assert s1["tokens_per_dispatch"] > s0["tokens_per_dispatch"]
+    assert s1["decode_dispatches"] < s0["decode_dispatches"]
+
+
+def test_engine_jit_cache_lru_bounded_with_evictions():
+    """The fused-executable cache must stay bounded across horizon×spec
+    grant combinations, count its evictions, and keep streams identical."""
+    cfg, params = materialize("phi4-mini-3.8b")
+    base, s0 = run_workload(cfg, params, horizon=8, spec_ngram=2)
+    tight, s1 = run_workload(cfg, params, horizon=8, spec_ngram=2,
+                             jit_cache=1)
+    assert base == tight
+    assert s0["jit_evictions"] == 0
+    assert s1["jit_evictions"] > 0
+
+
+def test_engine_spec_history_stays_aligned_including_fallback():
+    """The per-slot draft history must track prompt+generated exactly at
+    every step — including plain-decode fallback steps when the pool cannot
+    cover a verify tile (regression: the fallback emitted a token without
+    shifting it into the ring, silently collapsing accept rates)."""
+    import jax
+    from repro.models import lm as lm_mod, registry
+    from repro.nn import module as nnmod
+    from repro.serving import Request, ServingEngine
+    cfg = registry.get_smoke("phi4-mini-3.8b")
+    params = nnmod.materialize(lm_mod.param_spec(cfg), jax.random.PRNGKey(0))
+    # 7 blocks × bs 8 over 2 slots of max_len 48: tight enough that spec
+    # grants intermittently fail and fall back to single steps
+    eng = ServingEngine(cfg, slots=2, max_len=48, block_size=8, params=params,
+                        spec_ngram=3, spec_hist=16, n_blocks=7)
+    grants = []
+    orig = eng.sched.grant_horizon
+    eng.sched.grant_horizon = lambda *a, **kw: grants.append(orig(*a, **kw)) or grants[-1]
+    reqs = [Request(rid=i, prompt=np.arange(16, dtype=np.int32) + i, max_new=20)
+            for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    guard = 0
+    while eng.sched.has_work:
+        eng.step()
+        for slot, req in eng.sched.running.items():
+            ctx = np.concatenate([np.asarray(req.replay_tokens()).ravel(),
+                                  np.ravel(req.generated[-1])])
+            row = np.asarray(eng._hist[slot])
+            n = min(len(ctx), len(row))
+            np.testing.assert_array_equal(row[-n:], ctx[-n:].astype(np.int32))
+        guard += 1
+        assert guard < 400
+    assert 0 in grants                   # the fallback path actually ran
+    assert any(g >= 1 for g in grants)   # and so did real spec dispatches

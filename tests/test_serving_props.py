@@ -5,14 +5,20 @@ against the *pure bookkeeping* layer (Scheduler + BlockPool + PrefixCache —
 no jax), checking after every step that
 
 * every block's refcount equals the number of running tables referencing it
-  plus the prefix cache's claim,
+  plus the prefix cache's claim plus any swapped request's retained
+  (sharing-aware swap) claims,
 * no block is simultaneously free and referenced,
 * total pool accounting is conserved (free + referenced == n_blocks, on the
   device AND the swap tier),
 * tables never alias a block twice, always cover their request's cached
-  rows, and the block the next decode writes is table-exclusive,
+  rows, and every block the next decode dispatch may write (the full
+  ``write_span`` under speculative emission) is table-exclusive,
 
 and at drain time that every request finished with its full token budget.
+Scenarios may run with speculative emission (``spec_k > 0``): each decode
+step emits 1..K+1 tokens per running request behind an accept-aware
+``grant_horizon`` pre-extension, and a request's cached length never drops
+below its pre-step committed value.
 The same scenario machinery runs two ways: hypothesis-driven (random
 structure shrunk to minimal counterexamples; CI runs the ``ci`` profile with
 a pinned derandomized seed) and a seeded numpy sweep so the properties are
@@ -68,13 +74,17 @@ class PoolInvariantDriver:
 
     def __init__(self, *, n_blocks: int, block_size: int, slots: int,
                  max_len: int, swap_blocks: int = 0,
-                 prefix_sharing: bool = True, banks=None):
+                 prefix_sharing: bool = True, banks=None, spec_k: int = 0):
         self.pool = BlockPool(n_blocks, block_size)
         self.cache = (PrefixCache(self.pool, block_size)
                       if prefix_sharing else None)
         self.swap = BlockPool(swap_blocks, block_size) if swap_blocks else None
         self.sched = Scheduler(slots, self.pool, max_len,
-                               swap_pool=self.swap, prefix_cache=self.cache)
+                               swap_pool=self.swap, prefix_cache=self.cache,
+                               write_span=spec_k + 1)
+        self.spec_k = spec_k
+        self.spec_multi_emits = 0        # decode steps that emitted > 1 token
+        self.kept_claims = 0             # swap-out blocks retained on-device
         self.banks = banks or []
         self.done = []
         self.all_reqs = []
@@ -98,7 +108,9 @@ class PoolInvariantDriver:
         plan = self.sched.plan(float(self.t))
         for req, mode, swap_ids, old_slot, dev_ids in plan.preempt:
             if mode == "swap":
-                req.ticket = SwapTicket(swap_ids, req.cached_len)
+                req.ticket = SwapTicket(swap_ids, req.cached_len,
+                                        skip_blocks=len(req.kept_blocks))
+                self.kept_claims += len(req.kept_blocks)
         for req in plan.resume:
             self.swap.free(req.ticket.block_ids)
             req.ticket = None
@@ -109,9 +121,23 @@ class PoolInvariantDriver:
             if req.done:
                 self.sched.complete(req, float(self.t))
                 self.done.append(req)
+        per = 1
+        if self.spec_k and self.sched.running:
+            # accept-aware pre-extension, exactly like the engine's dispatch;
+            # 0 ⇒ the pool cannot cover a verify tile — plain single step
+            if self.sched.grant_horizon(1, float(self.t),
+                                        spec_k=self.spec_k):
+                per = self.spec_k + 1
         for slot in sorted(self.sched.running):
             req = self.sched.running[slot]
-            self._emit(req)
+            committed = req.cached_len
+            # deterministic accepted-run length in [1, min(per, remaining)]
+            m = 1 + (req.rid * 13 + req.n_generated * 7) % per
+            m = max(1, min(m, req.remaining))
+            self.spec_multi_emits += m > 1
+            for _ in range(m):
+                self._emit(req)
+            assert req.cached_len >= committed   # rollback floor
             if req.done:
                 self.sched.complete(req, float(self.t))
                 self.done.append(req)
@@ -146,8 +172,11 @@ class PoolInvariantDriver:
         if self.cache is not None:
             for b in self.cache.held_blocks():
                 counts[b] += 1
+        for r in self.sched.swapped:     # sharing-aware swap retained claims
+            counts.update(r.kept_blocks)
         # every refcount equals the number of tables referencing the block
-        # (plus the cache's claim); nothing referenced is free; conservation
+        # (plus the cache's and swapped-retained claims); nothing referenced
+        # is free; conservation
         assert dict(counts) == refs, (dict(counts), refs)
         assert not (set(free) & set(refs))
         assert len(free) == len(set(free))
@@ -156,14 +185,22 @@ class PoolInvariantDriver:
         for r in self.sched.running.values():
             assert len(r.block_table) == len(set(r.block_table))
             assert len(r.block_table) >= self.pool.blocks_for(r.cached_len)
-            # the next decode write must land in a table-exclusive block
-            # (the block may not exist yet — next plan()'s growth adds it)
-            idx = r.cached_len // bs
-            if idx < len(r.block_table):
+            # every block the next dispatch may write (the write_span rows
+            # under speculative emission) must be table-exclusive (blocks
+            # may not exist yet — growth/grant pre-extension adds them)
+            first = r.cached_len // bs
+            last = (r.cached_len + self.sched.write_span - 1) // bs
+            for idx in range(first, min(last + 1, len(r.block_table))):
                 wb = r.block_table[idx]
                 held = 1 if (self.cache is not None
                              and self.cache.holds(wb)) else 0
                 assert self.pool.refs(wb) - held == 1
+        for r in self.sched.swapped:
+            # retained blocks stay allocated and content-immutable: nobody
+            # may hold them as a write block... their claims are accounted
+            # above; here just require they are still live
+            for b in r.kept_blocks:
+                assert self.pool.refs(b) >= 1
         # swap-tier conservation: tickets of swapped requests own the tier
         if self.swap is not None:
             ticket_blocks = [b for r in self.sched.swapped
@@ -194,9 +231,10 @@ def _scenario_from_rng(rng: np.random.Generator):
         specs.append(ReqSpec(int(rng.integers(0, 2)), prefix, tail, max_new,
                              arrival=int(rng.integers(0, 12))))
     sharing = bool(rng.random() < 0.8)
+    spec_k = int(rng.choice([0, 0, 2, 3]))    # speculative emission widths
     return dict(n_blocks=n_blocks, block_size=bs, slots=slots,
                 max_len=max_len, swap_blocks=swap_blocks,
-                prefix_sharing=sharing, banks=banks), specs
+                prefix_sharing=sharing, banks=banks, spec_k=spec_k), specs
 
 
 def _run_scenario(kw, specs):
@@ -231,6 +269,8 @@ def test_seeded_sweep_covers_preempt_resume_and_sharing():
         driver = _run_scenario(kw, specs)
         hits["swap"] += sum(r.n_preempt_swap for r in driver.all_reqs)
         hits["recompute"] += sum(r.n_preempt_recompute for r in driver.all_reqs)
+        hits["spec"] += driver.spec_multi_emits
+        hits["kept"] += driver.kept_claims
         if driver.cache is not None:
             hits["shared"] += driver.cache.hit_tokens
             hits["forks"] += driver.cache.forks
@@ -238,6 +278,7 @@ def test_seeded_sweep_covers_preempt_resume_and_sharing():
     assert hits["recompute"] > 0
     assert hits["shared"] > 0
     assert hits["forks"] > 0
+    assert hits["spec"] > 0          # multi-token speculative emission ran
 
 
 # ---------------------------------------------------------------------------
@@ -268,9 +309,10 @@ if HAVE_HYPOTHESIS:
                                  draw(st.integers(1, budget)),
                                  draw(st.integers(0, 10))))
         sharing = draw(st.booleans())
+        spec_k = draw(st.sampled_from([0, 2, 3]))
         return dict(n_blocks=n_blocks, block_size=bs, slots=slots,
                     max_len=max_len, swap_blocks=swap_blocks,
-                    prefix_sharing=sharing, banks=banks), specs
+                    prefix_sharing=sharing, banks=banks, spec_k=spec_k), specs
 
     @needs_hypothesis
     @settings(deadline=None,
