@@ -39,6 +39,13 @@ dispatch).  Every K compares against the same-horizon K=0 baseline.
 baseline AND ≥ 1.8× decode tok/s at K=4 on the repetitive scenario
 (≥ 1.2× at the best K on mixed), with ``accept_rate`` reported per cell.
 
+The **tracing cell** measures the structured tracer's overhead (paged engine
+on the mixed stream, trace-off vs trace-on, best-of-3) and checks the trace
+artifact's integrity: Perfetto-loadable Chrome trace JSON whose per-dispatch
+``odin_energy_mj`` args sum to the run's ``odin_total`` within 1%.
+``--trace-out`` writes the artifact; ``--check-trace`` gates on schema
+validity, energy-sum agreement, and trace-on ≥ 0.98× trace-off decode tok/s.
+
 Results merge into ``BENCH_serving.json`` (section "serving") next to the
 kernel microbench so the perf trajectory is machine-readable across PRs.
 
@@ -56,8 +63,8 @@ except ImportError:                      # run as a script: benchmarks/ on path
 
 from repro.launch.serve import serve_static
 from repro.models import registry
-from repro.serving import (OdinCostModel, Request, ServingEngine, WorkloadSpec,
-                           make_requests)
+from repro.serving import (OdinCostModel, Request, ServingEngine, Tracer,
+                           WorkloadSpec, make_requests, validate_chrome_trace)
 
 
 def _mixed_spec(n_requests: int) -> WorkloadSpec:
@@ -353,11 +360,86 @@ def speculation_cell(cfg, slots: int, params=None, ks=(0, 2, 4),
     return out
 
 
+def tracing_cell(cfg, base_requests, slots: int, params=None,
+                 block_size: int = 16, repeats: int = 3,
+                 trace_out=None, verbose: bool = True):
+    """Observability cell: tracing overhead + trace-artifact integrity.
+
+    Overhead: paged engine on the mixed stream, trace-off vs trace-on, each
+    with one warmup pass then ``repeats`` measured passes read off the stats
+    deltas (best-of-R, the horizon sweep's protocol); reports the decode
+    tok/s ratio.  Integrity: a dedicated single-run traced engine (so events
+    and stats cover the same window) must produce a schema-valid Chrome
+    trace whose per-dispatch ``odin_energy_mj`` args sum to the summary's
+    ``odin_total`` within 1%; that trace is the artifact ``trace_out`` (and
+    CI's Perfetto-schema validator input).
+    """
+    spec_max = max(r.prompt_len + r.max_new for r in base_requests)
+    max_len = -(-spec_max // block_size) * block_size
+
+    def fresh(rid0):
+        return [Request(rid=rid0 + r.rid, prompt=r.prompt, max_new=r.max_new,
+                        arrival=0.0) for r in base_requests]
+
+    def best_tps(tracer):
+        engine = ServingEngine(cfg, slots=slots, max_len=max_len,
+                               block_size=block_size, params=params,
+                               paged=True, horizon=4, tracer=tracer)
+        engine.run(fresh(0))                       # warmup: compile grants
+        st = engine.stats
+        best = 0.0
+        for rep in range(max(1, repeats)):
+            toks0, time0 = st.decode_tokens, st.decode_time
+            engine.run(fresh(10_000 * (rep + 1)))
+            best = max(best, (st.decode_tokens - toks0)
+                       / max(st.decode_time - time0, 1e-9))
+        return best
+
+    tps_off = best_tps(None)
+    tps_on = best_tps(Tracer(capacity=1 << 20))
+
+    # artifact + energy-attribution integrity on a fresh single-run engine
+    tracer = Tracer(capacity=1 << 20)
+    engine = ServingEngine(cfg, slots=slots, max_len=max_len,
+                           block_size=block_size, params=params,
+                           paged=True, horizon=4, tracer=tracer)
+    summary = engine.run(fresh(0))
+    obj = tracer.to_chrome()
+    schema_errors = validate_chrome_trace(obj)
+    span_energy = sum((ev.args or {}).get("odin_energy_mj", 0.0)
+                      for ev in tracer.events() if ev.ph == "X")
+    odin_total = summary["odin_total"]["energy_mj"]
+    energy_rel_err = abs(span_energy - odin_total) / max(odin_total, 1e-12)
+    if trace_out:
+        tracer.export(trace_out)
+    cell = {
+        "slots": slots,
+        "tokens_per_s": {"trace_off": tps_off, "trace_on": tps_on},
+        "overhead_ratio": tps_on / max(tps_off, 1e-9),
+        "trace_events": len(tracer),
+        "dropped_events": tracer.dropped_events,
+        "schema_valid": not schema_errors,
+        "schema_errors": schema_errors[:5],
+        "span_energy_mj": span_energy,
+        "odin_total_energy_mj": odin_total,
+        "energy_rel_err": energy_rel_err,
+        "trace_out": trace_out,
+    }
+    if verbose:
+        print(f"tracing: {tps_off:8.1f} tok/s off → {tps_on:8.1f} on "
+              f"({cell['overhead_ratio']:.3f}×)  {cell['trace_events']} events"
+              f"  schema_valid={cell['schema_valid']}  "
+              f"span-energy err {energy_rel_err*100:.3f}%"
+              + (f"  wrote {trace_out}" if trace_out else ""))
+    return cell
+
+
 def run(verbose: bool = True, n_requests: int = 16, slots_sweep=(2, 4),
         rates=(float("inf"),), arch: str = "phi4-mini-3.8b",
         json_path=None, bench_json=None, check: bool = False,
         check_paged: bool = False, check_horizon: bool = False,
         check_prefix: bool = False, check_spec: bool = False,
+        check_trace: bool = False, trace_out=None,
         horizons=(1, 4, 16), spec_ks=(0, 2, 4)):
     block_size = 16
     cfg = registry.get_smoke(arch)
@@ -448,6 +530,9 @@ def run(verbose: bool = True, n_requests: int = 16, slots_sweep=(2, 4),
                                           ks=tuple(spec_ks),
                                           n_requests=max(n_requests * 3 // 8, 6),
                                           block_size=block_size, verbose=verbose)
+    out["tracing"] = tracing_cell(cfg, base_requests, max(slots_sweep),
+                                  params=params, block_size=block_size,
+                                  trace_out=trace_out, verbose=verbose)
     if verbose:
         print(f"best decode-throughput speedup over static batching: "
               f"{out['best_speedup']:.2f}×; paged vs dense engine: "
@@ -515,6 +600,21 @@ def run(verbose: bool = True, n_requests: int = 16, slots_sweep=(2, 4),
             raise SystemExit(
                 f"speculation speedup {got:.2f}× (best K) on the mixed "
                 f"scenario < required 1.2×")
+    if check_trace:
+        tr = out["tracing"]
+        if not tr["schema_valid"]:
+            raise SystemExit("trace artifact failed Perfetto schema "
+                             "validation: " + "; ".join(tr["schema_errors"]))
+        if tr["energy_rel_err"] > 0.01:
+            raise SystemExit(
+                f"per-dispatch ODIN energy args sum {tr['span_energy_mj']:.4f} "
+                f"mJ differs from odin_total "
+                f"{tr['odin_total_energy_mj']:.4f} mJ by "
+                f"{tr['energy_rel_err']*100:.2f}% (> 1%)")
+        if tr["overhead_ratio"] < 0.98:
+            raise SystemExit(
+                f"trace-on decode throughput {tr['overhead_ratio']:.3f}× "
+                f"trace-off < required 0.98× (tracing must stay <2% overhead)")
     return out
 
 
@@ -548,6 +648,13 @@ def main():
                          "token-identical to K=0 AND shows ≥1.8× decode "
                          "tok/s at the top K on the repetitive scenario "
                          "(≥1.2× on mixed)")
+    ap.add_argument("--check-trace", action="store_true",
+                    help="exit non-zero unless the trace artifact passes the "
+                         "Perfetto schema check, per-dispatch ODIN energy "
+                         "args sum to odin_total within 1%%, and trace-on "
+                         "decode tok/s ≥ 0.98× trace-off")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the tracing cell's Chrome trace JSON artifact")
     ap.add_argument("--horizons", type=int, nargs="+", default=[1, 4, 16],
                     help="horizon sweep values (first must be 1, the baseline)")
     ap.add_argument("--spec-ks", type=int, nargs="+", default=[0, 2, 4],
@@ -559,7 +666,8 @@ def main():
         arch=args.arch, json_path=args.json, bench_json=args.bench_json,
         check=args.check, check_paged=args.check_paged,
         check_horizon=args.check_horizon, check_prefix=args.check_prefix,
-        check_spec=args.check_spec,
+        check_spec=args.check_spec, check_trace=args.check_trace,
+        trace_out=args.trace_out,
         horizons=tuple(args.horizons), spec_ks=tuple(args.spec_ks))
 
 

@@ -18,6 +18,9 @@ Usage:
   # mixed-length open-loop workload with a constrained KV pool:
   PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b --smoke \
       --scenario mixed --requests 16 --slots 4 --kv-blocks 20
+  # record a dispatch/lifecycle timeline, open trace.json in ui.perfetto.dev:
+  PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b --smoke \
+      --scenario mixed --trace-out trace.json
 """
 from __future__ import annotations
 
@@ -35,7 +38,7 @@ from repro.launch import specs as specs_mod
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import lm, registry
 from repro.nn import module as nnmod
-from repro.serving import SCENARIOS, Request, ServingEngine, make_requests
+from repro.serving import SCENARIOS, Request, ServingEngine, Tracer, make_requests
 
 __all__ = ["serve", "serve_static", "main"]
 
@@ -169,8 +172,23 @@ def main():
                     help="KV block granularity (default: 16 for scenarios, "
                          "auto-picked to divide prompt+gen otherwise)")
     ap.add_argument("--chunk", type=int, default=None, help="prefill chunk length")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record a structured event trace and write it as "
+                         "Chrome trace-event JSON (open in ui.perfetto.dev)")
+    ap.add_argument("--trace-capacity", type=int, default=65536,
+                    help="trace ring-buffer capacity (oldest events drop "
+                         "beyond it; drops are counted in the file)")
+    ap.add_argument("--metrics-window", type=float, default=1.0,
+                    help="windowed-metrics snapshot period in seconds")
+    ap.add_argument("--xla-annotations", action="store_true",
+                    help="wrap each compiled dispatch in a jax.profiler "
+                         "TraceAnnotation (aligns XLA profiles with spans)")
     args = ap.parse_args()
     cfg = registry.get_smoke(args.arch) if args.smoke else registry.get_config(args.arch)
+
+    tracer = Tracer(capacity=args.trace_capacity) if args.trace_out else None
+    obs_kw = {"tracer": tracer, "metrics_window": args.metrics_window,
+              "xla_annotations": args.xla_annotations}
 
     if args.scenario:
         spec = dataclasses.replace(SCENARIOS[args.scenario], n_requests=args.requests)
@@ -187,11 +205,18 @@ def main():
             horizon=args.horizon, spec_ngram=args.spec_ngram,
             eos_id=args.eos_id,
             temperature=args.temperature,
-            top_k=args.top_k, sample_seed=args.sample_seed)
+            top_k=args.top_k, sample_seed=args.sample_seed, **obs_kw)
         summary = engine.run(make_requests(cfg, spec, seed=args.seed))
-        print(json.dumps({k: v for k, v in summary.items() if k != "requests"}, indent=2))
+        if tracer is not None:
+            tracer.export(args.trace_out)
+            print(f"[serve] wrote {len(tracer)} trace events to "
+                  f"{args.trace_out} ({tracer.dropped_events} dropped)")
+        print(json.dumps({k: v for k, v in summary.items() if k != "requests"},
+                         indent=2, allow_nan=False))
         return
 
+    if args.static and tracer is not None:
+        ap.error("--trace-out requires the engine path (drop --static)")
     fn = serve_static if args.static else serve
     kw = {} if args.static else {"slots": args.slots,
                                  "block_size": args.block_size,
@@ -206,9 +231,14 @@ def main():
                                  "eos_id": args.eos_id,
                                  "temperature": args.temperature,
                                  "top_k": args.top_k,
-                                 "sample_seed": args.sample_seed}
+                                 "sample_seed": args.sample_seed,
+                                 **obs_kw}
     generated, tps = fn(cfg, batch=args.batch, prompt_len=args.prompt_len,
                         gen=args.gen, seed=args.seed, **kw)
+    if tracer is not None:
+        tracer.export(args.trace_out)
+        print(f"[serve] wrote {len(tracer)} trace events to {args.trace_out} "
+              f"({tracer.dropped_events} dropped)")
     print("[serve] first request tokens:", np.asarray(generated)[0].ravel()[:16])
 
 

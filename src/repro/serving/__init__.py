@@ -6,6 +6,8 @@ The serving substrate over the repo's compiled prefill/decode steps:
 * :mod:`repro.serving.scheduler` — request lifecycle / admission / preemption
 * :mod:`repro.serving.engine`    — the step-loop driver (ServingEngine)
 * :mod:`repro.serving.metrics`   — TTFT/TPOT/occupancy + ODIN PIMC attribution
+* :mod:`repro.serving.trace`     — ring-buffered tracer, Perfetto export,
+  windowed metrics registry
 * :mod:`repro.serving.workload`  — synthetic open-loop arrival generators
 
 Quick start::
@@ -25,6 +27,9 @@ from repro.serving.engine import ServingEngine
 from repro.serving.metrics import EngineStats, OdinCostModel, summarize
 from repro.serving.scheduler import (PrefixCache, PrefixGrant, Request,
                                      RequestState, Scheduler, StepPlan)
+from repro.serving.trace import (NULL_TRACER, LogHistogram, MetricsRegistry,
+                                 NullTracer, Tracer, chrome_trace,
+                                 validate_chrome_trace)
 from repro.serving.workload import SCENARIOS, WorkloadSpec, make_requests, poisson_arrivals
 
 __all__ = [
@@ -33,5 +38,7 @@ __all__ = [
     "EngineStats", "OdinCostModel", "summarize",
     "PrefixCache", "PrefixGrant",
     "Request", "RequestState", "Scheduler", "StepPlan",
+    "Tracer", "NullTracer", "NULL_TRACER", "LogHistogram", "MetricsRegistry",
+    "chrome_trace", "validate_chrome_trace",
     "SCENARIOS", "WorkloadSpec", "make_requests", "poisson_arrivals",
 ]

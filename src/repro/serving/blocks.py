@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.nn.attention import POOL_LEAVES
+from repro.serving.trace import NULL_TRACER
 
 __all__ = ["BlockPool", "PagedKVStore", "SwapTicket"]
 
@@ -88,6 +89,9 @@ class BlockPool:
         self._free: List[int] = list(range(n_blocks - 1, -1, -1))
         self._refs: Dict[int, int] = {}
         self.reclaimer = None
+        # structured-event recorder (repro.serving.trace); the engine swaps
+        # in its Tracer — the no-op default keeps every emit site free
+        self.tracer = NULL_TRACER
 
     @property
     def free_blocks(self) -> int:
@@ -126,6 +130,9 @@ class BlockPool:
         ids = [self._free.pop() for _ in range(n)]
         for b in ids:
             self._refs[b] = 1
+        if n and self.tracer.enabled:
+            self.tracer.instant("alloc", "pool", "pool",
+                                args={"n": n, "free_after": len(self._free)})
         return ids
 
     def share(self, ids: List[int]) -> None:
@@ -138,6 +145,7 @@ class BlockPool:
 
     def free(self, ids: List[int]) -> None:
         """Drop one claim per id; blocks are released at refcount 0."""
+        released = 0
         for b in ids:
             if b not in self._refs:
                 raise ValueError(f"double free of block {b}")
@@ -145,6 +153,11 @@ class BlockPool:
             if self._refs[b] == 0:
                 del self._refs[b]
                 self._free.append(b)
+                released += 1
+        if ids and self.tracer.enabled:
+            self.tracer.instant("release", "pool", "pool",
+                                args={"n": len(ids), "released": released,
+                                      "free_after": len(self._free)})
 
     def fork(self, bid: int) -> Optional[int]:
         """Copy-on-write fork of one claim on ``bid``.
@@ -163,6 +176,9 @@ class BlockPool:
         if got is None:
             return None
         self.free([bid])
+        if self.tracer.enabled:
+            self.tracer.instant("fork", "pool", "pool",
+                                args={"src": bid, "dst": got[0]})
         return got[0]
 
     def extend_to(self, table: List[int], n_tokens: int) -> bool:

@@ -49,6 +49,7 @@ from __future__ import annotations
 
 import time
 from collections import OrderedDict
+from contextlib import nullcontext
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -69,6 +70,7 @@ from repro.serving.blocks import (SEQ_LEAVES, BlockPool, PagedKVStore,
                                   _leaf_name)
 from repro.serving.metrics import EngineStats, OdinCostModel, summarize
 from repro.serving.scheduler import PrefixCache, PrefixGrant, Request, Scheduler
+from repro.serving.trace import NULL_TRACER, MetricsRegistry
 
 __all__ = ["ServingEngine"]
 
@@ -134,6 +136,18 @@ class ServingEngine:
         token.  Inside a horizon, per-token timestamps are interpolated
         across the dispatch's wall time (TTFT from prefill stays exact).
     clock : monotonic seconds callable (injectable for deterministic tests).
+    tracer : a :class:`repro.serving.trace.Tracer` to record dispatch spans,
+        request lifecycle flows and scheduler/pool decision events into
+        (exportable as Perfetto-loadable Chrome trace JSON).  Default None ⇒
+        the no-op recorder: every emit site is guarded by ``tracer.enabled``,
+        so the trace-off hot path allocates nothing per dispatch.
+    metrics_window : window length (engine-clock seconds) for the windowed
+        metrics registry — TTFT/TPOT/dispatch-wall-time histograms and
+        counter deltas are snapshotted per window so long runs report
+        p50/p99 over time (``summary()["metrics"]["windows"]``).
+    xla_annotations : wrap each compiled dispatch in a
+        ``jax.profiler.TraceAnnotation`` named ``serving/<kind>`` so XLA
+        profiler timelines line up with the engine's own dispatch spans.
     """
 
     def __init__(self, cfg: ModelConfig, *, slots: int, max_len: int,
@@ -148,7 +162,9 @@ class ServingEngine:
                  params=None, seed: int = 0, odin_mode: Optional[str] = None,
                  on_token: Optional[Callable] = None,
                  clock: Optional[Callable[[], float]] = None,
-                 attribution_cfg: Optional[ModelConfig] = None):
+                 attribution_cfg: Optional[ModelConfig] = None,
+                 tracer=None, metrics_window: float = 1.0,
+                 xla_annotations: bool = False):
         if odin_mode is not None:
             cfg = cfg.with_overrides(odin_mode=odin_mode)
         if max_len % block_size:
@@ -262,6 +278,20 @@ class ServingEngine:
         self.stats = EngineStats()
         self.stats.kv_cache_bytes = self._kv_bytes()
         self.cost_model = OdinCostModel(attribution_cfg or cfg)
+        # observability: structured tracer (no-op by default — every emit
+        # site is guarded on tracer.enabled so trace-off costs nothing) and
+        # the always-on windowed metrics registry
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.tracer.set_clock(self._now)
+        self.sched.tracer = self.tracer
+        self.pool.tracer = self.tracer
+        if self.store is not None:
+            self.store.pool.tracer = self.tracer
+        self.metrics = MetricsRegistry(window_s=metrics_window)
+        # open the first window at t≈0 so no counter movement predates the
+        # baseline (maybe_roll's first call only initializes)
+        self.metrics.maybe_roll(self._now(), self._counter_snapshot())
+        self.xla_annotations = bool(xla_annotations)
 
         K = cfg.n_codebooks
         tok_shape = (slots, K, 1) if K > 1 else (slots, 1)
@@ -290,6 +320,34 @@ class ServingEngine:
         return int(sum(
             l.nbytes for p, l in jax.tree_util.tree_flatten_with_path(self.caches)[0]
             if _leaf_name(p) in names))
+
+    @staticmethod
+    def _slot_track(slot: int) -> str:
+        return f"slot {slot}"
+
+    def _annotate(self, kind: str):
+        """Optional XLA-profiler annotation around a compiled dispatch, so
+        device timelines line up with the engine's own spans."""
+        if self.xla_annotations:
+            return jax.profiler.TraceAnnotation(f"serving/{kind}")
+        return nullcontext()
+
+    def _counter_snapshot(self) -> Dict[str, float]:
+        """Cumulative counters the metrics registry turns into window deltas."""
+        st = self.stats
+        return {"generated_tokens": st.generated_tokens,
+                "decode_tokens": st.decode_tokens,
+                "prefill_tokens": st.prefill_tokens,
+                "dispatches": st.dispatches,
+                "decode_dispatches": st.decode_dispatches,
+                "host_syncs": st.host_syncs,
+                "preempt_swap": st.preempt_swap,
+                "preempt_recompute": st.preempt_recompute,
+                "spec_drafted": st.spec_drafted,
+                "spec_accepted": st.spec_accepted,
+                "spec_overhead_rows": st.spec_overhead_rows,
+                "decode_time_s": st.decode_time,
+                "prefill_time_s": st.prefill_time}
 
     def _set_last_tok(self, slot: int, tok) -> None:
         tok = jnp.asarray(tok, jnp.int32).reshape(self._last_tok.shape[1:])
@@ -346,6 +404,7 @@ class ServingEngine:
             req.eos = True                 # first codebook, same as on-device
         if req.t_first_token is None:
             req.t_first_token = now
+            self.metrics.observe("ttft_s", max(0.0, now - req.arrival))
         if self.on_token is not None:
             self.on_token(req, tok, now)
 
@@ -361,15 +420,38 @@ class ServingEngine:
                 f"prompt+max_new-1 = {req.prompt_len + req.max_new - 1} "
                 f"to fit one prefill chunk ({self.chunk})")
         self.sched.submit(req)
+        if self.tracer.enabled:
+            t = self._now()
+            # the flow "s" anchor: every later lifecycle event for this rid
+            # hangs off this arrow chain (admit → prefill → … → complete)
+            self.tracer.flow_event("s", "request", "scheduler", req.rid, ts=t)
+            self.tracer.instant("queued", "lifecycle", "scheduler", ts=t,
+                                args={"rid": req.rid,
+                                      "prompt_tokens": req.prompt_len,
+                                      "max_new": req.max_new},
+                                flow=req.rid)
 
     def _complete(self, req: Request, now: float) -> None:
+        slot = req.slot
         self.sched.complete(req, now)
         self._done.append(req)
+        if req.t_first_token is not None and req.n_generated > 1:
+            self.metrics.observe(
+                "tpot_s", max(0.0, (now - req.t_first_token) / (req.n_generated - 1)))
+        if self.tracer.enabled:
+            track = self._slot_track(slot) if slot >= 0 else "scheduler"
+            self.tracer.instant("complete", "lifecycle", track, ts=now,
+                                args={"rid": req.rid,
+                                      "generated_tokens": req.n_generated,
+                                      "eos": bool(req.eos)},
+                                flow=req.rid)
+            self.tracer.flow_event("f", "request", track, req.rid, ts=now)
 
     def _cow_fork(self, src: int, dst: int) -> None:
         """Execute a COW fork: copy pool block ``src`` into ``dst`` on every
         pool leaf, before the forking slot writes its tail rows into ``dst``."""
         flat, treedef = jax.tree_util.tree_flatten_with_path(self.caches)
+        t0 = self._now() if self.tracer.enabled else 0.0
         out = []
         for path, leaf in flat:
             if _leaf_name(path) in POOL_LEAVES:
@@ -377,6 +459,10 @@ class ServingEngine:
             out.append(leaf)
         self.caches = jax.tree_util.tree_unflatten(treedef, out)
         self.stats.cow_forks += 1
+        if self.tracer.enabled:
+            self.tracer.span("cow-copy", "dispatch", "pool", t0,
+                             self._now() - t0,
+                             args={"kind": "cow-copy", "src": src, "dst": dst})
 
     def _prefill_request(self, req: Request, now: float,
                          grant: Optional[PrefixGrant] = None) -> None:
@@ -411,32 +497,61 @@ class ServingEngine:
             start0 = grant.start
             self.stats.prefix_hit_tokens += start0
             self.stats.shared_prefix_blocks += grant.shared_blocks
+        trace = self.tracer.enabled
         t0 = time.perf_counter()
+        t_trace0 = self._now() if trace else 0.0
+        chunk_sizes: List[int] = []
         # prefill writes K/V blocks straight into the pool via this row
         # (admission bumped table_version, so the mirror refreshes here)
         tables = self._refresh_tables()
         start = start0
         ll = None
-        while start < ntok:
-            c = min(self.chunk, ntok - start)
-            chunk_toks = jnp.asarray(toks[..., start:start + c][None])
-            kw = {}
-            if extras:
-                if extras.get("patch_embeds") is not None:
-                    kw["patch_embeds"] = jnp.asarray(extras["patch_embeds"])[None]
-                if pos3d is not None:
-                    kw["pos3d"] = jnp.asarray(pos3d)[None][:, start:start + c]
-            ll, self.caches = self._prefill(
-                self.params, self.caches, chunk_toks,
-                jnp.int32(req.slot), jnp.int32(start), jnp.bool_(start == start0),
-                tables, **kw)
-            self.stats.dispatches += 1
-            start += c
-        jax.block_until_ready(ll)
+        with self._annotate("prefill"):
+            while start < ntok:
+                c = min(self.chunk, ntok - start)
+                chunk_toks = jnp.asarray(toks[..., start:start + c][None])
+                kw = {}
+                if extras:
+                    if extras.get("patch_embeds") is not None:
+                        kw["patch_embeds"] = jnp.asarray(extras["patch_embeds"])[None]
+                    if pos3d is not None:
+                        kw["pos3d"] = jnp.asarray(pos3d)[None][:, start:start + c]
+                ll, self.caches = self._prefill(
+                    self.params, self.caches, chunk_toks,
+                    jnp.int32(req.slot), jnp.int32(start), jnp.bool_(start == start0),
+                    tables, **kw)
+                self.stats.dispatches += 1
+                chunk_sizes.append(c)
+                start += c
+            jax.block_until_ready(ll)
+        wall = time.perf_counter() - t0
         self.stats.host_syncs += 1
-        self.stats.prefill_time += time.perf_counter() - t0
+        self.stats.prefill_time += wall
         self.stats.prefill_tokens += ntok - start0
         req.n_prefill_tokens += ntok - start0
+        self.metrics.observe("dispatch_prefill_s", wall)
+        if trace:
+            # chunks are not individually synced, so the dispatch's engine-
+            # clock span is split across chunks proportionally to their rows
+            # (same interpolation philosophy as horizon token timestamps)
+            span = self._now() - t_trace0
+            track = self._slot_track(req.slot)
+            total = max(1, ntok - start0)
+            self.tracer.flow_event("t", "request", track, req.rid, ts=t_trace0)
+            off, pos = t_trace0, start0
+            for i, c in enumerate(chunk_sizes):
+                dur = span * c / total
+                self.tracer.span(
+                    "prefill-chunk", "dispatch", track, off, dur,
+                    args={"kind": "prefill-chunk", "rid": req.rid,
+                          "slot": req.slot, "start": pos, "rows": c,
+                          "prefix_hit_tokens": start0 if i == 0 else 0,
+                          "host_syncs": 1 if i == len(chunk_sizes) - 1 else 0,
+                          "interpolated": len(chunk_sizes) > 1,
+                          "odin_energy_mj": self.cost_model.energy_mj(c)},
+                    flow=req.rid)
+                off += dur
+                pos += c
         self._slot_len[req.slot] = ntok
         if fresh:
             tok = self._first_token(ll, req)                   # [] or [K]
@@ -453,16 +568,33 @@ class ServingEngine:
         now = self._now()
         plan = self.sched.plan(now)
 
+        trace = self.tracer.enabled
         for req, mode, swap_ids, old_slot, dev_ids in plan.preempt:
             if mode == "swap":
+                t0 = self._now() if trace else 0.0
                 req.ticket = self.store.swap_out(
                     self.caches, old_slot, swap_ids, req.cached_len, dev_ids,
                     skip=len(req.kept_blocks))
                 self.stats.preempt_swap += 1
                 self.stats.swap_skipped_blocks += len(req.kept_blocks)
+                if trace:
+                    track = self._slot_track(old_slot)
+                    self.tracer.span(
+                        "swap-copy", "dispatch", track, t0, self._now() - t0,
+                        args={"kind": "swap-copy", "direction": "out",
+                              "rid": req.rid,
+                              "blocks": len(swap_ids) - len(req.kept_blocks),
+                              "skipped_blocks": len(req.kept_blocks)},
+                        flow=req.rid)
+                    self.tracer.flow_event("t", "request", track, req.rid, ts=t0)
             else:
                 self.stats.preempt_recompute += 1
+                if trace:
+                    self.tracer.flow_event("t", "request",
+                                           self._slot_track(old_slot), req.rid)
         for req in plan.resume:
+            t0 = self._now() if trace else 0.0
+            n_swap = len(req.ticket.block_ids)
             self.caches = self.store.swap_in(self.caches, req.slot, req.ticket,
                                              req.block_table)
             self.store.pool.free(req.ticket.block_ids)
@@ -471,6 +603,14 @@ class ServingEngine:
             self._set_last_tok(req.slot, req.generated[-1])
             if self.spec_ngram:
                 self._seed_hist(req)
+            if trace:
+                track = self._slot_track(req.slot)
+                self.tracer.span(
+                    "swap-copy", "dispatch", track, t0, self._now() - t0,
+                    args={"kind": "swap-copy", "direction": "in",
+                          "rid": req.rid, "blocks": n_swap},
+                    flow=req.rid)
+                self.tracer.flow_event("t", "request", track, req.rid, ts=t0)
         for req in plan.admit:
             self._prefill_request(req, now, plan.grants.get(req.rid))
 
@@ -486,6 +626,11 @@ class ServingEngine:
             held.update(r.block_table)
         self.stats.table_block_steps += len(held)
         self.stats.pool_steps += 1
+        if trace:
+            self.tracer.counter("kv blocks", "pool",
+                                {"referenced": len(held),
+                                 "used": self.pool.used_blocks,
+                                 "free": self.pool.free_blocks})
 
         active_slots = sorted(self.sched.running)
         if active_slots:
@@ -510,21 +655,36 @@ class ServingEngine:
                 else:
                     self._decode_single_step(active_slots)
         self.stats.steps += 1
+        self.metrics.maybe_roll(self._now(), self._counter_snapshot())
         return self.sched.has_work
 
     def _decode_single_step(self, active_slots: List[int]) -> None:
         """One ``[slots, 1]`` decode dispatch (the horizon=1 parity baseline)."""
+        trace = self.tracer.enabled
         t0 = time.perf_counter()
+        t_before = self._now() if trace else 0.0
         active = np.zeros(self.slots, bool)
         active[active_slots] = True
         tables = self._refresh_tables()  # growth may have extended tables
         key = jax.random.fold_in(self._sample_key, self.stats.decode_steps)
-        nxt, self.caches = self._decode(
-            self.params, self.caches, self._last_tok,
-            jnp.asarray(self._slot_len), jnp.asarray(active),
-            tables, key, jnp.float32(self.temperature))
-        host = np.asarray(nxt)                       # syncs the step
-        self.stats.decode_time += time.perf_counter() - t0
+        with self._annotate("decode"):
+            nxt, self.caches = self._decode(
+                self.params, self.caches, self._last_tok,
+                jnp.asarray(self._slot_len), jnp.asarray(active),
+                tables, key, jnp.float32(self.temperature))
+            host = np.asarray(nxt)                   # syncs the step
+        wall = time.perf_counter() - t0
+        self.stats.decode_time += wall
+        self.metrics.observe("dispatch_decode_s", wall)
+        if trace:
+            rows = len(active_slots)
+            self.tracer.span(
+                "decode", "dispatch", "dispatch", t_before,
+                self._now() - t_before,
+                args={"kind": "decode", "h": 1, "spec_k": 0,
+                      "slots_active": rows, "tokens": rows, "rows": rows,
+                      "host_syncs": 1,
+                      "odin_energy_mj": self.cost_model.energy_mj(rows)})
         self.stats.decode_steps += 1
         self.stats.dispatches += 1
         self.stats.decode_dispatches += 1
@@ -565,15 +725,27 @@ class ServingEngine:
         for s in active_slots:
             rem[s] = self.sched.running[s].remaining
         tables = self._refresh_tables()
-        block, counts, last, self.caches = self._horizon_fn(h)(
-            self.params, self.caches, self._last_tok,
-            jnp.asarray(self._slot_len), jnp.asarray(active),
-            jnp.asarray(rem), tables, self._sample_key,
-            jnp.float32(self.temperature),
-            jnp.int32(self.stats.decode_steps),
-            jnp.int32(-1 if self.eos_id is None else self.eos_id))
-        block, counts = jax.device_get((block, counts))   # ONE sync for h steps
-        self.stats.decode_time += time.perf_counter() - t0
+        with self._annotate("horizon"):
+            block, counts, last, self.caches = self._horizon_fn(h)(
+                self.params, self.caches, self._last_tok,
+                jnp.asarray(self._slot_len), jnp.asarray(active),
+                jnp.asarray(rem), tables, self._sample_key,
+                jnp.float32(self.temperature),
+                jnp.int32(self.stats.decode_steps),
+                jnp.int32(-1 if self.eos_id is None else self.eos_id))
+            block, counts = jax.device_get((block, counts))  # ONE sync for h steps
+        wall = time.perf_counter() - t0
+        self.stats.decode_time += wall
+        self.metrics.observe("dispatch_decode_s", wall)
+        if self.tracer.enabled:
+            emitted = int(counts.sum())
+            self.tracer.span(
+                "horizon", "dispatch", "dispatch", t_before,
+                self._now() - t_before,
+                args={"kind": "horizon", "h": h, "spec_k": 0,
+                      "slots_active": len(active_slots), "tokens": emitted,
+                      "rows": emitted, "host_syncs": 1,
+                      "odin_energy_mj": self.cost_model.energy_mj(emitted)})
         self.stats.decode_steps += h
         self.stats.dispatches += 1
         self.stats.decode_dispatches += 1
@@ -611,15 +783,18 @@ class ServingEngine:
         for s in active_slots:
             rem[s] = self.sched.running[s].remaining
         tables = self._refresh_tables()
-        block, counts, last, hist, self.caches = self._fused_fn(h, K)(
-            self.params, self.caches, self._last_tok,
-            jnp.asarray(self._slot_len), jnp.asarray(active),
-            jnp.asarray(rem), self._hist, tables,
-            jnp.int32(-1 if self.eos_id is None else self.eos_id))
-        block, counts = jax.device_get((block, counts))   # ONE sync
+        with self._annotate("spec-horizon"):
+            block, counts, last, hist, self.caches = self._fused_fn(h, K)(
+                self.params, self.caches, self._last_tok,
+                jnp.asarray(self._slot_len), jnp.asarray(active),
+                jnp.asarray(rem), self._hist, tables,
+                jnp.int32(-1 if self.eos_id is None else self.eos_id))
+            block, counts = jax.device_get((block, counts))   # ONE sync
         self._last_tok = last
         self._hist = hist
-        self.stats.decode_time += time.perf_counter() - t0
+        wall = time.perf_counter() - t0
+        self.stats.decode_time += wall
+        self.metrics.observe("dispatch_decode_s", wall)
         self.stats.decode_steps += h
         self.stats.dispatches += 1
         self.stats.decode_dispatches += 1
@@ -629,6 +804,28 @@ class ServingEngine:
         self.stats.slot_steps += self.slots * h
         self.stats.spec_drafted += K * int(live.sum())
         self.stats.spec_accepted += int((counts - live).sum())
+        # every live inner step verified a K+1-row forward; rows beyond the
+        # emitted run are rejected drafts — real PIMC energy, billed as
+        # verify overhead (satellite 2: spec_overhead_rows) both fleet-wide
+        # and on the request that incurred them
+        emitted = int(counts.sum())
+        rows = (K + 1) * int(live.sum())
+        self.stats.spec_overhead_rows += rows - emitted
+        for s in active_slots:
+            s_over = int(((K + 1) * live[s] - counts[s]).sum())
+            if s_over:
+                self.sched.running[s].spec_overhead_rows += s_over
+        if self.tracer.enabled:
+            self.tracer.span(
+                "spec-horizon", "dispatch", "dispatch", t_before,
+                self._now() - t_before,
+                args={"kind": "spec-horizon", "h": h, "spec_k": K,
+                      "slots_active": len(active_slots), "tokens": emitted,
+                      "drafted": K * int(live.sum()),
+                      "accepted": int((counts - live).sum()),
+                      "rows": rows, "overhead_rows": rows - emitted,
+                      "host_syncs": 1,
+                      "odin_energy_mj": self.cost_model.energy_mj(rows)})
         span = self._now() - t_before
         last_t = {}
         for hh in range(h):                      # step-major: matches h=1 order
@@ -708,7 +905,9 @@ class ServingEngine:
 
     def summary(self) -> Dict:
         done = self._all_requests()
-        return summarize(done, self.stats, self.cost_model)
+        self.metrics.flush(self._now(), self._counter_snapshot())
+        return summarize(done, self.stats, self.cost_model,
+                         registry=self.metrics)
 
     def _all_requests(self) -> List[Request]:
         seen = {r.rid: r for _, _, r in self.sched.waiting}

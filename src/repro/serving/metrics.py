@@ -11,7 +11,8 @@ the same workload→command-trace framing RAPIDNN uses, applied per request.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import dataclasses
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -49,6 +50,7 @@ class EngineStats:
     pool_steps: int = 0                   # steps the occupancy sample covers
     spec_drafted: int = 0                 # n-gram draft tokens verified
     spec_accepted: int = 0                # draft tokens accepted into streams
+    spec_overhead_rows: int = 0           # verify rows computed beyond emitted
     swap_skipped_blocks: int = 0          # swap-out copies skipped (re-attach)
     jit_evictions: int = 0                # fused executables dropped (LRU)
 
@@ -116,15 +118,34 @@ class OdinCostModel:
             "commands": {k: n_tokens * v for k, v in self.commands_per_token.items()},
         }
 
+    def energy_mj(self, n_rows: int) -> float:
+        """Energy bill (mJ) for ``n_rows`` forward rows — the per-dispatch
+        quantity trace spans carry, so summing span bills reproduces the
+        run's ``odin_total`` exactly."""
+        return n_rows * self.energy_pj_per_token / 1e9
 
-def percentiles(xs: List[float], qs=(50, 90, 99)) -> Dict[str, float]:
+
+def percentiles(xs: List[float], qs=(50, 90, 99)) -> Dict[str, Optional[float]]:
+    """Exact percentiles of ``xs``; an empty sample yields ``None`` values —
+    NOT ``float("nan")``, which ``json.dumps`` would emit as a bare ``NaN``
+    token no strict JSON parser (or Perfetto) accepts."""
     if not xs:
-        return {f"p{q}": float("nan") for q in qs}
+        return {f"p{q}": None for q in qs}
     return {f"p{q}": float(np.percentile(np.asarray(xs, np.float64), q)) for q in qs}
 
 
-def summarize(requests, stats: EngineStats, cost: Optional[OdinCostModel] = None) -> Dict:
-    """JSON-able roll-up: per-request records + fleet aggregates."""
+def summarize(requests, stats: EngineStats, cost: Optional[OdinCostModel] = None,
+              registry=None) -> Dict:
+    """JSON-able roll-up: per-request records + fleet aggregates.
+
+    ``registry`` (a :class:`repro.serving.trace.MetricsRegistry`) adds the
+    windowed view — per-window counter deltas and streaming-histogram
+    percentiles — under ``"metrics"``; the flat end-of-run aggregates remain
+    exact and schema-stable (every field is a superset of the previous PRs').
+    ``"engine_stats"`` mirrors every raw :class:`EngineStats` counter so a
+    field added to the dataclass can never silently go unreported (CI pins
+    the key set to the dataclass fields).
+    """
     per_request = []
     ttfts, tpots = [], []
     for r in sorted(requests, key=lambda r: r.rid):
@@ -147,11 +168,21 @@ def summarize(requests, stats: EngineStats, cost: Optional[OdinCostModel] = None
             "preemptions": {"swap": r.n_preempt_swap, "recompute": r.n_preempt_recompute},
         }
         if cost is not None:
-            # forward passes actually run: prefill tokens (the request's
-            # first generated token falls out of the last prefill pass) plus
-            # one decode pass per subsequent token — the final token is
-            # emitted without ever being passed back through the model.
-            rec["odin"] = cost.attribute(r.n_prefill_tokens + max(0, r.n_generated - 1))
+            # forward rows actually computed: prefill tokens (the request's
+            # first generated token falls out of the last prefill pass), one
+            # decode row per subsequent emitted token (the final token is
+            # emitted without ever being passed back through the model), PLUS
+            # the speculative verify rows whose drafts were rejected — each
+            # spec inner step runs a K+1-row forward regardless of how many
+            # tokens it ends up emitting, so rejected rows are real energy,
+            # billed here as ``spec_overhead`` instead of silently vanishing.
+            useful = r.n_prefill_tokens + max(0, r.n_generated - 1)
+            overhead = getattr(r, "spec_overhead_rows", 0)
+            rec["odin"] = cost.attribute(useful + overhead)
+            rec["odin"]["spec_overhead"] = {
+                "rows": overhead,
+                "energy_mj": cost.energy_mj(overhead),
+            }
         per_request.append(rec)
     out = {
         "requests": per_request,
@@ -183,9 +214,27 @@ def summarize(requests, stats: EngineStats, cost: Optional[OdinCostModel] = None
             "drafted": stats.spec_drafted,
             "accepted": stats.spec_accepted,
             "accept_rate": stats.accept_rate,
+            "overhead_rows": stats.spec_overhead_rows,
         },
         "jit_evictions": stats.jit_evictions,
+        # raw counter mirror: keys pinned to the EngineStats dataclass fields
+        # (tests/test_trace.py), so new counters surface here automatically
+        "engine_stats": dataclasses.asdict(stats),
     }
+    if registry is not None:
+        out["metrics"] = registry.summary()
     if cost is not None:
-        out["odin_total"] = cost.attribute(stats.prefill_tokens + stats.decode_tokens)
+        # phase-attributed energy: rejected speculative rows are verify
+        # overhead, not free — odin_total is the sum of the three phases and
+        # (by construction) of every dispatch span's energy bill in a trace.
+        phases = {
+            "prefill": stats.prefill_tokens,
+            "decode": stats.decode_tokens,
+            "spec_verify_overhead": stats.spec_overhead_rows,
+        }
+        out["odin_phases"] = {
+            name: {"rows": rows, "energy_mj": cost.energy_mj(rows)}
+            for name, rows in phases.items()
+        }
+        out["odin_total"] = cost.attribute(sum(phases.values()))
     return out

@@ -59,6 +59,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.serving.blocks import BlockPool
+from repro.serving.trace import NULL_TRACER
 
 __all__ = ["PrefixCache", "PrefixGrant", "Request", "RequestState",
            "Scheduler", "StepPlan"]
@@ -101,6 +102,7 @@ class Request:
     eos: bool = False                     # emitted the engine's eos_id
     ticket: object = None                 # SwapTicket while SWAPPED
     n_prefill_tokens: int = 0             # includes recompute re-prefills
+    spec_overhead_rows: int = 0           # verify rows beyond emitted tokens
     n_preempt_swap: int = 0
     n_preempt_recompute: int = 0
     t_admit: Optional[float] = None
@@ -268,6 +270,11 @@ class PrefixCache:
         return freed
 
     def _evict(self, node: _PrefixNode) -> None:
+        tracer = self.pool.tracer
+        if tracer.enabled:
+            tracer.instant("prefix-evict", "pool", "pool",
+                           args={"block": node.block_id,
+                                 "tokens": int(node.tokens.shape[-1])})
         del self._nodes[node.key]
         del self._by_block[node.block_id]
         kids = self._children.get(node.parent)
@@ -387,6 +394,9 @@ class Scheduler:
         self.max_len = max_len
         self.swap_pool = swap_pool
         self.prefix_cache = prefix_cache
+        # structured-event recorder (repro.serving.trace); the engine swaps
+        # in its Tracer — the no-op default keeps every emit site free
+        self.tracer = NULL_TRACER
         # rows one decode dispatch may write per slot before rollback:
         # 1 + the engine's speculative draft length (K)
         self.write_span = write_span
@@ -488,6 +498,13 @@ class Scheduler:
             req.n_preempt_recompute += 1
             heapq.heappush(self.waiting, (req.arrival, req.rid, req))
             plan.preempt.append((req, "recompute", None, old_slot, dev_ids))
+        if self.tracer.enabled:
+            mode = "swap" if swap_ids is not None else "recompute"
+            self.tracer.instant(
+                f"preempt-{mode}", "scheduler", "scheduler",
+                args={"rid": req.rid, "slot": old_slot, "mode": mode,
+                      "blocks": len(dev_ids), "kept_blocks": kept},
+                flow=req.rid)
 
     def _downgrade_to_recompute(self, req: Request) -> None:
         """Convert a swapped request that can never resume (pool fragmented
@@ -504,6 +521,9 @@ class Scheduler:
         req.state = RequestState.QUEUED
         req.n_preempt_recompute += 1
         heapq.heappush(self.waiting, (req.arrival, req.rid, req))
+        if self.tracer.enabled:
+            self.tracer.instant("swap-downgrade", "scheduler", "scheduler",
+                                args={"rid": req.rid}, flow=req.rid)
 
     def _place(self, req: Request, blocks: List[int], now: float) -> None:
         req.block_table = blocks
@@ -629,10 +649,18 @@ class Scheduler:
                 resume_starved = True       # kept claims stay held: content
                 break                       # must survive until the resume
             self.swapped.popleft()
+            kept = len(req.kept_blocks)
             table, req.kept_blocks = req.kept_blocks + got, []
             req.swap_block_ids = []         # engine/driver frees the ticket
             self._place(req, table, now)
             plan.resume.append(req)
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "resume", "scheduler", "scheduler", ts=now,
+                    args={"rid": req.rid, "slot": req.slot,
+                          "reattached_blocks": kept,
+                          "restored_blocks": len(got)},
+                    flow=req.rid)
 
         # 3. admit arrived requests into the remaining free slots.  Not while
         # a swapped request is starved for blocks: a new admission would eat
@@ -646,6 +674,13 @@ class Scheduler:
                 break
             table, grant = self._admission_blocks(req)
             if table is None:
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        "admit-deny", "scheduler", "scheduler", ts=now,
+                        args={"rid": req.rid,
+                              "need_blocks": self.pool.blocks_for(req.cached_len + 1),
+                              "available_blocks": self.pool.available_blocks},
+                        flow=req.rid)
                 break
             heapq.heappop(self.waiting)
             self._place(req, table, now)
@@ -655,6 +690,17 @@ class Scheduler:
                 self.prefix_cache.register(req)
             self._check_write_block(req)
             plan.admit.append(req)
+            if self.tracer.enabled:
+                shared = grant.shared_blocks if grant is not None else 0
+                self.tracer.instant(
+                    "admit", "scheduler", "scheduler", ts=now,
+                    args={"rid": req.rid, "slot": req.slot,
+                          "blocks": len(table),
+                          "marginal_blocks": len(table) - shared
+                          - (1 if grant is not None and grant.fork else 0),
+                          "shared_blocks": shared,
+                          "prefix_hit_tokens": grant.start if grant else 0},
+                    flow=req.rid)
 
         return plan
 
@@ -721,8 +767,8 @@ class Scheduler:
         if spec_k and (extra_blocks(h) > self.pool.available_blocks or any(
                 self.pool.blocks_for(rows_for(r, h)) > self.pool.n_blocks
                 for r in running)):
-            return 0                        # this step cannot verify a draft
-        if h > 1 or spec_k:
+            h = 0                           # this step cannot verify a draft
+        if h and (h > 1 or spec_k):
             grew = False
             for r in running:
                 before = len(r.block_table)
@@ -731,4 +777,13 @@ class Scheduler:
                 grew |= len(r.block_table) != before
             if grew:
                 self.table_version += 1
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "grant_horizon", "scheduler", "scheduler", ts=now,
+                args={"max_h": max_h, "granted": h, "spec_k": spec_k,
+                      "running": len(running), "swapped": len(self.swapped),
+                      "queued": len(self.waiting),
+                      "free_slots": len(self.free_slots),
+                      "available_blocks": self.pool.available_blocks,
+                      "est_step_time_s": est_step_time})
         return h
