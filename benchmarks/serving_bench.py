@@ -46,6 +46,15 @@ artifact's integrity: Perfetto-loadable Chrome trace JSON whose per-dispatch
 ``--trace-out`` writes the artifact; ``--check-trace`` gates on schema
 validity, energy-sum agreement, and trace-on ≥ 0.98× trace-off decode tok/s.
 
+The **robustness cell** measures the failure-semantics machinery two ways:
+guards-off vs guards-on decode throughput (deadline watch + NaN logit guard
++ degradation observer on the mixed stream, bit-identical greedy streams
+required) and a seeded chaos sweep — the flaky scenario against a tight
+pool under generated ``FaultPlan``s with degradation live, requiring zero
+crashes and exact terminal-state conservation.  ``--check-robust`` gates on
+≥ 0.98× guards-on throughput, stream identity, a clean sweep, and the
+degradation ladder actually engaging.
+
 Results merge into ``BENCH_serving.json`` (section "serving") next to the
 kernel microbench so the perf trajectory is machine-readable across PRs.
 
@@ -434,13 +443,131 @@ def tracing_cell(cfg, base_requests, slots: int, params=None,
     return cell
 
 
+def robustness_cell(cfg, base_requests, slots: int, params=None,
+                    block_size: int = 16, repeats: int = 6,
+                    chaos_seeds=(0, 1, 2, 3, 4), verbose: bool = True):
+    """Robustness cell: lifecycle-guard overhead + chaos containment.
+
+    Overhead: the mixed stream, guards off (no deadlines, no degradation —
+    the prior PRs' hot path) vs guards on (every request watched by a
+    never-firing deadline + queue timeout, the NaN logit guard armed, the
+    degradation controller observing every step).  The guard-on controller
+    uses unreachable thresholds so the ladder never actually sheds work —
+    the cell measures what the *machinery* costs, not what degradation
+    saves — and greedy streams must stay bit-identical.  Unlike the sweep
+    cells (best-of-R per side), the ratio here is *aggregate* decode tok/s
+    over R interleaved off/on repetitions with the measurement order
+    alternating each rep: a ≤2% gate is finer than independent best-of
+    runs can resolve on a busy host — aggregation cancels per-dispatch
+    jitter and the order flip cancels monotone machine drift (whichever
+    side runs second would otherwise eat any slowdown accrued across the
+    pair).  Gated at ≥ 0.98× by ``--check-robust``.
+
+    Chaos: the flaky scenario (bursty impatient clients) against a tight
+    pool with a generated ``FaultPlan`` per seed, degradation live: zero
+    crashes, every request in exactly one terminal state, and the ladder
+    engaging somewhere across the sweep.  A falsifying plan is embedded in
+    the cell (``failures``) so the committed bench JSON doubles as the
+    replay artifact.
+    """
+    import dataclasses as _dc
+
+    from repro.serving import SCENARIOS, DegradeConfig, FaultPlan
+
+    spec_max = max(r.prompt_len + r.max_new for r in base_requests)
+    max_len = -(-spec_max // block_size) * block_size
+
+    def fresh(rid0, deadline=None):
+        return [Request(rid=rid0 + r.rid, prompt=r.prompt, max_new=r.max_new,
+                        arrival=0.0, deadline=deadline,
+                        queue_timeout=deadline) for r in base_requests]
+
+    never = DegradeConfig(pool_hi=1.1, queue_hi=1 << 30, churn_hi=1 << 30)
+
+    def make_engine(guarded: bool):
+        kw = (dict(degrade=never, deadline_s=1e9, queue_timeout_s=1e9,
+                   nan_guard=True) if guarded else {})
+        engine = ServingEngine(cfg, slots=slots, max_len=max_len,
+                               block_size=block_size, params=params,
+                               paged=True, horizon=4, **kw)
+        engine.run(fresh(0, 1e9 if guarded else None))  # warmup: compile grants
+        return engine
+
+    engines = {False: make_engine(False), True: make_engine(True)}
+    totals = {False: [0.0, 0.0], True: [0.0, 0.0]}   # [tokens, seconds]
+    streams = {False: None, True: None}
+    for rep in range(max(1, repeats)):
+        order = (False, True) if rep % 2 == 0 else (True, False)
+        for guarded in order:                      # interleaved: shared noise
+            engine, st = engines[guarded], engines[guarded].stats
+            toks0, time0 = st.decode_tokens, st.decode_time
+            reqs = fresh(10_000 * (rep + 1) + (5_000 if guarded else 0),
+                         1e9 if guarded else None)
+            engine.run(reqs)
+            totals[guarded][0] += st.decode_tokens - toks0
+            totals[guarded][1] += st.decode_time - time0
+            streams[guarded] = tuple(
+                tuple(tuple(np.asarray(t).ravel().tolist()) for t in r.generated)
+                for r in sorted(reqs, key=lambda r: r.rid))
+    tps_off = totals[False][0] / max(totals[False][1], 1e-9)
+    tps_on = totals[True][0] / max(totals[True][1], 1e-9)
+    streams_off, streams_on = streams[False], streams[True]
+
+    flaky = _dc.replace(SCENARIOS["flaky"], n_requests=8,
+                        prompt_buckets=(8, 16), gen_buckets=(8, 24))
+    chaos_max = (max(flaky.prompt_buckets) + max(flaky.gen_buckets))
+    chaos_max = -(-chaos_max // block_size) * block_size
+    chaos_blocks = max(slots * (chaos_max // block_size) * 2 // 3,
+                       chaos_max // block_size + 1)
+    runs, failures, transitions = [], [], 0
+    for seed in chaos_seeds:
+        plan = FaultPlan.generate(seed, n_steps=64, rate=0.3)
+        engine = ServingEngine(cfg, slots=slots, max_len=chaos_max,
+                               block_size=block_size, params=params,
+                               paged=True, horizon=4, n_blocks=chaos_blocks,
+                               swap_blocks=2 * chaos_blocks, fault_plan=plan,
+                               degrade=True)
+        reqs = make_requests(cfg, flaky, seed=seed)
+        try:
+            s = engine.run(reqs)
+        except Exception as e:                     # noqa: BLE001 — the gate
+            failures.append({"seed": seed, "error": repr(e),
+                             "plan": json.loads(plan.to_json())})
+            continue
+        term = s["terminal"]
+        if sum(term.values()) != len(reqs):
+            failures.append({"seed": seed,
+                             "error": f"terminal leak: {term}",
+                             "plan": json.loads(plan.to_json())})
+            continue
+        transitions += s["degradation"]["transitions"]
+        runs.append({"seed": seed, "terminal": term,
+                     "faults": s["faults"],
+                     "degrade_transitions": s["degradation"]["transitions"]})
+    cell = {
+        "slots": slots,
+        "tokens_per_s": {"guards_off": tps_off, "guards_on": tps_on},
+        "overhead_ratio": tps_on / max(tps_off, 1e-9),
+        "tokens_match": bool(streams_off == streams_on),
+        "chaos_runs": runs,
+        "chaos_failures": failures,
+        "chaos_degrade_transitions": transitions,
+    }
+    if verbose:
+        print(f"robustness: {tps_off:8.1f} tok/s guards-off → {tps_on:8.1f} on "
+              f"({cell['overhead_ratio']:.3f}×)  tokens_match="
+              f"{cell['tokens_match']}  chaos {len(runs)}/{len(chaos_seeds)} "
+              f"clean, {transitions} degrade transitions")
+    return cell
+
+
 def run(verbose: bool = True, n_requests: int = 16, slots_sweep=(2, 4),
         rates=(float("inf"),), arch: str = "phi4-mini-3.8b",
         json_path=None, bench_json=None, check: bool = False,
         check_paged: bool = False, check_horizon: bool = False,
         check_prefix: bool = False, check_spec: bool = False,
-        check_trace: bool = False, trace_out=None,
-        horizons=(1, 4, 16), spec_ks=(0, 2, 4)):
+        check_trace: bool = False, check_robust: bool = False,
+        trace_out=None, horizons=(1, 4, 16), spec_ks=(0, 2, 4)):
     block_size = 16
     cfg = registry.get_smoke(arch)
     attribution_cfg = registry.get_config(arch)   # bill energy at full scale
@@ -533,6 +660,9 @@ def run(verbose: bool = True, n_requests: int = 16, slots_sweep=(2, 4),
     out["tracing"] = tracing_cell(cfg, base_requests, max(slots_sweep),
                                   params=params, block_size=block_size,
                                   trace_out=trace_out, verbose=verbose)
+    out["robustness"] = robustness_cell(cfg, base_requests, max(slots_sweep),
+                                        params=params, block_size=block_size,
+                                        verbose=verbose)
     if verbose:
         print(f"best decode-throughput speedup over static batching: "
               f"{out['best_speedup']:.2f}×; paged vs dense engine: "
@@ -615,6 +745,24 @@ def run(verbose: bool = True, n_requests: int = 16, slots_sweep=(2, 4),
             raise SystemExit(
                 f"trace-on decode throughput {tr['overhead_ratio']:.3f}× "
                 f"trace-off < required 0.98× (tracing must stay <2% overhead)")
+    if check_robust:
+        rb = out["robustness"]
+        if not rb["tokens_match"]:
+            raise SystemExit("guard-on greedy streams diverge from guards-off")
+        if rb["overhead_ratio"] < 0.98:
+            raise SystemExit(
+                f"guards-on decode throughput {rb['overhead_ratio']:.3f}× "
+                f"guards-off < required 0.98× (lifecycle guards must stay "
+                f"<2% overhead)")
+        if rb["chaos_failures"]:
+            seeds = [f["seed"] for f in rb["chaos_failures"]]
+            raise SystemExit(
+                f"chaos sweep not contained for seeds {seeds} — falsifying "
+                f"plans are embedded under robustness.chaos_failures")
+        if rb["chaos_degrade_transitions"] < 1:
+            raise SystemExit(
+                "degradation never engaged across the chaos sweep — the "
+                "flaky scenario must exercise the ladder")
     return out
 
 
@@ -653,6 +801,12 @@ def main():
                          "Perfetto schema check, per-dispatch ODIN energy "
                          "args sum to odin_total within 1%%, and trace-on "
                          "decode tok/s ≥ 0.98× trace-off")
+    ap.add_argument("--check-robust", action="store_true",
+                    help="exit non-zero unless guards-on (deadlines + NaN "
+                         "guard + degradation observer) decode tok/s ≥ 0.98× "
+                         "guards-off with bit-identical streams, AND the "
+                         "flaky chaos sweep is crash-free, terminal-state "
+                         "conserving, with degradation engaging")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write the tracing cell's Chrome trace JSON artifact")
     ap.add_argument("--horizons", type=int, nargs="+", default=[1, 4, 16],
@@ -667,7 +821,7 @@ def main():
         check=args.check, check_paged=args.check_paged,
         check_horizon=args.check_horizon, check_prefix=args.check_prefix,
         check_spec=args.check_spec, check_trace=args.check_trace,
-        trace_out=args.trace_out,
+        check_robust=args.check_robust, trace_out=args.trace_out,
         horizons=tuple(args.horizons), spec_ks=tuple(args.spec_ks))
 
 

@@ -30,6 +30,12 @@ def main():
     ap.add_argument("--spec-ngram", type=int, default=0, metavar="K",
                     help="n-gram self-speculative decode draft length (0 = off)")
     ap.add_argument("--odin-mode", choices=["exact", "int8", "sc"], default=None)
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline after arrival (TIMEOUT past it)")
+    ap.add_argument("--queue-timeout-ms", type=float, default=None,
+                    help="max queue wait before admission")
+    ap.add_argument("--degrade", action="store_true",
+                    help="enable the graceful-degradation ladder")
     args = ap.parse_args()
 
     cfg = registry.get_config(args.arch) if args.full else registry.get_smoke(args.arch)
@@ -45,8 +51,17 @@ def main():
     engine = ServingEngine(cfg, slots=args.slots, max_len=max_len,
                            block_size=16, odin_mode=args.odin_mode,
                            horizon=args.horizon, spec_ngram=args.spec_ngram,
+                           deadline_s=(args.deadline_ms / 1e3
+                                       if args.deadline_ms is not None else None),
+                           queue_timeout_s=(args.queue_timeout_ms / 1e3
+                                            if args.queue_timeout_ms is not None
+                                            else None),
+                           degrade=args.degrade,
                            on_token=on_token)
     summary = engine.run(make_requests(cfg, spec, seed=0))
+    term = summary["terminal"]
+    if term["timeout"] or term["cancelled"] or term["failed"]:
+        print(f"terminal: {term}")
 
     print(f"arch={args.arch} ({'full' if args.full else 'smoke'}) "
           f"scenario={args.scenario}: {summary['generated_tokens']} tokens, "

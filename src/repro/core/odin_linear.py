@@ -48,6 +48,13 @@ class OdinConfig:
     # one PINATUBO row activation covers 32 operand pairs), and the reading
     # that reproduces the paper's "minimal accuracy loss" claim.
     sc_block_k: int = 32
+    # PCRAM resistance-drift analog (fault injection): >0 perturbs the SC/int8
+    # output multiplicatively with seeded Gaussian noise of this relative σ —
+    # the readout excursion a drifted cell produces, NOT a reprogrammed
+    # weight.  0.0 (default) is a no-op; ``exact`` mode is never perturbed
+    # (it is the reference numerics the guards compare against).
+    drift_noise: float = 0.0
+    drift_seed: int = 0
 
     @property
     def spec(self) -> sc.StreamSpec:
@@ -141,4 +148,8 @@ def odin_linear(x: jax.Array, w: jax.Array, cfg: OdinConfig = OdinConfig()) -> j
         out = _rail_matmul(a_q, w_pos, cfg, luts) - _rail_matmul(a_q, w_neg, cfg, luts)
 
     y = out * (aq.scale * wq.scale)
+    if cfg.drift_noise > 0.0:
+        key = jax.random.PRNGKey(cfg.drift_seed)
+        y = y * (1.0 + cfg.drift_noise
+                 * jax.random.normal(key, y.shape, jnp.float32))
     return y.reshape(*lead, w.shape[-1]).astype(jnp.float32)

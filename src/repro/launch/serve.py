@@ -38,7 +38,8 @@ from repro.launch import specs as specs_mod
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import lm, registry
 from repro.nn import module as nnmod
-from repro.serving import SCENARIOS, Request, ServingEngine, Tracer, make_requests
+from repro.serving import (SCENARIOS, FaultPlan, Request, ServingEngine,
+                           Tracer, make_requests)
 
 __all__ = ["serve", "serve_static", "main"]
 
@@ -183,14 +184,39 @@ def main():
     ap.add_argument("--xla-annotations", action="store_true",
                     help="wrap each compiled dispatch in a jax.profiler "
                          "TraceAnnotation (aligns XLA profiles with spans)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="default per-request deadline after arrival; past-"
+                         "deadline requests finish as TIMEOUT (slot freed "
+                         "mid-run, KV blocks released)")
+    ap.add_argument("--queue-timeout-ms", type=float, default=None,
+                    help="max queue wait before admission; expired waiters "
+                         "finish as TIMEOUT without ever running")
+    ap.add_argument("--degrade", action="store_true",
+                    help="enable the graceful-degradation ladder (spec off → "
+                         "horizon shrink → prefix release → admission denial)")
+    ap.add_argument("--fault-plan", default=None, metavar="PATH",
+                    help="seeded fault-injection plan (JSON, see repro.serving"
+                         ".faults.FaultPlan); scenario mode only — faults are "
+                         "a test instrument, not a serving feature")
     args = ap.parse_args()
+    if args.fault_plan and not args.scenario:
+        ap.error("--fault-plan requires --scenario (fault injection is bench/"
+                 "test-mode only)")
     cfg = registry.get_smoke(args.arch) if args.smoke else registry.get_config(args.arch)
 
     tracer = Tracer(capacity=args.trace_capacity) if args.trace_out else None
     obs_kw = {"tracer": tracer, "metrics_window": args.metrics_window,
-              "xla_annotations": args.xla_annotations}
+              "xla_annotations": args.xla_annotations,
+              "deadline_s": (args.deadline_ms / 1e3
+                             if args.deadline_ms is not None else None),
+              "queue_timeout_s": (args.queue_timeout_ms / 1e3
+                                  if args.queue_timeout_ms is not None else None),
+              "degrade": args.degrade}
 
     if args.scenario:
+        if args.fault_plan:
+            with open(args.fault_plan) as fh:
+                obs_kw["fault_plan"] = FaultPlan.from_json(fh.read())
         spec = dataclasses.replace(SCENARIOS[args.scenario], n_requests=args.requests)
         block_size = args.block_size or 16
         max_len = max(spec.prompt_buckets) + spec.shared_prefix + max(spec.gen_buckets)

@@ -55,6 +55,7 @@ __all__ = [
     "init_serving_caches",
     "make_slot_prefill_step",
     "make_serving_decode_step",
+    "make_serving_decode_guarded",
     "make_serving_decode_horizon",
     "make_serving_spec_horizon",
     "ngram_propose",
@@ -385,6 +386,53 @@ def make_serving_decode_step(cfg: ModelConfig, top_k: int = 0,
                                      tables, key if sample else None,
                                      temperature, cfg, top_k)
         return nxt, caches
+
+    return decode_step
+
+
+def make_serving_decode_guarded(cfg: ModelConfig, top_k: int = 0,
+                                sample: bool = False) -> Callable:
+    """Single decode step with a per-slot NaN/Inf logit guard (+ optional
+    fault injection).
+
+    (params, caches, tokens [B,1], lengths [B], active [B], tables [B,P],
+     key, temperature, poison [B]) → (next, bad [B], caches)
+
+    ``bad[s]`` is True when slot ``s``'s final-row logits contain a
+    non-finite value — the engine quarantines that request as FAILED and
+    discards its token.  ``poison`` injects NaN into the marked slots'
+    logits *after* the forward pass (the PCRAM-drift analog at the logit
+    seam), so co-batched slots see bit-identical logits to an unguarded
+    step and keep their streams.  The argmax/sampling path is unchanged for
+    finite rows, so emitted tokens match :func:`make_serving_decode_step`
+    exactly; the guard costs one ``isfinite`` reduction per slot, paid only
+    by engines that opt into guarded decode.
+    """
+
+    def decode_step(params, caches, tokens, lengths, active, tables=None,
+                    key=None, temperature=0.0, poison=None):
+        trash = _pool_trash_block(caches)
+        if tables is not None and trash is not None:
+            tables = jnp.where(active[:, None], tables, jnp.int32(trash))
+        logits, new_caches, _ = lm.forward(params, tokens, cfg, caches=caches,
+                                           start_pos=lengths[:, None],
+                                           moe_no_drop=True, tables=tables)
+        if poison is not None:
+            m = poison.reshape((-1,) + (1,) * (logits.ndim - 1))
+            logits = jnp.where(m, jnp.nan, logits)
+        last = logits[:, -1]
+        bad = ~jnp.all(jnp.isfinite(last.reshape(last.shape[0], -1)), axis=-1)
+
+        def merge(path, old, new):
+            if _leaf_name(path) in POOL_LEAVES:
+                return new
+            m = active.reshape((1, active.shape[0]) + (1,) * (old.ndim - 2))
+            return jnp.where(m, new, old)
+
+        caches = jax.tree_util.tree_map_with_path(merge, caches, new_caches)
+        nxt = _sample_tokens(logits, cfg, key if sample else None,
+                             temperature, top_k)
+        return nxt, bad, caches
 
     return decode_step
 

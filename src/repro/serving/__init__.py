@@ -9,6 +9,8 @@ The serving substrate over the repo's compiled prefill/decode steps:
 * :mod:`repro.serving.trace`     — ring-buffered tracer, Perfetto export,
   windowed metrics registry
 * :mod:`repro.serving.workload`  — synthetic open-loop arrival generators
+* :mod:`repro.serving.faults`    — seeded fault-injection plans + typed errors
+* :mod:`repro.serving.degrade`   — load-shedding ladder (graceful degradation)
 
 Quick start::
 
@@ -23,10 +25,15 @@ Quick start::
 See src/repro/serving/README.md for the full walkthrough.
 """
 from repro.serving.blocks import BlockPool, PagedKVStore, SwapTicket
+from repro.serving.degrade import (DEGRADE_LEVELS, DegradationController,
+                                   DegradeConfig)
 from repro.serving.engine import ServingEngine
+from repro.serving.faults import (FAULT_SITES, EngineStallError, FaultEvent,
+                                  FaultPlan, SwapCopyError)
 from repro.serving.metrics import EngineStats, OdinCostModel, summarize
-from repro.serving.scheduler import (PrefixCache, PrefixGrant, Request,
-                                     RequestState, Scheduler, StepPlan)
+from repro.serving.scheduler import (TERMINAL_STATES, PrefixCache, PrefixGrant,
+                                     Request, RequestState, Scheduler,
+                                     StepPlan)
 from repro.serving.trace import (NULL_TRACER, LogHistogram, MetricsRegistry,
                                  NullTracer, Tracer, chrome_trace,
                                  validate_chrome_trace)
@@ -37,7 +44,10 @@ __all__ = [
     "ServingEngine",
     "EngineStats", "OdinCostModel", "summarize",
     "PrefixCache", "PrefixGrant",
-    "Request", "RequestState", "Scheduler", "StepPlan",
+    "Request", "RequestState", "Scheduler", "StepPlan", "TERMINAL_STATES",
+    "FaultPlan", "FaultEvent", "FAULT_SITES",
+    "EngineStallError", "SwapCopyError",
+    "DegradationController", "DegradeConfig", "DEGRADE_LEVELS",
     "Tracer", "NullTracer", "NULL_TRACER", "LogHistogram", "MetricsRegistry",
     "chrome_trace", "validate_chrome_trace",
     "SCENARIOS", "WorkloadSpec", "make_requests", "poisson_arrivals",

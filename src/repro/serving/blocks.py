@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.nn.attention import POOL_LEAVES
+from repro.serving.faults import SwapCopyError
 from repro.serving.trace import NULL_TRACER
 
 __all__ = ["BlockPool", "PagedKVStore", "SwapTicket"]
@@ -89,6 +90,11 @@ class BlockPool:
         self._free: List[int] = list(range(n_blocks - 1, -1, -1))
         self._refs: Dict[int, int] = {}
         self.reclaimer = None
+        # armed fault injection: the next N non-empty allocs fail (None
+        # return, pool untouched) regardless of headroom — exercises every
+        # caller's exhaustion fallback at moments the headroom math says are
+        # impossible
+        self._forced_failures = 0
         # structured-event recorder (repro.serving.trace); the engine swaps
         # in its Tracer — the no-op default keeps every emit site free
         self.tracer = NULL_TRACER
@@ -122,6 +128,12 @@ class BlockPool:
         allocation must not wipe the resident prefix cache for nothing."""
         if n < 0:
             raise ValueError(n)
+        if n > 0 and self._forced_failures:
+            self._forced_failures -= 1
+            if self.tracer.enabled:
+                self.tracer.instant("alloc-fault", "pool", "pool",
+                                    args={"n": n, "free": len(self._free)})
+            return None
         if n > len(self._free) and self.reclaimer is not None \
                 and n <= len(self._free) + self.reclaimer.reclaimable():
             self.reclaimer.reclaim(n - len(self._free))
@@ -205,6 +217,13 @@ class BlockPool:
         table.extend(got)
         return True
 
+    def arm_alloc_failures(self, n: int = 1) -> None:
+        """Fault injection: make the next ``n`` non-empty allocations fail
+        (return None, pool untouched) even with headroom available."""
+        if n < 0:
+            raise ValueError(n)
+        self._forced_failures += n
+
     def snapshot(self) -> Tuple[List[int], Dict[int, int]]:
         """(free ids, refcounts) copies — for invariant-checking tests."""
         return list(self._free), dict(self._refs)
@@ -241,6 +260,11 @@ class PagedKVStore:
     def __init__(self, caches, n_blocks: int, block_size: int):
         self.block_size = block_size
         self.pool = BlockPool(n_blocks, block_size)
+        # armed fault injection: the next N copies in the given direction
+        # raise SwapCopyError *before* touching any state (both copies are
+        # functional, so the caller's fallback sees untouched caches)
+        self._fail_out = 0
+        self._fail_in = 0
         self.bufs: Dict[str, jax.Array] = {}
         self.pool_keys: set = set()
         for path, leaf in jax.tree_util.tree_flatten_with_path(caches)[0]:
@@ -263,6 +287,16 @@ class PagedKVStore:
                 self.bufs[_leaf_key(path)] = jnp.zeros(
                     (n_blocks, L, block_size, *trail), leaf.dtype)
 
+    def arm_swap_failures(self, direction: str, n: int = 1) -> None:
+        """Fault injection: the next ``n`` copies in ``direction`` ("out" or
+        "in") raise :class:`SwapCopyError` before touching any state."""
+        if direction == "out":
+            self._fail_out += n
+        elif direction == "in":
+            self._fail_in += n
+        else:
+            raise ValueError(f"direction must be 'out' or 'in', got {direction!r}")
+
     def _nb_leaf(self, leaf, nb: int) -> int:
         # ring-buffer leaves are smaller than the table they are filed under
         return min(nb, leaf.shape[2] // self.block_size)
@@ -279,6 +313,9 @@ class PagedKVStore:
         swap) and excluded from the copy — the ticket covers device blocks
         ``skip`` onward.
         """
+        if self._fail_out:
+            self._fail_out -= 1
+            raise SwapCopyError("injected swap-out copy fault")
         bs = self.block_size
         ids = jnp.asarray(block_ids, jnp.int32)
         ticket = SwapTicket(list(block_ids), n_tokens, skip_blocks=skip)
@@ -313,6 +350,9 @@ class PagedKVStore:
         ``skip_blocks`` onward; the leading blocks were never copied out
         (they stayed resident under retained claims).
         """
+        if self._fail_in:
+            self._fail_in -= 1
+            raise SwapCopyError("injected swap-in copy fault")
         bs = self.block_size
         skip = ticket.skip_blocks
         ids = jnp.asarray(ticket.block_ids, jnp.int32)

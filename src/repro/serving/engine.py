@@ -58,6 +58,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.launch.steps import (init_serving_caches,
+                                make_serving_decode_guarded,
                                 make_serving_decode_horizon,
                                 make_serving_decode_step,
                                 make_serving_spec_horizon,
@@ -68,8 +69,11 @@ from repro.nn import module as nnmod
 from repro.nn.attention import POOL_LEAVES
 from repro.serving.blocks import (SEQ_LEAVES, BlockPool, PagedKVStore,
                                   _leaf_name)
+from repro.serving.degrade import DegradationController, DegradeConfig
+from repro.serving.faults import EngineStallError, FaultPlan, SwapCopyError
 from repro.serving.metrics import EngineStats, OdinCostModel, summarize
-from repro.serving.scheduler import PrefixCache, PrefixGrant, Request, Scheduler
+from repro.serving.scheduler import (PrefixCache, PrefixGrant, Request,
+                                     RequestState, Scheduler)
 from repro.serving.trace import NULL_TRACER, MetricsRegistry
 
 __all__ = ["ServingEngine"]
@@ -148,6 +152,34 @@ class ServingEngine:
     xla_annotations : wrap each compiled dispatch in a
         ``jax.profiler.TraceAnnotation`` named ``serving/<kind>`` so XLA
         profiler timelines line up with the engine's own dispatch spans.
+    deadline_s / queue_timeout_s : engine-wide defaults stamped onto every
+        submitted request that does not carry its own ``deadline`` /
+        ``queue_timeout``.  A past-deadline request is released as
+        ``TIMEOUT`` at the next step boundary from ANY live state (queued,
+        swapped, or running mid-horizon — ``grant_horizon`` additionally
+        caps horizons at the earliest running deadline so a fused dispatch
+        never burns a full grant of dead work); ``queue_timeout`` is
+        relative to arrival and applies only while the request has never
+        been admitted.  Requests without lifecycle fields are never
+        scanned — the guards-off hot path pays nothing.
+    fault_plan : a :class:`repro.serving.faults.FaultPlan` to replay —
+        deterministic fault events consumed at the top of each step
+        (allocation failures, swap-copy faults, NaN-poisoned logits, clock
+        skew).  The engine *contains* every injected fault: no event may
+        escape ``step()`` as an exception.  Test/bench-only.
+    nan_guard : route fault-step decodes through the guarded executable
+        that flags non-finite per-slot logits; a flagged slot's request is
+        quarantined as ``FAILED`` ("nan_logits") while co-batched slots
+        keep bit-identical streams.  Default None ⇒ enabled exactly when a
+        ``fault_plan`` is attached.
+    degrade : graceful-degradation controller — True (default thresholds),
+        a :class:`~repro.serving.degrade.DegradeConfig`, or a ready
+        :class:`~repro.serving.degrade.DegradationController`.  Watches
+        pool occupancy / arrived queue depth / preemption churn /
+        ``accept_rate`` each step and sheds load along the traced ladder
+        (speculation off → horizon shrunk → prefix retention released →
+        admission denial with structured retry-after), restoring in
+        reverse under hysteresis.  None disables (no per-step cost).
     """
 
     def __init__(self, cfg: ModelConfig, *, slots: int, max_len: int,
@@ -164,7 +196,12 @@ class ServingEngine:
                  clock: Optional[Callable[[], float]] = None,
                  attribution_cfg: Optional[ModelConfig] = None,
                  tracer=None, metrics_window: float = 1.0,
-                 xla_annotations: bool = False):
+                 xla_annotations: bool = False,
+                 deadline_s: Optional[float] = None,
+                 queue_timeout_s: Optional[float] = None,
+                 fault_plan: Optional[FaultPlan] = None,
+                 nan_guard: Optional[bool] = None,
+                 degrade=None):
         if odin_mode is not None:
             cfg = cfg.with_overrides(odin_mode=odin_mode)
         if max_len % block_size:
@@ -188,6 +225,11 @@ class ServingEngine:
         self.on_token = on_token
         self._clock = clock or time.monotonic
         self._t0: Optional[float] = None
+        # clock-skew fault state: an injected offset plus a monotone clamp
+        # (a negative skew must never run the engine clock backwards —
+        # timestamps, windows and deadlines all assume monotonicity)
+        self._skew = 0.0
+        self._last_now = 0.0
         self.temperature = float(temperature)
         self.top_k = int(top_k)
         self.sample_seed = int(sample_seed)
@@ -293,6 +335,29 @@ class ServingEngine:
         self.metrics.maybe_roll(self._now(), self._counter_snapshot())
         self.xla_annotations = bool(xla_annotations)
 
+        # ---- robustness substrate ----------------------------------------
+        self.deadline_s = deadline_s
+        self.queue_timeout_s = queue_timeout_s
+        self.fault_plan = fault_plan
+        self._nan_guard = (bool(nan_guard) if nan_guard is not None
+                           else fault_plan is not None)
+        self._guarded: Optional[Callable] = None    # lazily jitted
+        if degrade is None or degrade is False:
+            self.degrade = None
+        elif degrade is True:
+            self.degrade = DegradationController(tracer=self.tracer)
+        elif isinstance(degrade, DegradeConfig):
+            self.degrade = DegradationController(degrade, tracer=self.tracer)
+        else:
+            self.degrade = degrade
+        # only requests carrying lifecycle fields are scanned per step, so
+        # a workload without deadlines/cancellations pays nothing here
+        self._watched: List[Request] = []
+        self._by_rid: Dict[int, Request] = {}
+        # observe() deltas for the degradation controller
+        self._churn_mark = 0
+        self._spec_mark = (0, 0)
+
         K = cfg.n_codebooks
         tok_shape = (slots, K, 1) if K > 1 else (slots, 1)
         self._last_tok = jnp.zeros(tok_shape, jnp.int32)
@@ -311,7 +376,12 @@ class ServingEngine:
     def _now(self) -> float:
         if self._t0 is None:
             self._t0 = self._clock()
-        return self._clock() - self._t0
+        t = self._clock() - self._t0 + self._skew
+        if t < self._last_now:          # monotone clamp (clock-skew faults)
+            t = self._last_now
+        else:
+            self._last_now = t
+        return t
 
     def _kv_bytes(self) -> int:
         """Device bytes held by KV-bearing cache leaves (the paged-vs-dense
@@ -419,7 +489,15 @@ class ServingEngine:
                 f"request {req.rid}: extras (patch_embeds/pos3d) need "
                 f"prompt+max_new-1 = {req.prompt_len + req.max_new - 1} "
                 f"to fit one prefill chunk ({self.chunk})")
+        if req.deadline is None and self.deadline_s is not None:
+            req.deadline = req.arrival + self.deadline_s
+        if req.queue_timeout is None and self.queue_timeout_s is not None:
+            req.queue_timeout = self.queue_timeout_s
         self.sched.submit(req)
+        self._by_rid[req.rid] = req
+        if (req.deadline is not None or req.queue_timeout is not None
+                or req.cancel_at is not None):
+            self._watched.append(req)
         if self.tracer.enabled:
             t = self._now()
             # the flow "s" anchor: every later lifecycle event for this rid
@@ -446,6 +524,146 @@ class ServingEngine:
                                       "eos": bool(req.eos)},
                                 flow=req.rid)
             self.tracer.flow_event("f", "request", track, req.rid, ts=now)
+
+    _TERMINAL_EVENT = {RequestState.TIMEOUT: "timeout",
+                       RequestState.CANCELLED: "cancel",
+                       RequestState.FAILED: "failed"}
+
+    def _finalize(self, req: Request, state: RequestState, reason: str,
+                  now: float) -> None:
+        """Release a live request into a non-DONE terminal state (the DONE
+        path stays :meth:`_complete`): scheduler teardown from wherever it
+        is in the lifecycle, terminal bookkeeping, lifecycle trace events."""
+        slot = req.slot
+        self.sched.release(req, state, now, reason)
+        self._done.append(req)
+        if state is RequestState.TIMEOUT:
+            self.stats.timeouts += 1
+        elif state is RequestState.CANCELLED:
+            self.stats.cancelled += 1
+        else:
+            self.stats.failed += 1
+        if self.tracer.enabled:
+            track = self._slot_track(slot) if slot >= 0 else "scheduler"
+            self.tracer.instant(
+                self._TERMINAL_EVENT[state], "lifecycle", track, ts=now,
+                args={"rid": req.rid, "reason": reason,
+                      "generated_tokens": req.n_generated},
+                flow=req.rid)
+            self.tracer.flow_event("f", "request", track, req.rid, ts=now)
+
+    def cancel(self, rid: int, reason: str = "client") -> bool:
+        """Client-side cancellation: release request ``rid`` from any live
+        state (slot freed, refcount claims dropped, swap ticket returned).
+        Returns False when the rid is unknown or already terminal — cancel
+        is idempotent and never raises."""
+        req = self._by_rid.get(rid)
+        if req is None or req.terminal:
+            return False
+        self._finalize(req, RequestState.CANCELLED, reason, self._now())
+        return True
+
+    def _expire(self, now: float) -> None:
+        """Sweep watched requests for scripted cancellations, deadlines and
+        queue timeouts.  Runs at the top of each step, so a mid-horizon
+        deadline is enforced at the next step boundary (grant_horizon's
+        deadline cap keeps that boundary close)."""
+        alive: List[Request] = []
+        for req in self._watched:
+            if req.terminal:
+                continue
+            if req.cancel_at is not None and now >= req.cancel_at:
+                self._finalize(req, RequestState.CANCELLED, "client", now)
+            elif req.deadline is not None and now >= req.deadline:
+                self._finalize(req, RequestState.TIMEOUT, "deadline", now)
+            elif (req.queue_timeout is not None and req.t_admit is None
+                    and now >= req.arrival + req.queue_timeout):
+                self._finalize(req, RequestState.TIMEOUT, "queue", now)
+            else:
+                alive.append(req)
+        self._watched = alive
+
+    def _apply_faults(self, now: float):
+        """Consume this step's fault events from the plan.  Arming faults
+        (alloc/swap/clock) mutate the seams directly; a ``nan_logits`` event
+        is returned for the decode phase to inject through the guarded
+        executable."""
+        nan_ev = None
+        for ev in self.fault_plan.events_at(self.stats.steps):
+            self.stats.faults_injected += 1
+            if ev.site == "alloc":
+                self.pool.arm_alloc_failures(ev.count)
+                self.stats.alloc_faults += ev.count
+                self.fault_plan.record(ev, "armed", count=ev.count)
+            elif ev.site in ("swap_out", "swap_in"):
+                if self.store is None:
+                    self.fault_plan.record(ev, "skipped-no-swap-tier")
+                else:
+                    self.store.arm_swap_failures(ev.site[5:], ev.count)
+                    self.fault_plan.record(ev, "armed", count=ev.count)
+            elif ev.site == "clock_skew":
+                self._skew += ev.skew_s
+                self.fault_plan.record(ev, "applied", skew_s=ev.skew_s)
+            elif ev.site == "nan_logits":
+                if self._nan_guard:
+                    nan_ev = ev
+                else:
+                    self.fault_plan.record(ev, "skipped-guard-off")
+            if self.tracer.enabled:
+                self.tracer.instant("fault-inject", "faults", "scheduler",
+                                    ts=now, args={"site": ev.site,
+                                                  "step": ev.step,
+                                                  "count": ev.count})
+        return nan_ev
+
+    def _observe_degrade(self, now: float) -> None:
+        """Feed the controller this step's observables and push its knobs
+        into the scheduler (admission hold, prefix retention) — decode-side
+        knobs (spec K, horizon cap) are read in the decode routing."""
+        ctl = self.degrade
+        churn_now = self.stats.preempt_swap + self.stats.preempt_recompute
+        churn = churn_now - self._churn_mark
+        self._churn_mark = churn_now
+        d_draft = self.stats.spec_drafted - self._spec_mark[0]
+        d_acc = self.stats.spec_accepted - self._spec_mark[1]
+        self._spec_mark = (self.stats.spec_drafted, self.stats.spec_accepted)
+        ctl.observe(
+            now,
+            pool_frac=self.pool.used_blocks / max(1, self.pool.n_blocks),
+            queue_depth=sum(1 for a, _, _ in self.sched.waiting if a <= now),
+            churn=churn,
+            accept_rate=(d_acc / d_draft) if d_draft else None,
+            est_step_time=self._est_step_time(),
+            active=len(self.sched.running))
+        self.sched.admission_hold = (ctl.retry_after(now)
+                                     if ctl.deny_admission else None)
+        self.sched.prefix_retain = not ctl.release_prefix
+        cache = self.sched.prefix_cache
+        if ctl.release_prefix and cache is not None:
+            n = cache.reclaimable()
+            if n:
+                cache.reclaim(n)
+        self.stats.degrade_level = ctl.level
+        self.stats.degrade_transitions = ctl.transitions
+
+    def drain(self, max_steps: int = 100_000) -> Dict:
+        """Graceful shutdown: cancel every request that never started
+        (reason "drain"), then drive the loop until all in-flight work —
+        running, swapped, and preempted-but-admitted requests — finishes.
+        Returns the final summary."""
+        now = self._now()
+        for _, _, req in list(self.sched.waiting):
+            if req.t_admit is None:
+                self._finalize(req, RequestState.CANCELLED, "drain", now)
+        steps = 0
+        while self.sched.has_work:
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise EngineStallError(
+                    f"drain exceeded {max_steps} steps",
+                    summary=self.summary())
+        return self.summary()
 
     def _cow_fork(self, src: int, dst: int) -> None:
         """Execute a COW fork: copy pool block ``src`` into ``dst`` on every
@@ -564,17 +782,43 @@ class ServingEngine:
             self._seed_hist(req)
 
     def step(self) -> bool:
-        """One engine iteration; returns True while work remains."""
+        """One engine iteration; returns True while work remains.
+
+        Injected faults are *contained* here: an armed allocation failure
+        surfaces as preemption/denial through the planner's normal fallback
+        paths, a swap-copy fault downgrades the victim to recompute, a
+        NaN-poisoned slot is quarantined by the guarded decode, and clock
+        skew is clamped monotone — no fault event ever escapes ``step()``
+        as an exception."""
         now = self._now()
+        if self._watched:
+            self._expire(now)
+        nan_ev = None
+        if self.fault_plan is not None:
+            nan_ev = self._apply_faults(now)
+            now = self._now()              # clock skew may have moved it
         plan = self.sched.plan(now)
 
         trace = self.tracer.enabled
         for req, mode, swap_ids, old_slot, dev_ids in plan.preempt:
             if mode == "swap":
                 t0 = self._now() if trace else 0.0
-                req.ticket = self.store.swap_out(
-                    self.caches, old_slot, swap_ids, req.cached_len, dev_ids,
-                    skip=len(req.kept_blocks))
+                try:
+                    req.ticket = self.store.swap_out(
+                        self.caches, old_slot, swap_ids, req.cached_len,
+                        dev_ids, skip=len(req.kept_blocks))
+                except SwapCopyError:
+                    # the copy raised before touching device state: downgrade
+                    # to recompute (kept claims + swap blocks released, the
+                    # re-prefill rebuilds the KV from tokens)
+                    self.stats.swap_faults += 1
+                    self.sched.fail_swap_out(req)
+                    if trace:
+                        self.tracer.instant(
+                            "swap-fault", "faults", self._slot_track(old_slot),
+                            args={"rid": req.rid, "direction": "out"},
+                            flow=req.rid)
+                    continue
                 self.stats.preempt_swap += 1
                 self.stats.swap_skipped_blocks += len(req.kept_blocks)
                 if trace:
@@ -595,8 +839,21 @@ class ServingEngine:
         for req in plan.resume:
             t0 = self._now() if trace else 0.0
             n_swap = len(req.ticket.block_ids)
-            self.caches = self.store.swap_in(self.caches, req.slot, req.ticket,
-                                             req.block_table)
+            try:
+                self.caches = self.store.swap_in(self.caches, req.slot,
+                                                 req.ticket, req.block_table)
+            except SwapCopyError:
+                # functional swap-in: the caches are untouched.  Tear the
+                # placement back down and requeue as recompute.
+                self.stats.swap_faults += 1
+                slot = req.slot
+                self.sched.fail_resume(req)
+                if trace:
+                    self.tracer.instant(
+                        "swap-fault", "faults", self._slot_track(slot),
+                        args={"rid": req.rid, "direction": "in"},
+                        flow=req.rid)
+                continue
             self.store.pool.free(req.ticket.block_ids)
             req.ticket = None
             self._slot_len[req.slot] = req.cached_len
@@ -633,28 +890,46 @@ class ServingEngine:
                                  "free": self.pool.free_blocks})
 
         active_slots = sorted(self.sched.running)
+        spec_k = self.spec_ngram
+        max_h = self.horizon
+        if self.degrade is not None:
+            spec_k = self.degrade.spec_k(spec_k)
+            max_h = self.degrade.horizon_cap(max_h)
+        if nan_ev is not None and not active_slots:
+            self.fault_plan.record(nan_ev, "skipped-idle")
         if active_slots:
-            if self.spec_ngram:
+            if nan_ev is not None:
+                # a poisoned step runs the guarded single-step kernel so the
+                # NaN is quarantined per-slot; greedy streams are horizon-
+                # invariant, so unfaulted co-batched slots stay bit-identical
+                self._decode_guarded_step(active_slots, nan_ev)
+            elif spec_k:
                 # speculation always rides the fused scan (h == 1 is one
                 # draft→verify→accept step); grant 0 ⇒ the pool cannot cover
                 # the worst-case K+1-row write span — plain single step
-                h = self.sched.grant_horizon(self.horizon, now,
+                h = self.sched.grant_horizon(max_h, now,
                                              self._est_step_time(),
-                                             spec_k=self.spec_ngram)
+                                             spec_k=spec_k)
                 if h >= 1:
                     self._decode_spec_steps(active_slots, h)
                 else:
                     self._decode_single_step(active_slots)
+            elif self.spec_ngram:
+                # speculation shed by the degradation ladder: plain single
+                # steps keep the n-gram history aligned for the restore
+                self._decode_single_step(active_slots)
             else:
                 h = 1
-                if self.horizon > 1:
-                    h = self.sched.grant_horizon(self.horizon, now,
+                if max_h > 1:
+                    h = self.sched.grant_horizon(max_h, now,
                                                  self._est_step_time())
                 if h > 1:
                     self._decode_horizon_steps(active_slots, h)
                 else:
                     self._decode_single_step(active_slots)
         self.stats.steps += 1
+        if self.degrade is not None:
+            self._observe_degrade(self._now())
         self.metrics.maybe_roll(self._now(), self._counter_snapshot())
         return self.sched.has_work
 
@@ -701,6 +976,83 @@ class ServingEngine:
         now = self._now()
         for s in active_slots:
             req = self.sched.running[s]
+            self._slot_len[s] += 1
+            self.stats.decode_tokens += 1
+            self._emit(req, host[s, ..., 0], now)
+            if req.done:
+                self._complete(req, now)
+
+    def _guarded_fn(self):
+        """Lazily-compiled guarded decode step: same math as the plain step
+        plus a per-slot finiteness verdict on the last-position logits."""
+        if self._guarded is None:
+            self._guarded = jax.jit(
+                make_serving_decode_guarded(self.cfg, top_k=self.top_k,
+                                            sample=self.temperature > 0),
+                donate_argnums=(1,))
+        return self._guarded
+
+    def _decode_guarded_step(self, active_slots: List[int], ev) -> None:
+        """One guarded ``[slots, 1]`` dispatch with an injected NaN poison.
+
+        The poison mask corrupts exactly one slot's logits *post-forward*
+        (the PCRAM-drift analog: a resistance excursion flips the readout,
+        not the programmed weights).  The guard quarantines that slot as
+        FAILED; every other slot samples from untouched logits with the
+        same key schedule as the plain step, so unfaulted co-batched greedy
+        streams stay bit-identical to a fault-free run."""
+        trace = self.tracer.enabled
+        t0 = time.perf_counter()
+        t_before = self._now() if trace else 0.0
+        active = np.zeros(self.slots, bool)
+        active[active_slots] = True
+        poison = np.zeros(self.slots, bool)
+        target = active_slots[ev.slot % len(active_slots)]
+        poison[target] = True
+        self.fault_plan.record(ev, "poisoned", slot=target,
+                               rid=self.sched.running[target].rid)
+        tables = self._refresh_tables()
+        key = jax.random.fold_in(self._sample_key, self.stats.decode_steps)
+        with self._annotate("decode"):
+            nxt, bad, self.caches = self._guarded_fn()(
+                self.params, self.caches, self._last_tok,
+                jnp.asarray(self._slot_len), jnp.asarray(active),
+                tables, key, jnp.float32(self.temperature),
+                jnp.asarray(poison))
+            host = np.asarray(nxt)                   # syncs the step
+            badh = np.asarray(bad)
+        wall = time.perf_counter() - t0
+        self.stats.decode_time += wall
+        self.metrics.observe("dispatch_decode_s", wall)
+        if trace:
+            rows = len(active_slots)
+            self.tracer.span(
+                "decode", "dispatch", "dispatch", t_before,
+                self._now() - t_before,
+                args={"kind": "decode", "h": 1, "spec_k": 0, "guarded": True,
+                      "slots_active": rows, "tokens": rows, "rows": rows,
+                      "host_syncs": 1,
+                      "odin_energy_mj": self.cost_model.energy_mj(rows)})
+        self.stats.decode_steps += 1
+        self.stats.dispatches += 1
+        self.stats.decode_dispatches += 1
+        self.stats.host_syncs += 1
+        self.stats.active_slot_steps += len(active_slots)
+        self.stats.slot_steps += self.slots
+        self._last_tok = nxt
+        if self.spec_ngram:
+            shifted = jnp.concatenate([self._hist[:, 1:], nxt], axis=1)
+            self._hist = jnp.where(jnp.asarray(active)[:, None], shifted,
+                                   self._hist)
+        now = self._now()
+        for s in active_slots:
+            req = self.sched.running[s]
+            if badh[s]:
+                # quarantine: only the poisoned request fails; its garbage
+                # token never enters a stream and the slot is re-admittable
+                self.stats.nan_quarantined += 1
+                self._finalize(req, RequestState.FAILED, "nan_logits", now)
+                continue
             self._slot_len[s] += 1
             self.stats.decode_tokens += 1
             self._emit(req, host[s, ..., 0], now)
@@ -886,7 +1238,9 @@ class ServingEngine:
                 steps += 1
                 idle = 0
                 if steps > max_steps:
-                    raise RuntimeError(f"engine exceeded {max_steps} steps")
+                    raise EngineStallError(
+                        f"engine exceeded {max_steps} steps",
+                        summary=self.summary())
             else:
                 # idle: nothing running, next arrival in the future.  Idle
                 # waits don't count against the runaway-loop bound (a
@@ -895,9 +1249,10 @@ class ServingEngine:
                 # advances past the next arrival.
                 idle += 1
                 if idle > max_steps:
-                    raise RuntimeError(
+                    raise EngineStallError(
                         f"engine idle for {max_steps} iterations — is the "
-                        "clock advancing toward the next arrival?")
+                        "clock advancing toward the next arrival?",
+                        summary=self.summary())
                 nxt = self.sched.next_arrival()
                 if nxt is not None and nxt > self._now():
                     time.sleep(min(0.05, nxt - self._now()))
@@ -906,8 +1261,11 @@ class ServingEngine:
     def summary(self) -> Dict:
         done = self._all_requests()
         self.metrics.flush(self._now(), self._counter_snapshot())
-        return summarize(done, self.stats, self.cost_model,
-                         registry=self.metrics)
+        out = summarize(done, self.stats, self.cost_model,
+                        registry=self.metrics)
+        if self.fault_plan is not None:
+            out["fault_plan"] = self.fault_plan.snapshot()
+        return out
 
     def _all_requests(self) -> List[Request]:
         seen = {r.rid: r for _, _, r in self.sched.waiting}

@@ -53,6 +53,15 @@ class EngineStats:
     spec_overhead_rows: int = 0           # verify rows computed beyond emitted
     swap_skipped_blocks: int = 0          # swap-out copies skipped (re-attach)
     jit_evictions: int = 0                # fused executables dropped (LRU)
+    timeouts: int = 0                     # requests expired (deadline/queue)
+    cancelled: int = 0                    # client cancellations (incl. drain)
+    failed: int = 0                       # requests quarantined as FAILED
+    nan_quarantined: int = 0              # slots isolated by the logit guard
+    alloc_faults: int = 0                 # injected pool-allocation failures
+    swap_faults: int = 0                  # injected swap copies contained
+    faults_injected: int = 0              # fault events applied from the plan
+    degrade_level: int = 0                # ladder level at last observation
+    degrade_transitions: int = 0          # ladder moves (escalate + restore)
 
     @property
     def occupancy(self) -> float:
@@ -146,6 +155,7 @@ def summarize(requests, stats: EngineStats, cost: Optional[OdinCostModel] = None
     field added to the dataclass can never silently go unreported (CI pins
     the key set to the dataclass fields).
     """
+    requests = list(requests)
     per_request = []
     ttfts, tpots = [], []
     for r in sorted(requests, key=lambda r: r.rid):
@@ -163,6 +173,8 @@ def summarize(requests, stats: EngineStats, cost: Optional[OdinCostModel] = None
             "prompt_tokens": r.prompt_len,
             "generated_tokens": r.n_generated,
             "prefill_tokens": r.n_prefill_tokens,
+            "state": r.state.value,
+            "finish_reason": r.finish_reason,
             "ttft_s": ttft,
             "tpot_s": tpot,
             "preemptions": {"swap": r.n_preempt_swap, "recompute": r.n_preempt_recompute},
@@ -217,6 +229,23 @@ def summarize(requests, stats: EngineStats, cost: Optional[OdinCostModel] = None
             "overhead_rows": stats.spec_overhead_rows,
         },
         "jit_evictions": stats.jit_evictions,
+        # terminal-state matrix: every request ends in exactly one of these
+        "terminal": {
+            "done": sum(1 for r in requests if r.state.value == "done"),
+            "timeout": stats.timeouts,
+            "cancelled": stats.cancelled,
+            "failed": stats.failed,
+        },
+        "faults": {
+            "injected": stats.faults_injected,
+            "alloc": stats.alloc_faults,
+            "swap": stats.swap_faults,
+            "nan_quarantined": stats.nan_quarantined,
+        },
+        "degradation": {
+            "level": stats.degrade_level,
+            "transitions": stats.degrade_transitions,
+        },
         # raw counter mirror: keys pinned to the EngineStats dataclass fields
         # (tests/test_trace.py), so new counters surface here automatically
         "engine_stats": dataclasses.asdict(stats),

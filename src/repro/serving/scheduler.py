@@ -8,6 +8,17 @@ State machine (per request)::
        └── preempt ─────┤  │
                         └──┴── swap preempt ──▶ SWAPPED
 
+    QUEUED / RUNNING / SWAPPED ──release──▶ TIMEOUT | CANCELLED | FAILED
+
+Every request ends in exactly one terminal state: ``DONE`` (eos/length),
+``TIMEOUT`` (deadline or queue timeout expired), ``CANCELLED`` (client
+cancel or drain), or ``FAILED`` (quarantined by a fault guard).  The
+typed reason lands in ``Request.finish_reason``.  :meth:`Scheduler.release`
+tears a live request down from any non-terminal state — slot freed,
+refcount claims dropped, swap tickets returned — reusing the PR 5
+recompute-downgrade release discipline, so the pool/prefix-cache stay
+coherent no matter where in the lifecycle the request dies.
+
 ``Scheduler.plan(now)`` is pure bookkeeping — it mutates only scheduler /
 request accounting state and returns a :class:`StepPlan` of device actions
 (swap-out scatters, swap-in gathers, chunked prefills) for the engine to
@@ -62,7 +73,7 @@ from repro.serving.blocks import BlockPool
 from repro.serving.trace import NULL_TRACER
 
 __all__ = ["PrefixCache", "PrefixGrant", "Request", "RequestState",
-           "Scheduler", "StepPlan"]
+           "Scheduler", "StepPlan", "TERMINAL_STATES"]
 
 
 class RequestState(enum.Enum):
@@ -70,6 +81,14 @@ class RequestState(enum.Enum):
     RUNNING = "running"
     SWAPPED = "swapped"
     DONE = "done"
+    TIMEOUT = "timeout"
+    CANCELLED = "cancelled"
+    FAILED = "failed"
+
+
+#: states a request can never leave
+TERMINAL_STATES = (RequestState.DONE, RequestState.TIMEOUT,
+                   RequestState.CANCELLED, RequestState.FAILED)
 
 
 @dataclass
@@ -87,8 +106,17 @@ class Request:
     max_new: int
     arrival: float = 0.0
     extras: Optional[dict] = None
+    # absolute engine-clock instant after which the request times out (None
+    # ⇒ no deadline); queue_timeout is relative to arrival and applies only
+    # while the request has never been admitted (t_admit is None); cancel_at
+    # is an absolute scripted client cancellation (workload schedules)
+    deadline: Optional[float] = None
+    queue_timeout: Optional[float] = None
+    cancel_at: Optional[float] = None
 
     state: RequestState = RequestState.QUEUED
+    finish_reason: Optional[str] = None   # "eos"/"length"/"deadline"/"queue"/
+                                          # "client"/"drain"/"nan_logits"/...
     slot: int = -1
     generated: List = field(default_factory=list)
     block_table: List[int] = field(default_factory=list)
@@ -132,6 +160,10 @@ class Request:
     @property
     def done(self) -> bool:
         return self.eos or self.n_generated >= self.max_new
+
+    @property
+    def terminal(self) -> bool:
+        return self.state in TERMINAL_STATES
 
     def replay_tokens(self) -> np.ndarray:
         """Tokens a (re-)prefill of this request feeds the model: the prompt
@@ -407,6 +439,12 @@ class Scheduler:
         # bumped whenever any request's block table (or slot binding) changes;
         # the engine re-mirrors its device table array only when this moves
         self.table_version: int = 0
+        # degradation knobs (set each step by the engine's controller):
+        # admission_hold, when not None, pauses admissions and carries the
+        # structured retry-after instant for denied clients; prefix_retain
+        # False stops registering new prompt chains (retention released)
+        self.admission_hold: Optional[float] = None
+        self.prefix_retain: bool = True
 
     # -- queries ------------------------------------------------------------
 
@@ -440,8 +478,45 @@ class Scheduler:
         self.free_slots.append(req.slot)
         req.slot = -1
         req.state = RequestState.DONE
+        req.finish_reason = "eos" if req.eos else "length"
         req.t_done = now
         self.table_version += 1
+
+    def release(self, req: Request, state: RequestState, now: float,
+                reason: str) -> None:
+        """Tear a live request down into terminal ``state`` from wherever it
+        is in the lifecycle, dropping every resource claim it holds:
+
+        * RUNNING — free the block table (refcount-aware: shared/cached
+          blocks survive), free the slot;
+        * SWAPPED — drop kept-prefix claims, return swap-tier blocks and the
+          ticket (the recompute-downgrade release discipline);
+        * QUEUED — remove from the waiting heap.
+
+        The engine owns the trace emission; this is pure bookkeeping."""
+        if req.terminal:
+            return
+        if req.state is RequestState.RUNNING:
+            self.pool.free(req.block_table)
+            req.block_table = []
+            self.running.pop(req.slot)
+            self.free_slots.append(req.slot)
+            req.slot = -1
+            self.table_version += 1
+        elif req.state is RequestState.SWAPPED:
+            self.swapped.remove(req)
+            self.pool.free(req.kept_blocks)
+            req.kept_blocks = []
+            if self.swap_pool is not None and req.swap_block_ids:
+                self.swap_pool.free(req.swap_block_ids)
+            req.swap_block_ids = []
+            req.ticket = None
+        else:                               # QUEUED: drop the heap entry
+            self.waiting = [e for e in self.waiting if e[2] is not req]
+            heapq.heapify(self.waiting)
+        req.state = state
+        req.finish_reason = reason
+        req.t_done = now
 
     # -- planning -----------------------------------------------------------
 
@@ -523,6 +598,38 @@ class Scheduler:
         heapq.heappush(self.waiting, (req.arrival, req.rid, req))
         if self.tracer.enabled:
             self.tracer.instant("swap-downgrade", "scheduler", "scheduler",
+                                args={"rid": req.rid}, flow=req.rid)
+
+    def fail_swap_out(self, req: Request) -> None:
+        """The swap-out copy failed after :meth:`_preempt` moved the request
+        to SWAPPED (ticket never created).  Downgrade to recompute: kept
+        claims and swap-tier blocks are released, the request re-prefills
+        from tokens on readmission.  Nothing device-side was written, so the
+        caches are untouched."""
+        self.swapped.remove(req)
+        self._downgrade_to_recompute(req)
+
+    def fail_resume(self, req: Request) -> None:
+        """The swap-in copy failed after :meth:`plan` placed the resumed
+        request back in a slot (functional swap-in: the caches are
+        untouched).  Tear the placement back down and requeue as recompute —
+        the swap-tier copy may be suspect, so its blocks are returned rather
+        than retried."""
+        self.pool.free(req.block_table)
+        req.block_table = []
+        self.running.pop(req.slot)
+        self.free_slots.append(req.slot)
+        req.slot = -1
+        self.table_version += 1
+        if self.swap_pool is not None and req.ticket is not None:
+            self.swap_pool.free(req.ticket.block_ids)
+        req.ticket = None
+        req.swap_block_ids = []
+        req.state = RequestState.QUEUED
+        req.n_preempt_recompute += 1
+        heapq.heappush(self.waiting, (req.arrival, req.rid, req))
+        if self.tracer.enabled:
+            self.tracer.instant("resume-fail", "scheduler", "scheduler",
                                 args={"rid": req.rid}, flow=req.rid)
 
     def _place(self, req: Request, blocks: List[int], now: float) -> None:
@@ -668,6 +775,17 @@ class Scheduler:
         # blocks, not just slots).  Admission allocates only the *marginal*
         # blocks beyond the resident shared prefix, and registers the new
         # prompt chain so later arrivals can share it.
+        if self.admission_hold is not None:
+            # degradation ladder top: admissions denied with a structured
+            # retry-after; queued requests keep waiting (their queue_timeout
+            # bounds the wait) and resume priority still drains the swapped
+            if (self.tracer.enabled and self.waiting
+                    and self.waiting[0][0] <= now):
+                self.tracer.instant(
+                    "admit-hold", "scheduler", "scheduler", ts=now,
+                    args={"queued": len(self.waiting),
+                          "retry_after_s": self.admission_hold})
+            return plan
         while self.waiting and self.free_slots and not resume_starved:
             arrival, _, req = self.waiting[0]
             if arrival > now:
@@ -686,7 +804,8 @@ class Scheduler:
             self._place(req, table, now)
             if grant is not None:
                 plan.grants[req.rid] = grant
-            if self.prefix_cache is not None and not req.extras:
+            if (self.prefix_cache is not None and not req.extras
+                    and self.prefix_retain):
                 self.prefix_cache.register(req)
             self._check_write_block(req)
             plan.admit.append(req)
@@ -750,6 +869,13 @@ class Scheduler:
         elif self.waiting and self.free_slots and est_step_time > 0:
             until = self.waiting[0][0] - now
             h = min(h, max(1, int(until / est_step_time) + 1))
+        # deadline events: a past-deadline running request must be aborted at
+        # the next step boundary, so cap the horizon roughly at the earliest
+        # running deadline — a mid-horizon abort otherwise burns up to a full
+        # grant of dead work before the engine's expiry sweep sees it
+        deadlines = [r.deadline - now for r in running if r.deadline is not None]
+        if deadlines and est_step_time > 0:
+            h = min(h, max(1, int(min(deadlines) / (est_step_time * per)) + 1))
         h = 1 << (max(1, h).bit_length() - 1)          # snap down to 2^k
 
         def rows_for(r: Request, hh: int) -> int:
@@ -768,15 +894,27 @@ class Scheduler:
                 self.pool.blocks_for(rows_for(r, h)) > self.pool.n_blocks
                 for r in running)):
             h = 0                           # this step cannot verify a draft
-        if h and (h > 1 or spec_k):
-            grew = False
+        grew = False
+        while h and (h > 1 or spec_k):
+            ok = True
             for r in running:
                 before = len(r.block_table)
                 ok = self.pool.extend_to(r.block_table, rows_for(r, h))
-                assert ok, "grant_horizon headroom check missed"
                 grew |= len(r.block_table) != before
-            if grew:
-                self.table_version += 1
+                if not ok:
+                    break
+            if ok:
+                break
+            # headroom vanished between the check and the extension (an
+            # injected allocation fault, or a reclaimer that reported blocks
+            # it could not deliver): halve the grant and retry with whatever
+            # partial extension already landed — never crash, never preempt.
+            # With speculation an uncoverable h == 1 degrades to 0 and the
+            # engine falls back to one plain decode step (plan()'s growth
+            # already covered that row).
+            h = h // 2 if h > 1 else 0
+        if grew:
+            self.table_version += 1
         if self.tracer.enabled:
             self.tracer.instant(
                 "grant_horizon", "scheduler", "scheduler", ts=now,

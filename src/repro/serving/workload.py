@@ -40,6 +40,18 @@ class WorkloadSpec:
     # workload n-gram speculation feeds on; greedy continuations of periodic
     # prompts fall into cycles the draft match predicts)
     pattern_period: int = 0
+    # failure-semantics schedules (all off by default — and drawn AFTER the
+    # length/arrival draws, so enabling them never perturbs the token streams
+    # an existing seed produces): per-request deadlines sampled from buckets
+    # of seconds-after-arrival, a queue-admission timeout, and client
+    # cancellations — each request cancels with prob ``cancel_rate`` at
+    # ``arrival + cancel_after * deadline`` (or ``cancel_after`` seconds when
+    # no deadline is set)
+    deadline_buckets: Optional[Tuple[float, ...]] = None
+    deadline_weights: Optional[Tuple[float, ...]] = None
+    queue_timeout: Optional[float] = None
+    cancel_rate: float = 0.0
+    cancel_after: float = 0.5
 
 
 # Scenario presets (lengths are smoke-scale; scale up for full configs).
@@ -59,6 +71,14 @@ SCENARIOS: Dict[str, WorkloadSpec] = {
     # greedy continuations cycle and n-gram speculation accepts deep drafts
     "repetitive": WorkloadSpec(pattern_period=8, prompt_buckets=(32,),
                                gen_buckets=(160,)),
+    # impatient bursty clients: tight bursts, deadlines of the same order as
+    # a request's service time, and a cancellation stream — the robustness
+    # workload (queue expiry, mid-run aborts, degradation under pressure)
+    "flaky": WorkloadSpec(burst=4, rate=20.0, prompt_buckets=(16, 48),
+                          gen_buckets=(8, 64), gen_weights=(0.7, 0.3),
+                          deadline_buckets=(0.5, 2.0, 8.0),
+                          deadline_weights=(0.3, 0.4, 0.3),
+                          queue_timeout=4.0, cancel_rate=0.15),
 }
 
 
@@ -108,4 +128,21 @@ def make_requests(cfg: ModelConfig, spec: WorkloadSpec, seed: int = 0,
                 [systems[i % spec.share_groups], prompt], axis=-1)
         out.append(Request(rid=start_rid + i, prompt=prompt,
                            max_new=int(gens[i]), arrival=float(arrivals[i])))
+    # failure-semantics draws come last: legacy seeds consume an identical
+    # rng stream, so streams stay byte-identical with these features off
+    if spec.deadline_buckets:
+        dls = _draw(rng, spec.deadline_buckets, spec.deadline_weights,
+                    spec.n_requests)
+        for req, d in zip(out, dls):
+            req.deadline = req.arrival + float(d)
+    if spec.queue_timeout is not None:
+        for req in out:
+            req.queue_timeout = float(spec.queue_timeout)
+    if spec.cancel_rate > 0.0:
+        flips = rng.random(spec.n_requests) < spec.cancel_rate
+        for req, flip in zip(out, flips):
+            if flip:
+                horizon = ((req.deadline - req.arrival) * spec.cancel_after
+                           if req.deadline is not None else spec.cancel_after)
+                req.cancel_at = req.arrival + float(horizon)
     return out

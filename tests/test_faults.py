@@ -1,0 +1,477 @@
+"""Robustness suite: fault injection, terminal lifecycle, degradation.
+
+Three layers, cheapest first:
+
+* pure-python units — FaultPlan determinism/serialization, the armed
+  allocation seam, the degradation ladder's hysteresis, drift noise;
+* chaos property sweep — the pure-bookkeeping ``PoolInvariantDriver`` from
+  test_serving_props, now driven with a seeded chaos stream (cancellations,
+  armed alloc failures, swap copy faults) across 25 seeds: every request
+  must reach exactly one terminal state and every pool invariant must hold
+  through every fault;
+* engine end-to-end — seeded ``FaultPlan``s against the real jax engine:
+  no injected fault may escape ``step()`` as an exception, terminal states
+  are conserved, a NaN-poisoned slot is quarantined while its co-batched
+  neighbours stay bit-identical to a fault-free run, and deadline/cancel
+  semantics hold across every cache family.
+
+A falsifying engine-chaos plan is dumped to ``tests/.chaos/`` before the
+assertion re-raises, so CI can upload it as an artifact for replay.
+"""
+import collections
+import dataclasses
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from serving_harness import (HORIZON_ARCHS, materialize, mixed_spec,
+                             run_workload, token_streams)
+from test_serving_props import PoolInvariantDriver, _scenario_from_rng
+
+from repro.serving import (DEGRADE_LEVELS, FAULT_SITES, SCENARIOS,
+                           DegradationController, DegradeConfig,
+                           EngineStallError, FaultEvent, FaultPlan, Request,
+                           RequestState, ServingEngine, make_requests)
+from repro.serving.blocks import BlockPool, PagedKVStore
+
+CHAOS_DIR = pathlib.Path(__file__).parent / ".chaos"
+
+
+# ---------------------------------------------------------------------------
+# fault-plan units (no jax)
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_generate_deterministic():
+    a = FaultPlan.generate(7, n_steps=64, rate=0.3)
+    b = FaultPlan.generate(7, n_steps=64, rate=0.3)
+    assert a.events == b.events and a.events
+    assert all(ev.site in FAULT_SITES for ev in a.events)
+    assert FaultPlan.generate(8, n_steps=64, rate=0.3).events != a.events
+
+
+def test_fault_plan_json_roundtrip():
+    plan = FaultPlan.generate(3, n_steps=32, rate=0.4)
+    back = FaultPlan.from_json(plan.to_json())
+    assert back.events == plan.events and back.seed == plan.seed
+    # fired outcomes are run state, not plan identity: not round-tripped
+    plan.record(plan.events[0], "armed")
+    assert FaultPlan.from_json(plan.to_json()).fired == []
+    snap = plan.snapshot()
+    assert snap["n_events"] == len(plan.events)
+    assert snap["fired"][0]["outcome"] == "armed"
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError):
+        FaultEvent(site="meteor", step=0)
+    with pytest.raises(ValueError):
+        FaultEvent(site="alloc", step=-1)
+    with pytest.raises(ValueError):
+        FaultEvent(site="alloc", step=0, count=0)
+
+
+def test_engine_stall_error_carries_summary():
+    err = EngineStallError("stalled", summary={"steps": 3})
+    assert err.summary == {"steps": 3}
+    assert isinstance(err, RuntimeError)    # old except-clauses still catch
+
+
+def test_block_pool_armed_alloc_failure():
+    pool = BlockPool(8, 4)
+    pool.arm_alloc_failures(2)
+    assert pool.alloc(2) is None            # headroom exists, fault fires
+    assert pool.alloc(1) is None
+    got = pool.alloc(3)                     # disarmed: back to normal
+    assert got is not None and len(got) == 3
+    assert pool.alloc(0) == []              # empty allocs never consume arms
+    pool.arm_alloc_failures(1)
+    assert pool.alloc(0) == []
+    assert pool.alloc(1) is None
+
+
+def test_paged_store_armed_swap_failure():
+    store = PagedKVStore.__new__(PagedKVStore)   # seam unit: no device state
+    store._fail_out = store._fail_in = 0
+    store.arm_swap_failures("out", 1)
+    store.arm_swap_failures("in", 2)
+    assert (store._fail_out, store._fail_in) == (1, 2)
+    with pytest.raises(ValueError):
+        store.arm_swap_failures("sideways")
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder (no jax)
+# ---------------------------------------------------------------------------
+
+def _pressure(ctl, now, n):
+    for i in range(n):
+        ctl.observe(now + i, pool_frac=0.95, queue_depth=5, churn=0)
+
+
+def _calm(ctl, now, n):
+    for i in range(n):
+        ctl.observe(now + i, pool_frac=0.1, queue_depth=0, churn=0)
+
+
+def test_degrade_ladder_escalates_one_level_per_trigger():
+    ctl = DegradationController(DegradeConfig(up_steps=2, down_steps=3))
+    assert ctl.name == "normal"
+    _pressure(ctl, 0.0, 2)
+    assert ctl.level == 1                   # spec off
+    assert ctl.spec_k(4) == 0
+    _pressure(ctl, 2.0, 2)
+    assert ctl.level == 2                   # horizon shrunk
+    assert ctl.horizon_cap(16) == ctl.cfg.min_horizon
+    _pressure(ctl, 4.0, 2)
+    assert ctl.level == 3 and ctl.release_prefix
+    _pressure(ctl, 6.0, 2)
+    assert ctl.level == 4 and ctl.deny_admission
+    assert ctl.name == DEGRADE_LEVELS[4] == "admit_deny"
+    _pressure(ctl, 8.0, 10)
+    assert ctl.level == 4                   # saturates, never past the top
+    assert ctl.transitions == 4
+
+
+def test_degrade_ladder_restores_under_hysteresis():
+    ctl = DegradationController(DegradeConfig(up_steps=1, down_steps=3))
+    _pressure(ctl, 0.0, 2)
+    assert ctl.level == 2
+    _calm(ctl, 2.0, 2)
+    assert ctl.level == 2                   # < down_steps calm: held
+    ctl.observe(4.0, pool_frac=0.95, queue_depth=5, churn=0)
+    assert ctl.level == 3                   # pressure resets the cool streak
+    _calm(ctl, 5.0, 3)
+    assert ctl.level == 2                   # one level per restore
+    _calm(ctl, 8.0, 6)
+    assert ctl.level == 0 and ctl.name == "normal"
+    assert ctl.transitions == 6             # 3 up + 3 down
+
+
+def test_degrade_neutral_zone_resets_both_streaks():
+    ctl = DegradationController(DegradeConfig(up_steps=2, down_steps=2))
+    ctl.observe(0.0, pool_frac=0.95, queue_depth=5, churn=0)
+    ctl.observe(1.0, pool_frac=0.7, queue_depth=1, churn=0)   # neither
+    ctl.observe(2.0, pool_frac=0.95, queue_depth=5, churn=0)
+    assert ctl.level == 0                   # streak broken, no escalation
+
+
+def test_degrade_accept_rate_and_churn_triggers():
+    cfg = DegradeConfig(up_steps=1)
+    ctl = DegradationController(cfg)
+    # accept-rate collapse only counts as pressure when the pool is loaded
+    ctl.observe(0.0, pool_frac=0.3, queue_depth=0, churn=0, accept_rate=0.0)
+    assert ctl.level == 0
+    ctl.observe(1.0, pool_frac=0.6, queue_depth=0, churn=0, accept_rate=0.0)
+    assert ctl.level == 1
+    ctl2 = DegradationController(cfg)
+    ctl2.observe(0.0, pool_frac=0.3, queue_depth=0, churn=5)
+    assert ctl2.level == 1                  # swap churn alone is pressure
+
+
+def test_degrade_idle_engine_always_restores():
+    """Liveness: with admission denied and nothing running, a deep queue
+    must still read as calm — the ladder walks back down and re-admits."""
+    ctl = DegradationController(DegradeConfig(up_steps=1, down_steps=2))
+    for i in range(4):
+        ctl.observe(float(i), pool_frac=0.95, queue_depth=9, churn=0, active=2)
+    assert ctl.deny_admission
+    for i in range(20):
+        ctl.observe(4.0 + i, pool_frac=0.0, queue_depth=9, churn=0, active=0)
+    assert ctl.level == 0
+    # and queue depth alone, while idle, never escalates in the first place
+    ctl2 = DegradationController(DegradeConfig(up_steps=1))
+    ctl2.observe(0.0, pool_frac=0.0, queue_depth=50, churn=0, active=0)
+    assert ctl2.level == 0
+
+
+def test_degrade_retry_after_scales_with_step_time():
+    ctl = DegradationController(DegradeConfig(retry_after_steps=8.0))
+    ctl.observe(0.0, pool_frac=0.1, queue_depth=0, churn=0, est_step_time=0.5)
+    assert ctl.retry_after(10.0) == pytest.approx(10.0 + 8.0 * 0.5)
+
+
+# ---------------------------------------------------------------------------
+# PCRAM drift-noise analog (cheap jax)
+# ---------------------------------------------------------------------------
+
+def test_odin_drift_noise_seeded_and_gated():
+    import jax
+    from repro.core.odin_linear import OdinConfig, odin_linear
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16))
+    w = jax.random.normal(jax.random.PRNGKey(2), (16, 8))
+    base = odin_linear(x, w, OdinConfig(mode="int8"))
+    drift = odin_linear(x, w, OdinConfig(mode="int8", drift_noise=0.05,
+                                         drift_seed=3))
+    drift2 = odin_linear(x, w, OdinConfig(mode="int8", drift_noise=0.05,
+                                          drift_seed=3))
+    assert not np.allclose(base, drift)
+    np.testing.assert_array_equal(np.asarray(drift), np.asarray(drift2))
+    other = odin_linear(x, w, OdinConfig(mode="int8", drift_noise=0.05,
+                                         drift_seed=4))
+    assert not np.array_equal(np.asarray(drift), np.asarray(other))
+    # drift stays a perturbation, not a rewrite
+    assert np.allclose(base, drift, rtol=0.3, atol=1.0)
+    # exact mode is the reference numerics: never perturbed
+    e0 = odin_linear(x, w, OdinConfig(mode="exact"))
+    e1 = odin_linear(x, w, OdinConfig(mode="exact", drift_noise=0.5))
+    np.testing.assert_array_equal(np.asarray(e0), np.asarray(e1))
+
+
+# ---------------------------------------------------------------------------
+# chaos property sweep over the pure bookkeeping driver
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(25))
+def test_chaos_driver_invariants_seeded(seed):
+    kw, specs = _scenario_from_rng(np.random.default_rng(seed))
+    if not specs:
+        pytest.skip("degenerate scenario")
+    driver = PoolInvariantDriver(**kw,
+                                 chaos_rng=np.random.default_rng(seed + 1000))
+    driver.run(specs)       # asserts invariants per step + terminal at drain
+    assert all(r.terminal for r in driver.all_reqs)
+
+
+def test_chaos_sweep_covers_fault_sites():
+    """The chaos sweep must actually hit cancellation from multiple states,
+    armed allocation failures and swap copy faults, or it proves nothing."""
+    hits = collections.Counter()
+    for seed in range(25):
+        kw, specs = _scenario_from_rng(np.random.default_rng(seed))
+        if not specs:
+            continue
+        d = PoolInvariantDriver(**kw,
+                                chaos_rng=np.random.default_rng(seed + 1000))
+        d.run(specs)
+        hits.update(d.chaos_hits)
+    assert hits["cancel_running"] > 0
+    assert hits["cancel_queued"] > 0
+    assert hits["alloc_armed"] > 0
+    assert hits["swap_out_fault"] > 0
+    assert hits["swap_in_fault"] > 0
+
+
+# ---------------------------------------------------------------------------
+# engine end-to-end (jax)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def phi4_setup():
+    return materialize("phi4-mini-3.8b")
+
+
+def _conserved(summary, n_requests):
+    term = summary["terminal"]
+    assert sum(term.values()) == n_requests, term
+    json.dumps(summary, allow_nan=False)    # reportable under strict JSON
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_engine_chaos_contained(seed, phi4_setup):
+    """Seeded FaultPlans against the real engine: no injected fault escapes
+    step(), every request lands in exactly one terminal state, and the
+    summary stays strict-JSON reportable.  A falsifying plan is written to
+    tests/.chaos/ for artifact upload before re-raising."""
+    cfg, params = phi4_setup
+    plan = FaultPlan.generate(seed, n_steps=64, rate=0.3)
+    spec = mixed_spec(5, gen_buckets=(8, 24))
+    try:
+        _, s = run_workload(cfg, params, slots=3, spec=spec, seed=seed,
+                            n_blocks=14, swap_blocks=24, fault_plan=plan,
+                            degrade=True, nan_guard=True)
+        _conserved(s, 5)
+        assert s["fault_plan"]["seed"] == seed
+    except Exception:
+        CHAOS_DIR.mkdir(exist_ok=True)
+        out = CHAOS_DIR / f"falsifying_plan_seed{seed}.json"
+        out.write_text(plan.to_json())
+        raise
+
+
+def test_engine_nan_quarantine_cobatch_bit_identical(phi4_setup):
+    """A poisoned slot fails alone: the quarantined request's stream is a
+    prefix of its fault-free run and every other co-batched greedy stream is
+    bit-identical to the fault-free baseline."""
+    cfg, params = phi4_setup
+    spec = mixed_spec(4, gen_buckets=(16, 32))
+    base, s0 = run_workload(cfg, params, slots=3, spec=spec, seed=11)
+    plan = FaultPlan(events=(FaultEvent(site="nan_logits", step=8, slot=1),))
+    faulted, s1 = run_workload(cfg, params, slots=3, spec=spec, seed=11,
+                               fault_plan=plan)
+    assert s1["faults"]["nan_quarantined"] == 1
+    [failed] = [r for r in s1["requests"] if r["state"] == "failed"]
+    assert failed["finish_reason"] == "nan_logits"
+    for rid, stream in faulted.items():
+        if rid == failed["rid"]:
+            assert stream == base[rid][:len(stream)]   # clean prefix
+            assert len(stream) < len(base[rid])
+        else:
+            assert stream == base[rid], f"unfaulted rid {rid} diverged"
+    _conserved(s1, 4)
+
+
+def test_engine_cancel_mid_run_and_idempotent(phi4_setup):
+    cfg, params = phi4_setup
+    spec = mixed_spec(4, gen_buckets=(24,))
+    reqs = make_requests(cfg, spec, seed=5)
+    eng = ServingEngine(cfg, slots=2, max_len=48, block_size=8, params=params)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(200):
+        eng.step()
+        if reqs[0].n_generated >= 3 and reqs[0].rid in [
+                r.rid for r in eng.sched.running.values()]:
+            break
+    assert eng.cancel(0, reason="client")
+    assert reqs[0].state is RequestState.CANCELLED
+    assert reqs[0].finish_reason == "client"
+    assert not eng.cancel(0)                 # idempotent
+    assert not eng.cancel(999)               # unknown rid: False, no raise
+    assert 0 not in [r.rid for r in eng.sched.running.values()]
+    while eng.sched.has_work:
+        eng.step()
+    s = eng.summary()
+    _conserved(s, 4)
+    assert s["terminal"]["cancelled"] == 1 and s["terminal"]["done"] == 3
+    # the freed slot's blocks went back to the pool
+    cache = eng.sched.prefix_cache
+    assert eng.pool.used_blocks == (len(cache.held_blocks())
+                                    if cache is not None else 0)
+
+
+def test_engine_cancel_parity_streams_unaffected(phi4_setup):
+    """Cancelling one request must not perturb any other greedy stream."""
+    cfg, params = phi4_setup
+    spec = mixed_spec(4, gen_buckets=(24,))
+    base, _ = run_workload(cfg, params, slots=2, spec=spec, seed=5)
+    reqs = make_requests(cfg, spec, seed=5)
+    eng = ServingEngine(cfg, slots=2, max_len=48, block_size=8, params=params)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(200):
+        eng.step()
+        if reqs[0].n_generated >= 3:
+            break
+    eng.cancel(0)
+    while eng.sched.has_work:
+        eng.step()
+    streams = token_streams(reqs)
+    for rid in (1, 2, 3):
+        assert streams[rid] == base[rid], f"rid {rid} diverged after cancel"
+    assert streams[0] == base[0][:len(streams[0])]
+
+
+def test_engine_deadline_mid_run_timeout(phi4_setup):
+    cfg, params = phi4_setup
+    spec = mixed_spec(3, gen_buckets=(24,))
+    reqs = make_requests(cfg, spec, seed=4)
+    eng = ServingEngine(cfg, slots=2, max_len=48, block_size=8, params=params,
+                        deadline_s=1e9)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(200):
+        eng.step()
+        if reqs[0].n_generated >= 2:
+            break
+    reqs[0].deadline = 0.0                  # already past: expires next sweep
+    eng.step()
+    assert reqs[0].state is RequestState.TIMEOUT
+    assert reqs[0].finish_reason == "deadline"
+    while eng.sched.has_work:
+        eng.step()
+    s = eng.summary()
+    _conserved(s, 3)
+    assert s["terminal"]["timeout"] == 1 and s["terminal"]["done"] == 2
+
+
+def test_engine_queue_timeout_expires_waiter(phi4_setup):
+    cfg, params = phi4_setup
+    p = np.arange(8, dtype=np.int32)
+    r0 = Request(rid=0, prompt=p, max_new=6, arrival=0.0)
+    r1 = Request(rid=1, prompt=p + 1, max_new=6, arrival=0.0,
+                 queue_timeout=1e-9)
+    eng = ServingEngine(cfg, slots=1, max_len=32, block_size=8, params=params)
+    s = eng.run([r0, r1])
+    # one slot: r0 admits first; r1's queue budget expires before admission
+    assert r0.state is RequestState.DONE
+    assert r1.state is RequestState.TIMEOUT
+    assert r1.finish_reason == "queue" and r1.t_first_token is None
+    _conserved(s, 2)
+
+
+def test_engine_drain_cancels_unadmitted(phi4_setup):
+    cfg, params = phi4_setup
+    p = np.arange(8, dtype=np.int32)
+    near = [Request(rid=i, prompt=p + i, max_new=4, arrival=0.0)
+            for i in range(2)]
+    far = Request(rid=2, prompt=p + 9, max_new=4, arrival=1e9)
+    eng = ServingEngine(cfg, slots=2, max_len=32, block_size=8, params=params)
+    for r in near + [far]:
+        eng.submit(r)
+    eng.step()                               # admit the near pair
+    s = eng.drain()
+    assert all(r.state is RequestState.DONE for r in near)
+    assert far.state is RequestState.CANCELLED
+    assert far.finish_reason == "drain"
+    _conserved(s, 3)
+    assert not eng.sched.has_work
+
+
+def test_engine_stall_error_carries_partial_summary(phi4_setup):
+    cfg, params = phi4_setup
+    spec = mixed_spec(3, gen_buckets=(24,))
+    reqs = make_requests(cfg, spec, seed=2)
+    eng = ServingEngine(cfg, slots=2, max_len=48, block_size=8, params=params)
+    with pytest.raises(EngineStallError, match="exceeded 2 steps") as ei:
+        eng.run(reqs, max_steps=2)
+    s = ei.value.summary
+    assert s is not None and s["steps"] >= 2
+    assert {"terminal", "faults", "degradation"} <= set(s)
+
+
+def test_engine_degrade_engages_under_flaky_pressure(phi4_setup):
+    """The flaky scenario against a tight pool must shed load (transitions
+    fire) and still land every request in a terminal state, crash-free."""
+    cfg, params = phi4_setup
+    spec = dataclasses.replace(SCENARIOS["flaky"], n_requests=8,
+                               prompt_buckets=(8, 16), gen_buckets=(8, 24),
+                               deadline_buckets=(5.0, 30.0),
+                               deadline_weights=None, queue_timeout=30.0)
+    _, s = run_workload(cfg, params, slots=2, max_len=48, spec=spec, seed=6,
+                        n_blocks=12, degrade=True)
+    _conserved(s, 8)
+    assert s["degradation"]["transitions"] > 0
+    assert s["engine_stats"]["degrade_transitions"] == \
+        s["degradation"]["transitions"]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", HORIZON_ARCHS)
+def test_engine_cancel_deadline_parity_across_archs(arch):
+    """Deadline/cancel semantics hold for every cache family: the victim
+    reaches its terminal state, everyone else completes with a stream
+    bit-identical to the undisturbed run."""
+    cfg, params = materialize(arch)
+    spec = mixed_spec(3, gen_buckets=(16,))
+    base, _ = run_workload(cfg, params, slots=2, spec=spec, seed=7)
+    reqs = make_requests(cfg, spec, seed=7)
+    eng = ServingEngine(cfg, slots=2, max_len=48, block_size=8, params=params,
+                        deadline_s=1e9)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(200):
+        eng.step()
+        if reqs[0].n_generated >= 2:
+            break
+    assert eng.cancel(0)
+    reqs[1].deadline = 0.0
+    while eng.sched.has_work:
+        eng.step()
+    s = eng.summary()
+    streams = token_streams(reqs)
+    assert reqs[0].state is RequestState.CANCELLED
+    assert reqs[1].state in (RequestState.TIMEOUT, RequestState.DONE)
+    assert streams[2] == base[2], f"{arch}: bystander stream diverged"
+    _conserved(s, 3)

@@ -35,7 +35,8 @@ import pytest
 from serving_harness import materialize, mixed_spec, run_workload
 
 from repro.serving.blocks import BlockPool, SwapTicket
-from repro.serving.scheduler import PrefixCache, Request, Scheduler
+from repro.serving.scheduler import (PrefixCache, Request, RequestState,
+                                     Scheduler)
 
 try:
     from hypothesis import HealthCheck, given, settings
@@ -74,7 +75,8 @@ class PoolInvariantDriver:
 
     def __init__(self, *, n_blocks: int, block_size: int, slots: int,
                  max_len: int, swap_blocks: int = 0,
-                 prefix_sharing: bool = True, banks=None, spec_k: int = 0):
+                 prefix_sharing: bool = True, banks=None, spec_k: int = 0,
+                 chaos_rng=None):
         self.pool = BlockPool(n_blocks, block_size)
         self.cache = (PrefixCache(self.pool, block_size)
                       if prefix_sharing else None)
@@ -87,8 +89,14 @@ class PoolInvariantDriver:
         self.kept_claims = 0             # swap-out blocks retained on-device
         self.banks = banks or []
         self.done = []
+        self.released = []               # chaos-terminated (cancel/fail)
         self.all_reqs = []
         self.t = 0
+        # chaos mode: a seeded rng injects cancellations, allocation
+        # failures, and swap copy faults at the same seams the engine's
+        # fault plan hits — the invariants must hold through ALL of them
+        self.chaos = chaos_rng
+        self.chaos_hits = collections.Counter()
 
     def submit_spec(self, rid: int, spec: ReqSpec) -> Request:
         bank = self.banks[spec.group] if self.banks else []
@@ -105,13 +113,27 @@ class PoolInvariantDriver:
         req.generated.append(np.int32((req.rid * 31 + req.n_generated * 7) % 5))
 
     def step(self) -> None:
+        if self.chaos is not None:
+            self._chaos_pre()
         plan = self.sched.plan(float(self.t))
         for req, mode, swap_ids, old_slot, dev_ids in plan.preempt:
             if mode == "swap":
+                if self.chaos is not None and self.chaos.random() < 0.25:
+                    # injected swap-out copy fault: the engine downgrades
+                    # the victim to recompute before any ticket exists
+                    self.sched.fail_swap_out(req)
+                    self.chaos_hits["swap_out_fault"] += 1
+                    continue
                 req.ticket = SwapTicket(swap_ids, req.cached_len,
                                         skip_blocks=len(req.kept_blocks))
                 self.kept_claims += len(req.kept_blocks)
         for req in plan.resume:
+            if self.chaos is not None and self.chaos.random() < 0.25:
+                # injected swap-in copy fault: placement torn down, request
+                # requeued as recompute, ticket blocks freed by the scheduler
+                self.sched.fail_resume(req)
+                self.chaos_hits["swap_in_fault"] += 1
+                continue
             self.swap.free(req.ticket.block_ids)
             req.ticket = None
         for req in plan.admit:
@@ -144,14 +166,32 @@ class PoolInvariantDriver:
         self.t += 1
         self.check_invariants()
 
+    def _chaos_pre(self) -> None:
+        """Pre-plan chaos: random cancellations (any live state) and armed
+        allocation failures — the terminal-lifecycle and denial seams."""
+        live = [r for r in self.all_reqs if not r.terminal]
+        if live and self.chaos.random() < 0.15:
+            req = live[int(self.chaos.integers(0, len(live)))]
+            self.chaos_hits[f"cancel_{req.state.value}"] += 1
+            self.sched.release(req, RequestState.CANCELLED, float(self.t),
+                               "chaos")
+            self.released.append(req)
+        if self.chaos.random() < 0.15:
+            self.pool.arm_alloc_failures(int(self.chaos.integers(1, 3)))
+            self.chaos_hits["alloc_armed"] += 1
+
     def run(self, specs, max_steps: int = 3000) -> None:
         for rid, spec in enumerate(specs):
             self.submit_spec(rid, spec)
         while self.sched.has_work:
             self.step()
             assert self.t < max_steps, "scheduler failed to drain"
-        # drain-time properties
-        assert sorted(r.rid for r in self.done) == list(range(len(specs)))
+        # drain-time properties: every request reached exactly one terminal
+        # state; completed ones used their full budget; pools fully released
+        assert all(r.terminal for r in self.all_reqs)
+        done_rids = sorted(r.rid for r in self.done)
+        rel_rids = sorted(r.rid for r in self.released)
+        assert sorted(done_rids + rel_rids) == list(range(len(specs)))
         assert all(r.n_generated >= r.max_new for r in self.done)
         counts = self._table_counts()
         assert not counts                # no table holds blocks any more
