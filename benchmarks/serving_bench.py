@@ -55,12 +55,22 @@ crashes and exact terminal-state conservation.  ``--check-robust`` gates on
 ≥ 0.98× guards-on throughput, stream identity, a clean sweep, and the
 degradation ladder actually engaging.
 
+The **front-door cell** drives the same mixed stream through the asyncio
+streaming front door (``repro.serving.frontdoor``) — every token crossing
+an ``asyncio.Queue`` into a per-request consumer task — and compares decode
+throughput and token streams against the bare synchronous engine, plus a
+burst-storm sub-check (``max_queue=1``) asserting every admission rejection
+is typed and carries a ``retry_after`` hint.  ``--check-frontdoor`` gates
+on event-stream tokens bit-identical to the bare engine AND front-door-on
+decode throughput ≥ 0.95× bare AND fully-typed storm rejections.
+
 Results merge into ``BENCH_serving.json`` (section "serving") next to the
 kernel microbench so the perf trajectory is machine-readable across PRs.
 
   PYTHONPATH=src python benchmarks/serving_bench.py --bench-json BENCH_serving.json
 """
 import argparse
+import asyncio
 import json
 
 import numpy as np
@@ -561,12 +571,139 @@ def robustness_cell(cfg, base_requests, slots: int, params=None,
     return cell
 
 
+def frontdoor_cell(cfg, base_requests, slots: int, params=None,
+                   block_size: int = 16, repeats: int = 3,
+                   verbose: bool = True):
+    """Front-door cell: async streaming overhead + backpressure typing.
+
+    Overhead: the mixed stream on the bare synchronous engine vs the same
+    engine driven through the asyncio front door — one consumer task per
+    request, every token crossing an ``asyncio.Queue`` — each side with one
+    warmup pass then ``repeats`` measured passes read off the stats deltas
+    (best-of-R, the tracing cell's protocol).  The greedy event-stream
+    tokens must be bit-identical to the bare engine's generated streams.
+
+    Backpressure: a burst storm against ``max_queue=1`` — all but the first
+    submission must bounce with a typed :class:`Overloaded` carrying a
+    non-negative ``retry_after`` hint (the 429 contract the HTTP wrapper
+    forwards as a ``Retry-After`` header).
+    """
+    from repro.serving import FrontDoor, Overloaded
+
+    spec_max = max(r.prompt_len + r.max_new for r in base_requests)
+    max_len = -(-spec_max // block_size) * block_size
+
+    def fresh(rid0):
+        return [Request(rid=rid0 + r.rid, prompt=r.prompt, max_new=r.max_new,
+                        arrival=0.0) for r in base_requests]
+
+    def make_engine():
+        engine = ServingEngine(cfg, slots=slots, max_len=max_len,
+                               block_size=block_size, params=params,
+                               paged=True, horizon=4)
+        engine.run(fresh(0))                       # warmup: compile grants
+        return engine
+
+    def stream_key(streams):
+        return tuple(tuple(s) for s in streams)
+
+    # bare side: the synchronous step loop
+    eng = make_engine()
+    st = eng.stats
+    best_bare, streams_bare = 0.0, None
+    for rep in range(max(1, repeats)):
+        toks0, time0 = st.decode_tokens, st.decode_time
+        reqs = fresh(10_000 * (rep + 1))
+        eng.run(reqs)
+        best_bare = max(best_bare, (st.decode_tokens - toks0)
+                        / max(st.decode_time - time0, 1e-9))
+        streams_bare = stream_key(
+            tuple(tuple(np.asarray(t).ravel().tolist()) for t in r.generated)
+            for r in sorted(reqs, key=lambda r: r.rid))
+
+    # front-door side: same engine config, every token through the asyncio
+    # stream; the tokens compared are the *event* payloads the consumer saw
+    eng_fd = make_engine()
+    st = eng_fd.stats
+
+    async def drive(reqs):
+        fd = FrontDoor(eng_fd, max_queue=len(reqs) + 1)
+        await fd.start()
+
+        async def consume(r):
+            toks = []
+            async for ev in fd.submit(r):
+                if ev.kind == "token":
+                    toks.append(ev.token)
+            return tuple(toks)
+
+        outs = await asyncio.gather(*[consume(r) for r in reqs])
+        await fd.aclose()
+        return outs
+
+    best_fd, streams_fd = 0.0, None
+    for rep in range(max(1, repeats)):
+        toks0, time0 = st.decode_tokens, st.decode_time
+        reqs = fresh(10_000 * (rep + 1))
+        outs = asyncio.run(drive(reqs))
+        best_fd = max(best_fd, (st.decode_tokens - toks0)
+                      / max(st.decode_time - time0, 1e-9))
+        streams_fd = stream_key(
+            out for _, out in sorted(zip((r.rid for r in reqs), outs)))
+
+    # burst storm: queue bound 1, submissions back-to-back with no await in
+    # between — deterministic: exactly one admission, the rest bounce typed
+    eng_storm = ServingEngine(cfg, slots=2, max_len=max_len,
+                              block_size=block_size, params=params,
+                              paged=True, horizon=4)
+
+    async def _drain_stream(stream):
+        async for _ in stream:
+            pass
+
+    async def storm(reqs):
+        fd = FrontDoor(eng_storm, max_queue=1)
+        await fd.start()
+        admitted, rejections = [], []
+        for r in reqs:
+            try:
+                stream = fd.submit(r)
+            except Overloaded as e:
+                rejections.append(e)
+            else:
+                admitted.append(asyncio.ensure_future(_drain_stream(stream)))
+        await asyncio.gather(*admitted)
+        await fd.aclose()
+        return len(admitted), rejections
+
+    n_admitted, rejections = asyncio.run(storm(fresh(50_000)))
+    storm_typed = all(e.retry_after is not None and e.retry_after >= 0.0
+                      for e in rejections)
+    cell = {
+        "slots": slots,
+        "tokens_per_s": {"bare": best_bare, "frontdoor": best_fd},
+        "overhead_ratio": best_fd / max(best_bare, 1e-9),
+        "tokens_match": bool(streams_bare == streams_fd),
+        "storm_admitted": n_admitted,
+        "storm_rejected": len(rejections),
+        "storm_rejections_typed": bool(rejections) and storm_typed,
+        "storm_retry_after_s": [round(e.retry_after, 6) for e in rejections[:3]],
+    }
+    if verbose:
+        print(f"frontdoor: {best_bare:8.1f} tok/s bare → {best_fd:8.1f} "
+              f"streamed ({cell['overhead_ratio']:.3f}×)  tokens_match="
+              f"{cell['tokens_match']}  storm {n_admitted} in / "
+              f"{len(rejections)} typed-429")
+    return cell
+
+
 def run(verbose: bool = True, n_requests: int = 16, slots_sweep=(2, 4),
         rates=(float("inf"),), arch: str = "phi4-mini-3.8b",
         json_path=None, bench_json=None, check: bool = False,
         check_paged: bool = False, check_horizon: bool = False,
         check_prefix: bool = False, check_spec: bool = False,
         check_trace: bool = False, check_robust: bool = False,
+        check_frontdoor: bool = False,
         trace_out=None, horizons=(1, 4, 16), spec_ks=(0, 2, 4)):
     block_size = 16
     cfg = registry.get_smoke(arch)
@@ -663,6 +800,9 @@ def run(verbose: bool = True, n_requests: int = 16, slots_sweep=(2, 4),
     out["robustness"] = robustness_cell(cfg, base_requests, max(slots_sweep),
                                         params=params, block_size=block_size,
                                         verbose=verbose)
+    out["frontdoor"] = frontdoor_cell(cfg, base_requests, max(slots_sweep),
+                                      params=params, block_size=block_size,
+                                      verbose=verbose)
     if verbose:
         print(f"best decode-throughput speedup over static batching: "
               f"{out['best_speedup']:.2f}×; paged vs dense engine: "
@@ -763,6 +903,21 @@ def run(verbose: bool = True, n_requests: int = 16, slots_sweep=(2, 4),
             raise SystemExit(
                 "degradation never engaged across the chaos sweep — the "
                 "flaky scenario must exercise the ladder")
+    if check_frontdoor:
+        fdc = out["frontdoor"]
+        if not fdc["tokens_match"]:
+            raise SystemExit(
+                "front-door event-stream tokens diverge from the bare "
+                "synchronous engine — streaming must be content-neutral")
+        if fdc["overhead_ratio"] < 0.95:
+            raise SystemExit(
+                f"front-door decode throughput {fdc['overhead_ratio']:.3f}× "
+                f"bare engine < required 0.95× (async streaming must stay "
+                f"<5% overhead)")
+        if not fdc["storm_rejections_typed"]:
+            raise SystemExit(
+                "burst-storm rejections were not all typed Overloaded with "
+                "a retry_after hint — the 429 contract is broken")
     return out
 
 
@@ -807,6 +962,11 @@ def main():
                          "guards-off with bit-identical streams, AND the "
                          "flaky chaos sweep is crash-free, terminal-state "
                          "conserving, with degradation engaging")
+    ap.add_argument("--check-frontdoor", action="store_true",
+                    help="exit non-zero unless front-door event streams are "
+                         "bit-identical to the bare engine, streamed decode "
+                         "tok/s ≥ 0.95× bare, and burst-storm rejections are "
+                         "all typed with a retry_after hint")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write the tracing cell's Chrome trace JSON artifact")
     ap.add_argument("--horizons", type=int, nargs="+", default=[1, 4, 16],
@@ -821,7 +981,8 @@ def main():
         check=args.check, check_paged=args.check_paged,
         check_horizon=args.check_horizon, check_prefix=args.check_prefix,
         check_spec=args.check_spec, check_trace=args.check_trace,
-        check_robust=args.check_robust, trace_out=args.trace_out,
+        check_robust=args.check_robust, check_frontdoor=args.check_frontdoor,
+        trace_out=args.trace_out,
         horizons=tuple(args.horizons), spec_ks=tuple(args.spec_ks))
 
 

@@ -7,8 +7,18 @@ slots immediately re-admit queued work.  Per-request TTFT/TPOT and the ODIN
 PIMC energy bill are printed at the end.
 
     PYTHONPATH=src python examples/serve_lm.py --arch hymba-1.5b --scenario mixed
+
+With ``--listen`` the engine instead serves live HTTP clients through the
+asyncio front door (bounded queue, per-tenant quotas, SSE streaming):
+
+    PYTHONPATH=src python examples/serve_lm.py --listen --port 8080 &
+    curl -N -X POST http://127.0.0.1:8080/generate \\
+        -d '{"prompt_len": 32, "max_new": 16, "tenant": "alice"}'
+    # → data: {"kind": "token", "rid": 0, "token": [1234], ...}
+    #   data: {"kind": "done", "rid": 0, "state": "done", ...}
 """
 import argparse
+import asyncio
 import dataclasses
 
 import numpy as np
@@ -36,9 +46,40 @@ def main():
                     help="max queue wait before admission")
     ap.add_argument("--degrade", action="store_true",
                     help="enable the graceful-degradation ladder")
+    ap.add_argument("--listen", action="store_true",
+                    help="serve live HTTP clients (POST /generate, SSE "
+                         "streaming) instead of the synthetic workload")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080)
+    ap.add_argument("--max-queue", type=int, default=32,
+                    help="waiting-queue bound; beyond it clients get 429 + "
+                         "Retry-After")
+    ap.add_argument("--tenant-rate", type=float, default=None,
+                    help="per-tenant emitted-token quota (tokens/s)")
     args = ap.parse_args()
 
     cfg = registry.get_config(args.arch) if args.full else registry.get_smoke(args.arch)
+
+    if args.listen:
+        from repro.serving.frontdoor import FrontDoor, run_server
+        engine = ServingEngine(cfg, slots=args.slots, max_len=128,
+                               block_size=16, odin_mode=args.odin_mode,
+                               horizon=args.horizon,
+                               spec_ngram=args.spec_ngram,
+                               degrade=args.degrade)
+        fd = FrontDoor(engine, max_queue=args.max_queue,
+                       tenant_rate=args.tenant_rate, heartbeat_s=0.5)
+        print(f"listening on http://{args.host}:{args.port}/generate "
+              f"(curl -N -X POST ... -d '{{\"prompt_len\": 32}}'); "
+              f"SIGTERM/SIGINT drain gracefully")
+        try:
+            asyncio.run(run_server(fd, args.host, args.port, vocab=cfg.vocab))
+        except KeyboardInterrupt:
+            pass
+        s = engine.summary()
+        print(f"drained: terminal {s['terminal']}, front door {fd.summary()}")
+        return
+
     spec = dataclasses.replace(SCENARIOS[args.scenario], n_requests=args.requests)
     max_len = max(spec.prompt_buckets) + spec.shared_prefix + max(spec.gen_buckets)
     max_len = -(-max_len // 16) * 16

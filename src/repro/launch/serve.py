@@ -21,6 +21,9 @@ Usage:
   # record a dispatch/lifecycle timeline, open trace.json in ui.perfetto.dev:
   PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b --smoke \
       --scenario mixed --trace-out trace.json
+  # expose the engine as a streaming HTTP front door (SSE, 429 on overload):
+  PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b --smoke \
+      --listen --port 8080 --max-queue 32 --tenant-rate 50
 """
 from __future__ import annotations
 
@@ -41,7 +44,47 @@ from repro.nn import module as nnmod
 from repro.serving import (SCENARIOS, FaultPlan, Request, ServingEngine,
                            Tracer, make_requests)
 
-__all__ = ["serve", "serve_static", "main"]
+__all__ = ["serve", "serve_static", "serve_listen", "main"]
+
+
+def serve_listen(cfg, *, host: str = "127.0.0.1", port: int = 8080,
+                 slots: int = 4, max_len: int = 128, block_size: int = 16,
+                 max_queue: int = 64, tenant_rate: float | None = None,
+                 tenant_burst: float | None = None,
+                 heartbeat_s: float | None = None, params=None,
+                 verbose: bool = True, **engine_kwargs):
+    """Expose the engine as a streaming HTTP front door.
+
+    ``POST /generate`` with ``{"prompt": [ids]}`` (or ``{"prompt_len": n}``
+    for a random prompt) streams token/heartbeat/done events as SSE; an
+    overloaded queue or an over-quota tenant gets ``429`` + ``Retry-After``,
+    submissions during shutdown get ``503``.  SIGTERM/SIGINT drain
+    gracefully: in-flight streams flush, then the engine summary prints.
+    Blocks until shutdown; returns the final summary.
+    """
+    import asyncio
+
+    from repro.serving.frontdoor import FrontDoor, run_server
+
+    engine = ServingEngine(cfg, slots=slots, max_len=max_len,
+                           block_size=block_size, params=params,
+                           **engine_kwargs)
+    fd = FrontDoor(engine, max_queue=max_queue, tenant_rate=tenant_rate,
+                   tenant_burst=tenant_burst, heartbeat_s=heartbeat_s)
+    if verbose:
+        print(f"[serve] front door on http://{host}:{port}/generate  "
+              f"(slots={slots}, max_len={max_len}, queue≤{max_queue}"
+              + (f", tenant quota {tenant_rate}/s" if tenant_rate else "")
+              + ")  SIGTERM drains gracefully")
+    try:
+        asyncio.run(run_server(fd, host, port, vocab=cfg.vocab))
+    except KeyboardInterrupt:
+        pass
+    summary = engine.summary()
+    if verbose:
+        print(f"[serve] drained: terminal {summary['terminal']}, "
+              f"front door {fd.summary()}")
+    return summary
 
 
 def serve_static(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
@@ -198,6 +241,26 @@ def main():
                     help="seeded fault-injection plan (JSON, see repro.serving"
                          ".faults.FaultPlan); scenario mode only — faults are "
                          "a test instrument, not a serving feature")
+    # streaming front-door mode (ignores --batch/--scenario; clients bring
+    # their own prompts over HTTP)
+    ap.add_argument("--listen", action="store_true",
+                    help="serve POST /generate as an SSE token stream through "
+                         "the asyncio front door (429 + Retry-After on "
+                         "overload, 503 while draining, SIGTERM drains)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080)
+    ap.add_argument("--max-queue", type=int, default=64,
+                    help="waiting-queue bound before typed 429 rejection")
+    ap.add_argument("--max-len", type=int, default=None,
+                    help="per-request prompt+gen cap for --listen "
+                         "(default: --prompt-len + --gen)")
+    ap.add_argument("--tenant-rate", type=float, default=None,
+                    help="per-tenant emitted-token quota (tokens/s; off by "
+                         "default)")
+    ap.add_argument("--tenant-burst", type=float, default=None,
+                    help="per-tenant bucket burst (default: --tenant-rate)")
+    ap.add_argument("--heartbeat-ms", type=float, default=None,
+                    help="idle-stream heartbeat period")
     args = ap.parse_args()
     if args.fault_plan and not args.scenario:
         ap.error("--fault-plan requires --scenario (fault injection is bench/"
@@ -212,6 +275,30 @@ def main():
               "queue_timeout_s": (args.queue_timeout_ms / 1e3
                                   if args.queue_timeout_ms is not None else None),
               "degrade": args.degrade}
+
+    if args.listen:
+        block_size = args.block_size or 16
+        max_len = args.max_len or (args.prompt_len + args.gen)
+        max_len = -(-max_len // block_size) * block_size
+        serve_listen(
+            cfg, host=args.host, port=args.port,
+            slots=args.slots or 4, max_len=max_len, block_size=block_size,
+            max_queue=args.max_queue, tenant_rate=args.tenant_rate,
+            tenant_burst=args.tenant_burst,
+            heartbeat_s=(args.heartbeat_ms / 1e3
+                         if args.heartbeat_ms is not None else None),
+            n_blocks=args.kv_blocks, swap_blocks=args.swap_blocks,
+            prefill_chunk=args.chunk, seed=args.seed,
+            odin_mode=args.odin_mode, paged=not args.no_paged,
+            prefix_sharing=False if args.no_prefix_sharing else None,
+            horizon=args.horizon, spec_ngram=args.spec_ngram,
+            eos_id=args.eos_id, temperature=args.temperature,
+            top_k=args.top_k, sample_seed=args.sample_seed, **obs_kw)
+        if tracer is not None:
+            tracer.export(args.trace_out)
+            print(f"[serve] wrote {len(tracer)} trace events to "
+                  f"{args.trace_out} ({tracer.dropped_events} dropped)")
+        return
 
     if args.scenario:
         if args.fault_plan:

@@ -11,6 +11,8 @@ The serving substrate over the repo's compiled prefill/decode steps:
 * :mod:`repro.serving.workload`  — synthetic open-loop arrival generators
 * :mod:`repro.serving.faults`    — seeded fault-injection plans + typed errors
 * :mod:`repro.serving.degrade`   — load-shedding ladder (graceful degradation)
+* :mod:`repro.serving.frontdoor` — asyncio streaming front door (backpressure,
+  per-tenant QoS, typed rejections, SSE server)
 
 Quick start::
 
@@ -29,7 +31,10 @@ from repro.serving.degrade import (DEGRADE_LEVELS, DegradationController,
                                    DegradeConfig)
 from repro.serving.engine import ServingEngine
 from repro.serving.faults import (FAULT_SITES, EngineStallError, FaultEvent,
-                                  FaultPlan, SwapCopyError)
+                                  FaultPlan, Overloaded, ShuttingDown,
+                                  SwapCopyError)
+from repro.serving.frontdoor import (DoneEvent, FrontDoor, HeartbeatEvent,
+                                     TokenBucket, TokenEvent, run_server)
 from repro.serving.metrics import EngineStats, OdinCostModel, summarize
 from repro.serving.scheduler import (TERMINAL_STATES, PrefixCache, PrefixGrant,
                                      Request, RequestState, Scheduler,
@@ -46,7 +51,9 @@ __all__ = [
     "PrefixCache", "PrefixGrant",
     "Request", "RequestState", "Scheduler", "StepPlan", "TERMINAL_STATES",
     "FaultPlan", "FaultEvent", "FAULT_SITES",
-    "EngineStallError", "SwapCopyError",
+    "EngineStallError", "SwapCopyError", "Overloaded", "ShuttingDown",
+    "FrontDoor", "TokenBucket", "TokenEvent", "HeartbeatEvent", "DoneEvent",
+    "run_server",
     "DegradationController", "DegradeConfig", "DEGRADE_LEVELS",
     "Tracer", "NullTracer", "NULL_TRACER", "LogHistogram", "MetricsRegistry",
     "chrome_trace", "validate_chrome_trace",

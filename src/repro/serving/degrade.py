@@ -69,10 +69,20 @@ class DegradationController:
         self._hot = 0
         self._cool = 0
         self._est_step_time = 0.0
+        # transition log for snapshot(): bounded so a thrash-prone config
+        # cannot grow the summary without limit (oldest entries drop)
+        self.history: list = []
+        self._history_cap = 64
 
     @property
     def name(self) -> str:
         return DEGRADE_LEVELS[self.level]
+
+    def _log_transition(self, now: float, direction: str) -> None:
+        self.history.append({"t": now, "level": self.level,
+                             "name": self.name, "dir": direction})
+        if len(self.history) > self._history_cap:
+            del self.history[0]
 
     def observe(self, now: float, *, pool_frac: float, queue_depth: int,
                 churn: int, accept_rate: Optional[float] = None,
@@ -102,6 +112,7 @@ class DegradationController:
                 self.level += 1
                 self.transitions += 1
                 self._hot = 0
+                self._log_transition(now, "up")
                 if self.tracer.enabled:
                     self.tracer.instant(
                         "degrade", "scheduler", "scheduler", ts=now,
@@ -115,6 +126,7 @@ class DegradationController:
                 self.level -= 1
                 self.transitions += 1
                 self._cool = 0
+                self._log_transition(now, "down")
                 if self.tracer.enabled:
                     self.tracer.instant(
                         "restore", "scheduler", "scheduler", ts=now,
@@ -145,6 +157,15 @@ class DegradationController:
         step = max(self._est_step_time, 1e-3)
         return now + self.cfg.retry_after_steps * step
 
-    def snapshot(self) -> dict:
+    def snapshot(self, now: Optional[float] = None) -> dict:
+        """Operator-facing state: level, transition history, and — when
+        admissions are currently denied and ``now`` is given — the live
+        ``retry_after_s`` hint in *relative* seconds (the same number the
+        front door returns to rejected clients), else None."""
+        retry = None
+        if now is not None and self.deny_admission:
+            retry = max(0.0, self.retry_after(now) - now)
         return {"level": self.level, "name": self.name,
-                "transitions": self.transitions}
+                "transitions": self.transitions,
+                "history": list(self.history),
+                "retry_after_s": retry}

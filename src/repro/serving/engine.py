@@ -70,7 +70,8 @@ from repro.nn.attention import POOL_LEAVES
 from repro.serving.blocks import (SEQ_LEAVES, BlockPool, PagedKVStore,
                                   _leaf_name)
 from repro.serving.degrade import DegradationController, DegradeConfig
-from repro.serving.faults import EngineStallError, FaultPlan, SwapCopyError
+from repro.serving.faults import (EngineStallError, FaultPlan, ShuttingDown,
+                                  SwapCopyError)
 from repro.serving.metrics import EngineStats, OdinCostModel, summarize
 from repro.serving.scheduler import (PrefixCache, PrefixGrant, Request,
                                      RequestState, Scheduler)
@@ -350,6 +351,10 @@ class ServingEngine:
             self.degrade = DegradationController(degrade, tracer=self.tracer)
         else:
             self.degrade = degrade
+        # shutdown latch: drain() (or the front door's SIGTERM handler) sets
+        # it, after which late submits get a typed ShuttingDown rejection
+        # instead of queueing behind a loop that will never admit them
+        self.draining = False
         # only requests carrying lifecycle fields are scanned per step, so
         # a workload without deadlines/cancellations pays nothing here
         self._watched: List[Request] = []
@@ -474,13 +479,20 @@ class ServingEngine:
             req.eos = True                 # first codebook, same as on-device
         if req.t_first_token is None:
             req.t_first_token = now
-            self.metrics.observe("ttft_s", max(0.0, now - req.arrival))
+            ttft = max(0.0, now - req.arrival)
+            self.metrics.observe("ttft_s", ttft)
+            if req.tenant is not None:
+                self.metrics.observe(f"ttft_s/{req.tenant}", ttft)
         if self.on_token is not None:
             self.on_token(req, tok, now)
 
     # ------------------------------------------------------------- lifecycle
 
     def submit(self, req: Request) -> None:
+        if self.draining:
+            raise ShuttingDown(
+                f"request {req.rid}: engine is draining — submissions after "
+                f"drain() begin get a typed rejection, never a silent hang")
         if req.extras and req.prompt_len + req.max_new - 1 > self.chunk:
             # extras overlay only works in a single prefill chunk, and a
             # recompute preemption can re-prefill up to prompt+max_new-1
@@ -503,26 +515,30 @@ class ServingEngine:
             # the flow "s" anchor: every later lifecycle event for this rid
             # hangs off this arrow chain (admit → prefill → … → complete)
             self.tracer.flow_event("s", "request", "scheduler", req.rid, ts=t)
+            args = {"rid": req.rid, "prompt_tokens": req.prompt_len,
+                    "max_new": req.max_new}
+            if req.tenant is not None:
+                args["tenant"] = req.tenant
             self.tracer.instant("queued", "lifecycle", "scheduler", ts=t,
-                                args={"rid": req.rid,
-                                      "prompt_tokens": req.prompt_len,
-                                      "max_new": req.max_new},
-                                flow=req.rid)
+                                args=args, flow=req.rid)
 
     def _complete(self, req: Request, now: float) -> None:
         slot = req.slot
         self.sched.complete(req, now)
         self._done.append(req)
         if req.t_first_token is not None and req.n_generated > 1:
-            self.metrics.observe(
-                "tpot_s", max(0.0, (now - req.t_first_token) / (req.n_generated - 1)))
+            tpot = max(0.0, (now - req.t_first_token) / (req.n_generated - 1))
+            self.metrics.observe("tpot_s", tpot)
+            if req.tenant is not None:
+                self.metrics.observe(f"tpot_s/{req.tenant}", tpot)
         if self.tracer.enabled:
             track = self._slot_track(slot) if slot >= 0 else "scheduler"
+            args = {"rid": req.rid, "generated_tokens": req.n_generated,
+                    "eos": bool(req.eos)}
+            if req.tenant is not None:
+                args["tenant"] = req.tenant
             self.tracer.instant("complete", "lifecycle", track, ts=now,
-                                args={"rid": req.rid,
-                                      "generated_tokens": req.n_generated,
-                                      "eos": bool(req.eos)},
-                                flow=req.rid)
+                                args=args, flow=req.rid)
             self.tracer.flow_event("f", "request", track, req.rid, ts=now)
 
     _TERMINAL_EVENT = {RequestState.TIMEOUT: "timeout",
@@ -545,11 +561,13 @@ class ServingEngine:
             self.stats.failed += 1
         if self.tracer.enabled:
             track = self._slot_track(slot) if slot >= 0 else "scheduler"
+            args = {"rid": req.rid, "reason": reason,
+                    "generated_tokens": req.n_generated}
+            if req.tenant is not None:
+                args["tenant"] = req.tenant
             self.tracer.instant(
                 self._TERMINAL_EVENT[state], "lifecycle", track, ts=now,
-                args={"rid": req.rid, "reason": reason,
-                      "generated_tokens": req.n_generated},
-                flow=req.rid)
+                args=args, flow=req.rid)
             self.tracer.flow_event("f", "request", track, req.rid, ts=now)
 
     def cancel(self, rid: int, reason: str = "client") -> bool:
@@ -650,7 +668,9 @@ class ServingEngine:
         """Graceful shutdown: cancel every request that never started
         (reason "drain"), then drive the loop until all in-flight work —
         running, swapped, and preempted-but-admitted requests — finishes.
+        Once draining, late :meth:`submit` calls raise :class:`ShuttingDown`.
         Returns the final summary."""
+        self.draining = True
         now = self._now()
         for _, _, req in list(self.sched.waiting):
             if req.t_admit is None:
@@ -1263,6 +1283,10 @@ class ServingEngine:
         self.metrics.flush(self._now(), self._counter_snapshot())
         out = summarize(done, self.stats, self.cost_model,
                         registry=self.metrics)
+        if self.degrade is not None:
+            # full controller state: transition history plus the live
+            # retry_after_s hint (None unless admissions are denied now)
+            out["degradation"].update(self.degrade.snapshot(self._now()))
         if self.fault_plan is not None:
             out["fault_plan"] = self.fault_plan.snapshot()
         return out

@@ -40,6 +40,8 @@ __all__ = [
     "FaultPlan",
     "SwapCopyError",
     "EngineStallError",
+    "Overloaded",
+    "ShuttingDown",
 ]
 
 FAULT_SITES = ("alloc", "swap_out", "swap_in", "nan_logits", "clock_skew")
@@ -64,6 +66,32 @@ class EngineStallError(RuntimeError):
     def __init__(self, message: str, summary: Optional[dict] = None):
         super().__init__(message)
         self.summary = summary
+
+
+class Overloaded(RuntimeError):
+    """Typed admission rejection (the HTTP-429 shape).
+
+    Raised by the front door instead of buffering unboundedly: the request
+    queue is full, the degradation ladder reached ``admit_deny``, or the
+    tenant's token bucket is exhausted.  ``retry_after`` is the structured
+    backoff hint in *relative seconds* (None when no estimate exists) and
+    ``tenant`` names the quota that rejected, when one did.
+    """
+
+    def __init__(self, message: str, retry_after: Optional[float] = None,
+                 tenant: Optional[str] = None):
+        super().__init__(message)
+        self.retry_after = retry_after
+        self.tenant = tenant
+
+
+class ShuttingDown(Overloaded):
+    """Typed late-submit rejection while the engine drains (HTTP-503 shape).
+
+    A subclass of :class:`Overloaded` so one except-clause covers both
+    rejection shapes; ``retry_after`` is usually None — the process is going
+    away, not backing off.
+    """
 
 
 @dataclass(frozen=True)

@@ -169,6 +169,7 @@ def summarize(requests, stats: EngineStats, cost: Optional[OdinCostModel] = None
             tpots.append(tpot)
         rec = {
             "rid": r.rid,
+            "tenant": r.tenant,
             "arrival_s": r.arrival,
             "prompt_tokens": r.prompt_len,
             "generated_tokens": r.n_generated,
@@ -250,6 +251,37 @@ def summarize(requests, stats: EngineStats, cost: Optional[OdinCostModel] = None
         # (tests/test_trace.py), so new counters surface here automatically
         "engine_stats": dataclasses.asdict(stats),
     }
+    if any(r.tenant is not None for r in requests):
+        # per-tenant QoS view: the accept-aware bill (emitted tokens), the
+        # terminal matrix, latency percentiles and — when a cost model is
+        # attached — the ODIN energy split per tenant.  Only materialized on
+        # tenanted workloads, so untenanted summaries keep their old schema.
+        tenants: Dict[str, Dict] = {}
+        for r in sorted(requests, key=lambda r: r.rid):
+            key = r.tenant if r.tenant is not None else "_untenanted"
+            t = tenants.setdefault(key, {
+                "requests": 0, "generated_tokens": 0, "prefill_tokens": 0,
+                "terminal": {"done": 0, "timeout": 0, "cancelled": 0,
+                             "failed": 0, "live": 0},
+                "_ttfts": [], "_tpots": [], "energy_mj": 0.0})
+            t["requests"] += 1
+            t["generated_tokens"] += r.n_generated
+            t["prefill_tokens"] += r.n_prefill_tokens
+            state = r.state.value
+            t["terminal"][state if state in t["terminal"] else "live"] += 1
+            if r.t_first_token is not None:
+                t["_ttfts"].append(r.t_first_token - r.arrival)
+                if r.t_done is not None and r.n_generated > 1:
+                    t["_tpots"].append(
+                        (r.t_done - r.t_first_token) / (r.n_generated - 1))
+            if cost is not None:
+                rows = (r.n_prefill_tokens + max(0, r.n_generated - 1)
+                        + getattr(r, "spec_overhead_rows", 0))
+                t["energy_mj"] += cost.energy_mj(rows)
+        for t in tenants.values():
+            t["ttft_s"] = percentiles(t.pop("_ttfts"))
+            t["tpot_s"] = percentiles(t.pop("_tpots"))
+        out["tenants"] = tenants
     if registry is not None:
         out["metrics"] = registry.summary()
     if cost is not None:

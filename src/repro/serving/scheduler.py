@@ -106,6 +106,10 @@ class Request:
     max_new: int
     arrival: float = 0.0
     extras: Optional[dict] = None
+    # multi-tenant QoS identity: threaded through lifecycle/decision trace
+    # events, per-request ODIN bills and the windowed per-tenant TTFT/TPOT
+    # metrics; None ⇒ untenanted (single-tenant deployments pay nothing)
+    tenant: Optional[str] = None
     # absolute engine-clock instant after which the request times out (None
     # ⇒ no deadline); queue_timeout is relative to arrival and applies only
     # while the request has never been admitted (t_admit is None); cancel_at
@@ -445,6 +449,11 @@ class Scheduler:
         # False stops registering new prompt chains (retention released)
         self.admission_hold: Optional[float] = None
         self.prefix_retain: bool = True
+        # preemption-victim policy hook: a key function over running requests
+        # (max wins).  None keeps the default youngest-first ``(arrival,
+        # rid)`` order; the front door installs a QoS-aware key that ranks
+        # over-quota tenants ahead of everyone regardless of age.
+        self.victim_key: Optional[callable] = None
 
     # -- queries ------------------------------------------------------------
 
@@ -521,10 +530,12 @@ class Scheduler:
     # -- planning -----------------------------------------------------------
 
     def _victim(self) -> Optional[Request]:
-        """Youngest running request (latest arrival breaks toward higher rid)."""
+        """Preemption victim: youngest running request (latest arrival breaks
+        toward higher rid), unless a ``victim_key`` policy hook reorders."""
         if not self.running:
             return None
-        return max(self.running.values(), key=lambda r: (r.arrival, r.rid))
+        key = self.victim_key or (lambda r: (r.arrival, r.rid))
+        return max(self.running.values(), key=key)
 
     def _kept_prefix(self, req: Request) -> int:
         """Leading device blocks a swap preemption may keep claims on: fully
@@ -575,11 +586,12 @@ class Scheduler:
             plan.preempt.append((req, "recompute", None, old_slot, dev_ids))
         if self.tracer.enabled:
             mode = "swap" if swap_ids is not None else "recompute"
-            self.tracer.instant(
-                f"preempt-{mode}", "scheduler", "scheduler",
-                args={"rid": req.rid, "slot": old_slot, "mode": mode,
-                      "blocks": len(dev_ids), "kept_blocks": kept},
-                flow=req.rid)
+            args = {"rid": req.rid, "slot": old_slot, "mode": mode,
+                    "blocks": len(dev_ids), "kept_blocks": kept}
+            if req.tenant is not None:
+                args["tenant"] = req.tenant
+            self.tracer.instant(f"preempt-{mode}", "scheduler", "scheduler",
+                                args=args, flow=req.rid)
 
     def _downgrade_to_recompute(self, req: Request) -> None:
         """Convert a swapped request that can never resume (pool fragmented
@@ -811,15 +823,16 @@ class Scheduler:
             plan.admit.append(req)
             if self.tracer.enabled:
                 shared = grant.shared_blocks if grant is not None else 0
-                self.tracer.instant(
-                    "admit", "scheduler", "scheduler", ts=now,
-                    args={"rid": req.rid, "slot": req.slot,
-                          "blocks": len(table),
-                          "marginal_blocks": len(table) - shared
-                          - (1 if grant is not None and grant.fork else 0),
-                          "shared_blocks": shared,
-                          "prefix_hit_tokens": grant.start if grant else 0},
-                    flow=req.rid)
+                args = {"rid": req.rid, "slot": req.slot,
+                        "blocks": len(table),
+                        "marginal_blocks": len(table) - shared
+                        - (1 if grant is not None and grant.fork else 0),
+                        "shared_blocks": shared,
+                        "prefix_hit_tokens": grant.start if grant else 0}
+                if req.tenant is not None:
+                    args["tenant"] = req.tenant
+                self.tracer.instant("admit", "scheduler", "scheduler",
+                                    ts=now, args=args, flow=req.rid)
 
         return plan
 

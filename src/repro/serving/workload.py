@@ -52,6 +52,10 @@ class WorkloadSpec:
     queue_timeout: Optional[float] = None
     cancel_rate: float = 0.0
     cancel_after: float = 0.5
+    # multi-tenant traffic: >0 assigns tenant ids "t0".."t{n-1}" round-robin
+    # by request index.  The assignment consumes NO rng draws, so enabling
+    # tenants never perturbs the token streams an existing seed produces.
+    n_tenants: int = 0
 
 
 # Scenario presets (lengths are smoke-scale; scale up for full configs).
@@ -128,6 +132,10 @@ def make_requests(cfg: ModelConfig, spec: WorkloadSpec, seed: int = 0,
                 [systems[i % spec.share_groups], prompt], axis=-1)
         out.append(Request(rid=start_rid + i, prompt=prompt,
                            max_new=int(gens[i]), arrival=float(arrivals[i])))
+    if spec.n_tenants:
+        # round-robin by index, no rng: seeds stay byte-identical
+        for i, req in enumerate(out):
+            req.tenant = f"t{i % spec.n_tenants}"
     # failure-semantics draws come last: legacy seeds consume an identical
     # rng stream, so streams stay byte-identical with these features off
     if spec.deadline_buckets:

@@ -33,7 +33,8 @@ from test_serving_props import PoolInvariantDriver, _scenario_from_rng
 from repro.serving import (DEGRADE_LEVELS, FAULT_SITES, SCENARIOS,
                            DegradationController, DegradeConfig,
                            EngineStallError, FaultEvent, FaultPlan, Request,
-                           RequestState, ServingEngine, make_requests)
+                           RequestState, ServingEngine, ShuttingDown,
+                           make_requests)
 from repro.serving.blocks import BlockPool, PagedKVStore
 
 CHAOS_DIR = pathlib.Path(__file__).parent / ".chaos"
@@ -475,3 +476,62 @@ def test_engine_cancel_deadline_parity_across_archs(arch):
     assert reqs[1].state in (RequestState.TIMEOUT, RequestState.DONE)
     assert streams[2] == base[2], f"{arch}: bystander stream diverged"
     _conserved(s, 3)
+
+
+def test_engine_drain_races_concurrent_cancels(phi4_setup):
+    """drain() racing client cancels: cancel a running and a queued request
+    just before draining, then drain.  Every request ends in exactly one
+    terminal state (no double-finalize, no hang), late submissions get a
+    typed ShuttingDown, and all pool blocks return."""
+    cfg, params = phi4_setup
+    spec = mixed_spec(6, gen_buckets=(24,))
+    reqs = make_requests(cfg, spec, seed=5)
+    eng = ServingEngine(cfg, slots=2, max_len=48, block_size=8, params=params)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(200):
+        eng.step()
+        if any(r.n_generated >= 2 for r in eng.sched.running.values()):
+            break
+    running_rid = next(iter(eng.sched.running.values())).rid
+    queued_rid = next(r.rid for _, _, r in eng.sched.waiting
+                      if r.t_admit is None)
+    assert eng.cancel(running_rid, reason="client")
+    assert eng.cancel(queued_rid, reason="client")
+    s = eng.drain()
+    # the race window: drain's own sweep must not re-finalize the two
+    # already-cancelled requests, and cancel-after-drain stays idempotent
+    assert not eng.cancel(running_rid)
+    assert not eng.cancel(queued_rid)
+    _conserved(s, 6)
+    assert s["terminal"]["cancelled"] >= 2
+    assert s["terminal"]["done"] >= 1       # in-flight work still flushed
+    for r in reqs:
+        assert r.terminal and r.t_done is not None
+    # late submit after drain: typed rejection, never a silent hang
+    late = make_requests(cfg, mixed_spec(1), seed=77, start_rid=500)[0]
+    with pytest.raises(ShuttingDown):
+        eng.submit(late)
+    assert late.rid not in eng._by_rid
+    cache = eng.sched.prefix_cache
+    assert eng.pool.used_blocks == (len(cache.held_blocks())
+                                    if cache is not None else 0)
+    assert len(eng.sched.free_slots) == 2
+
+
+def test_engine_drain_late_submit_summary_conserved(phi4_setup):
+    """ShuttingDown is raised before any engine state is allocated, so a
+    rejected late submit never shows up in the terminal accounting."""
+    cfg, params = phi4_setup
+    reqs = make_requests(cfg, mixed_spec(2), seed=5)
+    eng = ServingEngine(cfg, slots=2, max_len=48, block_size=8, params=params)
+    for r in reqs:
+        eng.submit(r)
+    s = eng.drain()
+    _conserved(s, 2)
+    late = make_requests(cfg, mixed_spec(1), seed=78, start_rid=600)[0]
+    with pytest.raises(ShuttingDown):
+        eng.submit(late)
+    s2 = eng.summary()
+    _conserved(s2, 2)                       # unchanged: no phantom request
+    assert isinstance(ShuttingDown("x"), RuntimeError)
