@@ -64,6 +64,13 @@ is typed and carries a ``retry_after`` hint.  ``--check-frontdoor`` gates
 on event-stream tokens bit-identical to the bare engine AND front-door-on
 decode throughput ≥ 0.95× bare AND fully-typed storm rejections.
 
+The **mixed-dispatch cell** replays the bursty scenario through the fused
+mixed prefill+decode dispatch (token-budget packed tiles) vs the alternating
+separate-launch baseline, warmup + best-of-3 per mode.  ``--check-mixed``
+gates on bit-identical greedy streams AND burst p99 TPOT ≤ 0.6× the
+alternating baseline — the fused tile must keep decode emitting through
+admission bursts.
+
 Results merge into ``BENCH_serving.json`` (section "serving") next to the
 kernel microbench so the perf trajectory is machine-readable across PRs.
 
@@ -598,9 +605,17 @@ def frontdoor_cell(cfg, base_requests, slots: int, params=None,
                         arrival=0.0) for r in base_requests]
 
     def make_engine():
+        # mixed dispatch pinned off: this cell isolates async-streaming
+        # overhead via decode_tokens/decode_time deltas, and mixed tiles
+        # bill decode rows into walls shared with prefill rows — the bare
+        # side (all arrivals before run()) and the front-door side
+        # (submits staggered across event-loop turns) would then pack
+        # different tiles and the attribution, not the streaming layer,
+        # would move the ratio.  The mixed_dispatch cell gates mixed-on
+        # behavior on end-to-end inter-token gaps instead.
         engine = ServingEngine(cfg, slots=slots, max_len=max_len,
                                block_size=block_size, params=params,
-                               paged=True, horizon=4)
+                               paged=True, horizon=4, mixed=False)
         engine.run(fresh(0))                       # warmup: compile grants
         return engine
 
@@ -697,13 +712,126 @@ def frontdoor_cell(cfg, base_requests, slots: int, params=None,
     return cell
 
 
+def mixed_dispatch_cell(cfg, slots: int, params=None, block_size: int = 16,
+                        n_requests: int = 16, repeats: int = 3,
+                        verbose: bool = True):
+    """Fused mixed prefill+decode dispatch vs alternating separate launches
+    on a bursty arrival stream.
+
+    The pathology mixed dispatch removes: with separate launches, every
+    admission burst runs whole prefill-chunk dispatches during which no
+    in-flight decode emits a token, so decode inter-token gaps — TPOT —
+    spike at each burst.  The fused tile packs decode rows into the SAME
+    dispatch as the prefill chunks (token-budget packed, decode-priority),
+    so streams keep emitting through bursts and burst-p99 TPOT collapses
+    toward the steady-state gap.
+
+    Protocol: the ``bursty`` scenario tuned to chunked-prefill pressure
+    (long prompts, short generations, burst arrivals replayed on the wall
+    clock so admissions land while earlier requests are mid-decode), one
+    warmup pass per engine (compiles the tile shapes), then ``repeats``
+    measured passes keeping the best (lowest) per-run p99 TPOT — the 99th
+    percentile over inter-token gaps — and the best decode tok/s.  Greedy
+    streams must be bit-identical across reps AND across modes — the fused
+    tile is a scheduling change, never a numerics change.
+    """
+    import dataclasses as _dc
+
+    from repro.serving import SCENARIOS
+
+    # the bursty scenario tuned to the chunked-prefill regime: long prompts
+    # against short generations at an arrival rate that lands bursts while
+    # earlier requests are mid-decode — every decode window overlaps an
+    # admission, so the stall (or its absence) dominates per-request TPOT
+    spec = _dc.replace(SCENARIOS["bursty"], n_requests=n_requests, rate=30.0,
+                       prompt_buckets=(96,), gen_buckets=(8, 16),
+                       gen_weights=(0.5, 0.5))
+    chunk = 16
+    base_requests = make_requests(cfg, spec, seed=17)
+    spec_max = max(r.prompt_len + r.max_new for r in base_requests)
+    max_len = -(-spec_max // block_size) * block_size
+
+    def fresh(rid0):
+        return [Request(rid=rid0 + r.rid, prompt=r.prompt, max_new=r.max_new,
+                        arrival=r.arrival) for r in base_requests]
+
+    def one(mixed: bool):
+        # per-token emit timestamps: burst-p99 TPOT is the 99th percentile
+        # over *inter-token gaps* (the serving-benchmark ITL convention) —
+        # a per-request mean would smear each admission stall over the
+        # request's whole life and hide exactly the spike the fused tile
+        # removes
+        emits = {}
+
+        def on_token(req, tok, now):
+            emits.setdefault(req.rid, []).append(now)
+
+        # prefix sharing off: repeated passes reuse the same prompts, and
+        # resident chains would erase the very prefill work whose dispatch
+        # scheduling this cell measures.  Both modes chunk prefill at the
+        # same small size — with chunk = max_len a whole admission is one
+        # dispatch in either mode and the cell measures nothing.
+        engine = ServingEngine(cfg, slots=slots, max_len=max_len,
+                               block_size=block_size, params=params,
+                               paged=True, mixed=mixed, prefix_sharing=False,
+                               prefill_chunk=chunk, on_token=on_token)
+        engine.run(fresh(0))                   # warmup: compile tile shapes
+        st = engine.stats
+        best_p99, best_tps, streams = None, 0.0, []
+        for rep in range(max(1, repeats)):
+            emits.clear()
+            toks0, time0 = st.decode_tokens, st.decode_time
+            reqs = fresh(10_000 * (rep + 1))
+            engine.run(reqs)
+            gaps = [b - a for ts in emits.values()
+                    for a, b in zip(ts, ts[1:])]   # TTFT gap excluded
+            p99 = float(np.percentile(np.asarray(gaps, np.float64), 99))
+            best_p99 = p99 if best_p99 is None else min(best_p99, p99)
+            best_tps = max(best_tps, (st.decode_tokens - toks0)
+                           / max(st.decode_time - time0, 1e-9))
+            streams.append(tuple(
+                tuple(tuple(np.asarray(t).ravel().tolist()) for t in r.generated)
+                for r in sorted(reqs, key=lambda r: r.rid)))
+        return {"tpot_p99_s": best_p99, "tokens_per_s": best_tps,
+                "mixed_dispatches": st.mixed_dispatches,
+                "mixed_decode_rows": st.mixed_decode_rows,
+                "mixed_prefill_rows": st.mixed_prefill_rows}, streams
+
+    sep, sep_streams = one(False)
+    fused, fused_streams = one(True)
+    cell = {
+        "slots": slots,
+        "n_requests": n_requests,
+        "tokens_match": bool(all(s == sep_streams[0]
+                                 for s in sep_streams + fused_streams)),
+        "tpot_p99_s": {"separate": sep["tpot_p99_s"],
+                       "mixed": fused["tpot_p99_s"]},
+        "tpot_p99_ratio": fused["tpot_p99_s"] / max(sep["tpot_p99_s"], 1e-12),
+        "tokens_per_s": {"separate": sep["tokens_per_s"],
+                         "mixed": fused["tokens_per_s"]},
+        "mixed_dispatches": fused["mixed_dispatches"],
+        "mixed_decode_rows": fused["mixed_decode_rows"],
+        "mixed_prefill_rows": fused["mixed_prefill_rows"],
+    }
+    if verbose:
+        print(f"mixed dispatch: burst p99 TPOT "
+              f"{sep['tpot_p99_s']*1e3:7.1f} ms separate → "
+              f"{fused['tpot_p99_s']*1e3:7.1f} ms fused "
+              f"({cell['tpot_p99_ratio']:.2f}×)  "
+              f"{fused['mixed_dispatches']} mixed dispatches "
+              f"({fused['mixed_decode_rows']} decode + "
+              f"{fused['mixed_prefill_rows']} prefill rows)  "
+              f"tokens_match={cell['tokens_match']}")
+    return cell
+
+
 def run(verbose: bool = True, n_requests: int = 16, slots_sweep=(2, 4),
         rates=(float("inf"),), arch: str = "phi4-mini-3.8b",
         json_path=None, bench_json=None, check: bool = False,
         check_paged: bool = False, check_horizon: bool = False,
         check_prefix: bool = False, check_spec: bool = False,
         check_trace: bool = False, check_robust: bool = False,
-        check_frontdoor: bool = False,
+        check_frontdoor: bool = False, check_mixed: bool = False,
         trace_out=None, horizons=(1, 4, 16), spec_ks=(0, 2, 4)):
     block_size = 16
     cfg = registry.get_smoke(arch)
@@ -803,6 +931,9 @@ def run(verbose: bool = True, n_requests: int = 16, slots_sweep=(2, 4),
     out["frontdoor"] = frontdoor_cell(cfg, base_requests, max(slots_sweep),
                                       params=params, block_size=block_size,
                                       verbose=verbose)
+    out["mixed_dispatch"] = mixed_dispatch_cell(
+        cfg, max(slots_sweep), params=params, block_size=block_size,
+        n_requests=n_requests, verbose=verbose)
     if verbose:
         print(f"best decode-throughput speedup over static batching: "
               f"{out['best_speedup']:.2f}×; paged vs dense engine: "
@@ -918,6 +1049,17 @@ def run(verbose: bool = True, n_requests: int = 16, slots_sweep=(2, 4),
             raise SystemExit(
                 "burst-storm rejections were not all typed Overloaded with "
                 "a retry_after hint — the 429 contract is broken")
+    if check_mixed:
+        mx = out["mixed_dispatch"]
+        if not mx["tokens_match"]:
+            raise SystemExit(
+                "mixed-dispatch greedy streams diverge from the separate "
+                "prefill/decode launches — fused tiles must be bit-identical")
+        if mx["tpot_p99_ratio"] > 0.6:
+            raise SystemExit(
+                f"mixed-dispatch burst p99 TPOT {mx['tpot_p99_ratio']:.2f}× "
+                f"the alternating baseline > allowed 0.6× — fused tiles must "
+                f"keep decode emitting through admission bursts")
     return out
 
 
@@ -967,6 +1109,11 @@ def main():
                          "bit-identical to the bare engine, streamed decode "
                          "tok/s ≥ 0.95× bare, and burst-storm rejections are "
                          "all typed with a retry_after hint")
+    ap.add_argument("--check-mixed", action="store_true",
+                    help="exit non-zero unless fused mixed prefill+decode "
+                         "dispatch streams are bit-identical to separate "
+                         "launches AND burst p99 TPOT ≤ 0.6× the alternating "
+                         "baseline on the bursty scenario")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write the tracing cell's Chrome trace JSON artifact")
     ap.add_argument("--horizons", type=int, nargs="+", default=[1, 4, 16],
@@ -982,6 +1129,7 @@ def main():
         check_horizon=args.check_horizon, check_prefix=args.check_prefix,
         check_spec=args.check_spec, check_trace=args.check_trace,
         check_robust=args.check_robust, check_frontdoor=args.check_frontdoor,
+        check_mixed=args.check_mixed,
         trace_out=args.trace_out,
         horizons=tuple(args.horizons), spec_ks=tuple(args.spec_ks))
 

@@ -39,6 +39,12 @@ def main():
                     help="max decode steps fused into one dispatch")
     ap.add_argument("--spec-ngram", type=int, default=0, metavar="K",
                     help="n-gram self-speculative decode draft length (0 = off)")
+    ap.add_argument("--no-mixed", action="store_true",
+                    help="disable the fused mixed prefill+decode dispatch "
+                         "(auto-enabled for fully paged models)")
+    ap.add_argument("--mixed-budget", type=int, default=None,
+                    help="query-row budget per mixed dispatch "
+                         "(default: chunk + slots)")
     ap.add_argument("--odin-mode", choices=["exact", "int8", "sc"], default=None)
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="per-request deadline after arrival (TIMEOUT past it)")
@@ -64,6 +70,8 @@ def main():
         from repro.serving.frontdoor import FrontDoor, run_server
         engine = ServingEngine(cfg, slots=args.slots, max_len=128,
                                block_size=16, odin_mode=args.odin_mode,
+                               mixed=False if args.no_mixed else None,
+                               mixed_budget=args.mixed_budget,
                                horizon=args.horizon,
                                spec_ngram=args.spec_ngram,
                                degrade=args.degrade)
@@ -91,6 +99,8 @@ def main():
 
     engine = ServingEngine(cfg, slots=args.slots, max_len=max_len,
                            block_size=16, odin_mode=args.odin_mode,
+                           mixed=False if args.no_mixed else None,
+                           mixed_budget=args.mixed_budget,
                            horizon=args.horizon, spec_ngram=args.spec_ngram,
                            deadline_s=(args.deadline_ms / 1e3
                                        if args.deadline_ms is not None else None),

@@ -190,6 +190,14 @@ def main():
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="disable shared-prompt block dedup (refcounted "
                          "prefix cache; auto-enabled for fully paged models)")
+    ap.add_argument("--no-mixed", action="store_true",
+                    help="disable the fused mixed prefill+decode dispatch "
+                         "(token-budget packed tiles; auto-enabled for fully "
+                         "paged models) and fall back to separate prefill "
+                         "and decode launches")
+    ap.add_argument("--mixed-budget", type=int, default=None,
+                    help="total query-row budget of one mixed dispatch "
+                         "(default: prefill chunk + slots)")
     ap.add_argument("--horizon", type=int, default=1,
                     help="max decode steps fused into one dispatch (power-of-"
                          "two grants; 1 = per-token parity baseline)")
@@ -291,6 +299,8 @@ def main():
             prefill_chunk=args.chunk, seed=args.seed,
             odin_mode=args.odin_mode, paged=not args.no_paged,
             prefix_sharing=False if args.no_prefix_sharing else None,
+            mixed=False if args.no_mixed else None,
+            mixed_budget=args.mixed_budget,
             horizon=args.horizon, spec_ngram=args.spec_ngram,
             eos_id=args.eos_id, temperature=args.temperature,
             top_k=args.top_k, sample_seed=args.sample_seed, **obs_kw)
@@ -315,6 +325,8 @@ def main():
             seed=args.seed, odin_mode=args.odin_mode,
             paged=not args.no_paged,
             prefix_sharing=False if args.no_prefix_sharing else None,
+            mixed=False if args.no_mixed else None,
+            mixed_budget=args.mixed_budget,
             horizon=args.horizon, spec_ngram=args.spec_ngram,
             eos_id=args.eos_id,
             temperature=args.temperature,
@@ -339,6 +351,8 @@ def main():
                                  "odin_mode": args.odin_mode,
                                  "paged": not args.no_paged,
                                  "prefix_sharing": False if args.no_prefix_sharing else None,
+                                 "mixed": False if args.no_mixed else None,
+                                 "mixed_budget": args.mixed_budget,
                                  "horizon": args.horizon,
                                  "spec_ngram": args.spec_ngram,
                                  "eos_id": args.eos_id,

@@ -55,6 +55,7 @@ __all__ = [
     "init_serving_caches",
     "make_slot_prefill_step",
     "make_serving_decode_step",
+    "make_serving_mixed_step",
     "make_serving_decode_guarded",
     "make_serving_decode_horizon",
     "make_serving_spec_horizon",
@@ -388,6 +389,68 @@ def make_serving_decode_step(cfg: ModelConfig, top_k: int = 0,
         return nxt, caches
 
     return decode_step
+
+
+def make_serving_mixed_step(cfg: ModelConfig, top_k: int = 0,
+                            sample: bool = False) -> Callable:
+    """ONE dispatch carrying decode rows AND prefill-chunk rows together.
+
+    (params, caches, tokens [B,Q] (or [B,K,Q]), lengths [B], q_lens [B],
+     decode [B], active [B], tables [B,P], key, temperature)
+        → (next_tokens, last_logits [B,V] (or [B,K,V]), caches)
+
+    The mixed tile: every slot contributes ``q_lens[s]`` real query rows,
+    right-aligned in the fixed ``Q`` columns — a decode slot rides at
+    ``q_lens = 1`` (its pending token in column Q-1, flagged in ``decode``),
+    a prefilling slot carries a chunk of its prompt at ``q_lens = c ≤ Q``.
+    Because tiles are right-aligned, ``logits[:, -1]`` is the last real
+    token's logits for every slot, so the same :func:`_sample_tokens` serves
+    both populations: for decode slots it is the next emitted token, for a
+    slot that just finished its prompt it is the first generated token, and
+    for a mid-prompt slot it is discarded by the engine.  ``lengths`` is the
+    per-slot cached length *before* this dispatch (== cache ``pos``).
+    Bit-identity with the separate paths is structural, not approximate:
+    prefill rows run the chunked-prefill gather+sdpa core and decode rows
+    run the decode kernel (``q_decode`` selection in the attention layer),
+    so each emitted token is the argmax/sample over *the same floats* the
+    separate prefill/decode dispatches would have produced.
+
+    Inactive slots run with ``q_lens = 0``: every row of theirs is a pad row
+    whose K/V writes land in the pool's write-off block (their tables are
+    additionally redirected there), and their ``pos`` does not advance.
+    ``last_logits`` rides back to the host so the engine can emit first
+    tokens of finishing prefills with the same host-side argmax/sampling it
+    uses on the separate path (bit-identical first tokens).
+    """
+
+    def mixed_step(params, caches, tokens, lengths, q_lens, decode, active,
+                   tables=None, key=None, temperature=0.0):
+        trash = _pool_trash_block(caches)
+        Q = tokens.shape[-1]
+        q_lens = jnp.where(active, q_lens, 0)
+        tabs = tables
+        if tabs is not None and trash is not None:
+            tabs = jnp.where(active[:, None], tabs, jnp.int32(trash))
+        # row 0 of the tile sits q_lens-Q rows *before* the slot's next
+        # position (pad rows get earlier/negative positions; discarded)
+        start = (lengths + q_lens - Q)[:, None]
+        logits, new_caches, _ = lm.forward(params, tokens, cfg, caches=caches,
+                                           start_pos=start, moe_no_drop=True,
+                                           tables=tabs, q_lens=q_lens,
+                                           q_decode=decode & active)
+
+        def merge(path, old, new):
+            if _leaf_name(path) in POOL_LEAVES:
+                return new          # pad/inactive writes went to the trash block
+            m = active.reshape((1, active.shape[0]) + (1,) * (old.ndim - 2))
+            return jnp.where(m, new, old)
+
+        caches = jax.tree_util.tree_map_with_path(merge, caches, new_caches)
+        nxt = _sample_tokens(logits, cfg, key if sample else None,
+                             temperature, top_k)
+        return nxt, logits[:, -1], caches
+
+    return mixed_step
 
 
 def make_serving_decode_guarded(cfg: ModelConfig, top_k: int = 0,

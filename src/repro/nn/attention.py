@@ -252,7 +252,7 @@ def _positions(batch: int, start, seq: int):
 
 
 def _paged_gqa_core(q, k, v, cfg: AttnConfig, positions, cache, tables,
-                    spec_decode: bool = False):
+                    spec_decode: bool = False, q_lens=None, q_decode=None):
     """Write the new K/V rows into the block pool and attend through it.
 
     ``pos`` must be a per-slot [B] vector (paged caches exist only in the
@@ -264,6 +264,25 @@ def _paged_gqa_core(q, k, v, cfg: AttnConfig, positions, cache, tables,
     speculative verify (``spec_decode``, small S = draft+1) keeps the kernel
     path with an S-row query tile instead — per-token decode semantics, no
     O(max_len) gather in the per-dispatch hot loop.
+
+    ``q_lens`` (mixed prefill+decode dispatch): int32 [B] of real query rows
+    per slot, right-aligned in the S-row tile — slot b's q_lens[b] real
+    tokens occupy rows S-q_lens[b]..S-1 so ``logits[:, -1]`` is the last
+    real token for every slot regardless of its q_len.  Pad rows write to
+    the pool's write-off block and their (lower, possibly negative) query
+    positions make every key invisible to them, so no real row ever reads a
+    pad row and pad-row outputs are discarded by the caller.  ``pos``
+    advances by ``q_lens``.
+
+    Bit-identity is the contract, so the mixed tile runs BOTH attention
+    implementations and selects per slot: prefill slots take the same
+    gather+sdpa core the dedicated chunked-prefill path uses (per-row
+    results are chunk- and batch-shape-invariant there), while slots flagged
+    in ``q_decode`` [B] take a single-row Pallas kernel call on the tile's
+    last column — exactly the dedicated decode dispatch's call.  One
+    implementation for both populations would be cheaper but would flip
+    greedy argmaxes on logit ties (the two cores round differently), and
+    mixed-on streams must equal mixed-off streams token for token.
 
     Writes for rows at or past the table's page span (a verify tile near a
     slot's ``max_len``, where rejected draft rows may overhang the budget)
@@ -278,6 +297,35 @@ def _paged_gqa_core(q, k, v, cfg: AttnConfig, positions, cache, tables,
     kp, vp = cache["k_pool"], cache["v_pool"]
     cdt = kp.dtype
     bs = kp.shape[1]
+    if q_lens is not None:
+        idx = jnp.arange(S, dtype=jnp.int32)[None, :]
+        off = (S - q_lens)[:, None]                                # pad rows
+        rows = pos[:, None] + idx - off                            # [B, S]
+        page = jnp.where(idx >= off, rows // bs, jnp.int32(P))
+        bids = jnp.take_along_axis(tables, jnp.minimum(page, P - 1), axis=1)
+        bids = jnp.where(page >= P, jnp.int32(kp.shape[0] - 1), bids)
+        slot = jnp.where(idx >= off, rows % bs, 0)
+        kp = kp.at[bids, slot].set(_cache_write(k, cdt))
+        vp = vp.at[bids, slot].set(_cache_write(v, cdt))
+        new_cache = {"k_pool": kp, "v_pool": vp, "pos": pos + q_lens}
+        kv_scale = KV_SCALE if cdt == jnp.int8 else None
+        # prefill rows: the dedicated chunked-prefill numerics (gather the
+        # table's pages once, mask keys at the slot's new length, sdpa)
+        Hkv, D = kp.shape[2], kp.shape[3]
+        ck = _cache_read(kp[tables].reshape(B, P * bs, Hkv, D), q.dtype)
+        cv = _cache_read(vp[tables].reshape(B, P * bs, Hkv, D), q.dtype)
+        slot_rows = jnp.arange(P * bs, dtype=jnp.int32)[None, :]
+        k_pos = jnp.where(slot_rows < (pos + q_lens)[:, None], slot_rows,
+                          jnp.int32(2**30))
+        o = sdpa(q, ck, cv, positions, k_pos, cfg.window)
+        if q_decode is not None:
+            # decode rows: the dedicated decode dispatch's kernel call on
+            # the tile's last column (their only real row)
+            od = paged_attention(q[:, -1], kp, vp, tables, pos + q_lens,
+                                 window=cfg.window, kv_scale=kv_scale)
+            last = jnp.where(q_decode[:, None, None], od, o[:, -1])
+            o = jnp.concatenate([o[:, :-1], last[:, None]], axis=1)
+        return o, new_cache
     rows = pos[:, None] + jnp.arange(S, dtype=jnp.int32)           # [B, S]
     page = rows // bs
     bids = jnp.take_along_axis(tables, jnp.minimum(page, P - 1), axis=1)
@@ -305,7 +353,8 @@ def _paged_gqa_core(q, k, v, cfg: AttnConfig, positions, cache, tables,
 
 
 def _gqa_attention(p, x, cfg: AttnConfig, positions, pos3d, cache, odin,
-                   tables=None, spec_decode: bool = False):
+                   tables=None, spec_decode: bool = False, q_lens=None,
+                   q_decode=None):
     B, S, _ = x.shape
     H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
     q = linear(x, p["q"], odin).reshape(B, S, H, D)
@@ -327,7 +376,8 @@ def _gqa_attention(p, x, cfg: AttnConfig, positions, pos3d, cache, odin,
         new_cache = None
     elif "k_pool" in cache:
         o, new_cache = _paged_gqa_core(q, k, v, cfg, positions, cache, tables,
-                                       spec_decode=spec_decode)
+                                       spec_decode=spec_decode, q_lens=q_lens,
+                                       q_decode=q_decode)
     else:
         pos = cache["pos"]
         size = cache["k"].shape[1]
@@ -439,13 +489,19 @@ def _mla_attention(p, x, cfg: AttnConfig, positions, cache, odin):
 
 def attention(p, x, cfg: AttnConfig, positions=None, pos3d=None, cache=None,
               odin: Optional[OdinConfig] = None, tables=None,
-              spec_decode: bool = False):
+              spec_decode: bool = False, q_lens=None, q_decode=None):
     """Returns (output [B,S,d_model], new_cache).  ``tables`` are the per-slot
     block tables of the paged serving cache (ignored by dense/MLA caches).
     ``spec_decode``: the S tokens are an in-flight speculative draft — paged
     caches attend through the multi-token-query kernel instead of the prefill
-    gather (dense/MLA caches already handle S > 1 with decode semantics)."""
+    gather (dense/MLA caches already handle S > 1 with decode semantics).
+    ``q_lens``: per-slot real-row counts of a mixed prefill+decode tile
+    (right-aligned; paged GQA caches only); ``q_decode`` [B] bool flags the
+    slots whose single real row is a decode step and must take the decode
+    kernel's numerics — see :func:`_paged_gqa_core`."""
     B, S, _ = x.shape
+    if q_lens is not None and (cache is None or "k_pool" not in cache):
+        raise ValueError("q_lens (mixed dispatch) requires a paged GQA cache")
     if positions is None:
         start = cache["pos"] if cache is not None else jnp.int32(0)
         if getattr(start, "ndim", 0) == 1:      # per-slot positions [B]
@@ -454,4 +510,5 @@ def attention(p, x, cfg: AttnConfig, positions=None, pos3d=None, cache=None,
     if cfg.kind == "mla":
         return _mla_attention(p, x, cfg, positions, cache, odin)
     return _gqa_attention(p, x, cfg, positions, pos3d, cache, odin, tables,
-                          spec_decode=spec_decode)
+                          spec_decode=spec_decode, q_lens=q_lens,
+                          q_decode=q_decode)

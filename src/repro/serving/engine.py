@@ -61,6 +61,7 @@ from repro.launch.steps import (init_serving_caches,
                                 make_serving_decode_guarded,
                                 make_serving_decode_horizon,
                                 make_serving_decode_step,
+                                make_serving_mixed_step,
                                 make_serving_spec_horizon,
                                 make_slot_prefill_step, pageable_block,
                                 speculable)
@@ -127,6 +128,28 @@ class ServingEngine:
         single-codebook vocabulary — ``speculable(cfg)``.
     spec_hist : token-history window for the n-gram draft match (per slot,
         device-resident; seeded from the prompt tail at admission).
+    mixed : fused mixed prefill+decode dispatch (chunked-prefill
+        piggybacking, à la Sarathi/vLLM).  While any slot is mid-prompt, ONE
+        dispatch carries [decode slots at q_len = 1] + [prefill slots at
+        q_len = chunk-or-less], packed by ``Scheduler.pack_mixed`` under
+        ``mixed_budget`` total query rows — running streams keep emitting
+        every dispatch instead of stalling behind an admission's prefill
+        loop, which is what makes steady-state TPOT independent of arrival
+        bursts.  ``None`` (default) enables it exactly when the whole model
+        state is paged (same gate as prefix sharing: the mixed tile writes
+        KV through the block tables, so per-slot dense/recurrent state
+        cannot ride along); ``True`` raises if the model is not fully
+        paged; ``False`` keeps the separate alternating prefill/decode
+        paths (the ``--no-mixed`` baseline).  Greedy mixed-on streams are
+        token-identical to mixed-off: each emitted token is still the
+        argmax at the same position over the same KV (requests carrying
+        ``extras`` always take the separate single-chunk prefill).
+    mixed_budget : total query rows per mixed dispatch (default
+        ``prefill_chunk + slots``: every decode slot rides along at full
+        chunk-rate prefill progress).  Decode rows are packed first; one
+        row is always reserved for the oldest mid-prefill slot.
+    jit_cache : max fused decode executables kept compiled (LRU over
+        (horizon, spec) grants; evictions counted in ``EngineStats``).
     jit_cache : max fused decode executables kept compiled (LRU over
         (horizon, spec) grants; evictions counted in ``EngineStats``).
     eos_id : token id that ends a request early (None disables; multi-
@@ -187,6 +210,8 @@ class ServingEngine:
                  block_size: int = 16, n_blocks: Optional[int] = None,
                  swap_blocks: int = 0, prefill_chunk: Optional[int] = None,
                  paged: bool = True, prefix_sharing: Optional[bool] = None,
+                 mixed: Optional[bool] = None,
+                 mixed_budget: Optional[int] = None,
                  horizon: int = 1, spec_ngram: int = 0, spec_hist: int = 64,
                  jit_cache: int = 8,
                  eos_id: Optional[int] = None,
@@ -310,6 +335,27 @@ class ServingEngine:
                 "keeps per-slot dense/recurrent state a shared block cannot "
                 "cover")
         self.prefix_sharing = bool(prefix_sharing)
+        # mixed dispatch shares prefix sharing's gate: the fused tile writes
+        # prompt KV through the block tables, so every cache leaf must be the
+        # pool (or the `pos` counter the mixed step re-derives).  Dense ring
+        # or recurrent state would need per-slot multi-row advances the
+        # [slots, Q] tile cannot express for heterogeneous q_lens.
+        if mixed is None:
+            mixed = fully_paged
+        elif mixed and not fully_paged:
+            raise ValueError(
+                "mixed=True needs a fully paged cache layout (non-windowed "
+                "GQA families with paged=True); this model keeps per-slot "
+                "dense/recurrent state a mixed prefill+decode tile cannot "
+                "advance by heterogeneous per-slot row counts")
+        self.mixed = bool(mixed)
+        self.mixed_budget = int(mixed_budget if mixed_budget is not None
+                                else self.chunk + slots)
+        if self.mixed and self.mixed_budget < 2:
+            raise ValueError(
+                f"mixed_budget must be >= 2 (one decode row plus one prefill "
+                f"row), got {self.mixed_budget}")
+        self._mixed: Optional[Callable] = None      # lazily jitted
         prefix_cache = (PrefixCache(self.pool, block_size)
                         if self.prefix_sharing else None)
         self.store = (PagedKVStore(self.caches, swap_blocks, block_size)
@@ -318,6 +364,11 @@ class ServingEngine:
                                swap_pool=self.store.pool if self.store else None,
                                prefix_cache=prefix_cache,
                                write_span=self.spec_ngram + 1)
+        # under mixed dispatch a prompt chain is registered only once its
+        # staged replay finishes (Scheduler.finish_prefill) — registering at
+        # admission would let a later arrival share blocks whose rows the
+        # staged prefill has not written yet
+        self.sched.defer_prefix_register = self.mixed
         self.stats = EngineStats()
         self.stats.kv_cache_bytes = self._kv_bytes()
         self.cost_model = OdinCostModel(attribution_cfg or cfg)
@@ -415,6 +466,7 @@ class ServingEngine:
                 "prefill_tokens": st.prefill_tokens,
                 "dispatches": st.dispatches,
                 "decode_dispatches": st.decode_dispatches,
+                "mixed_dispatches": st.mixed_dispatches,
                 "host_syncs": st.host_syncs,
                 "preempt_swap": st.preempt_swap,
                 "preempt_recompute": st.preempt_recompute,
@@ -488,19 +540,33 @@ class ServingEngine:
 
     # ------------------------------------------------------------- lifecycle
 
+    @staticmethod
+    def _extras_worst_replay(req: Request) -> int:
+        """Worst-case rows a (re-)prefill of this request can ever replay:
+        the prompt plus every generated token except the pending one (a
+        recompute preemption at max_new-1 generated tokens replays exactly
+        this many)."""
+        return req.prompt_len + req.max_new - 1
+
+    def _check_extras_fit(self, req: Request) -> None:
+        """THE extras/chunk guard — shared by submit() and the prefill path
+        so the two can never disagree.  The extras overlay (patch_embeds /
+        pos3d) only works when the whole replay lands in a single prefill
+        chunk; checking the worst-case replay length here means a request
+        that passes submit() can never be rejected mid-run at readmission."""
+        worst = self._extras_worst_replay(req)
+        if req.extras and worst > self.chunk:
+            raise ValueError(
+                f"request {req.rid}: extras (patch_embeds/pos3d) need the "
+                f"worst-case replay (prompt+max_new-1 = {worst}) to fit one "
+                f"prefill chunk ({self.chunk})")
+
     def submit(self, req: Request) -> None:
         if self.draining:
             raise ShuttingDown(
                 f"request {req.rid}: engine is draining — submissions after "
                 f"drain() begin get a typed rejection, never a silent hang")
-        if req.extras and req.prompt_len + req.max_new - 1 > self.chunk:
-            # extras overlay only works in a single prefill chunk, and a
-            # recompute preemption can re-prefill up to prompt+max_new-1
-            # tokens — reject here rather than mid-run at admission time.
-            raise ValueError(
-                f"request {req.rid}: extras (patch_embeds/pos3d) need "
-                f"prompt+max_new-1 = {req.prompt_len + req.max_new - 1} "
-                f"to fit one prefill chunk ({self.chunk})")
+        self._check_extras_fit(req)
         if req.deadline is None and self.deadline_s is not None:
             req.deadline = req.arrival + self.deadline_s
         if req.queue_timeout is None and self.queue_timeout_s is not None:
@@ -715,10 +781,8 @@ class ServingEngine:
         toks = req.replay_tokens()
         ntok = toks.shape[-1]
         extras = req.extras or {}
-        if extras and ntok > self.chunk:
-            raise ValueError(
-                f"request {req.rid}: extras (patch_embeds/pos3d) require the "
-                f"prompt ({ntok}) to fit one prefill chunk ({self.chunk})")
+        if extras:
+            self._check_extras_fit(req)     # same bound submit() enforced
         pos3d = extras.get("pos3d") if extras else None
         if pos3d is not None:
             pos3d = np.asarray(pos3d)
@@ -736,8 +800,11 @@ class ServingEngine:
             self.stats.prefix_hit_tokens += start0
             self.stats.shared_prefix_blocks += grant.shared_blocks
         trace = self.tracer.enabled
-        t0 = time.perf_counter()
-        t_trace0 = self._now() if trace else 0.0
+        # one clock domain for everything this dispatch records: metrics
+        # walls, stats time accounting and trace spans all read the engine
+        # clock (injectable / skew-clamped), never time.perf_counter —
+        # a deterministic test clock must see them agree exactly
+        t0 = self._now()
         chunk_sizes: List[int] = []
         # prefill writes K/V blocks straight into the pool via this row
         # (admission bumped table_version, so the mirror refreshes here)
@@ -762,7 +829,7 @@ class ServingEngine:
                 chunk_sizes.append(c)
                 start += c
             jax.block_until_ready(ll)
-        wall = time.perf_counter() - t0
+        wall = self._now() - t0
         self.stats.host_syncs += 1
         self.stats.prefill_time += wall
         self.stats.prefill_tokens += ntok - start0
@@ -772,11 +839,11 @@ class ServingEngine:
             # chunks are not individually synced, so the dispatch's engine-
             # clock span is split across chunks proportionally to their rows
             # (same interpolation philosophy as horizon token timestamps)
-            span = self._now() - t_trace0
+            span = wall
             track = self._slot_track(req.slot)
             total = max(1, ntok - start0)
-            self.tracer.flow_event("t", "request", track, req.rid, ts=t_trace0)
-            off, pos = t_trace0, start0
+            self.tracer.flow_event("t", "request", track, req.rid, ts=t0)
+            off, pos = t0, start0
             for i, c in enumerate(chunk_sizes):
                 dur = span * c / total
                 self.tracer.span(
@@ -800,6 +867,165 @@ class ServingEngine:
         self._set_last_tok(req.slot, pending)
         if self.spec_ngram:
             self._seed_hist(req)
+
+    # -------------------------------------------------- mixed dispatch path
+
+    def _reset_slot_pos(self, slot: int, value: int) -> None:
+        """Set every cache ``pos`` leaf for ``slot`` (fully paged layouts
+        keep no other per-slot state, so this is the whole slot reset a
+        staged admission needs before its first mixed dispatch)."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(self.caches)
+        out = []
+        for path, leaf in flat:
+            if _leaf_name(path) == "pos":
+                leaf = leaf.at[..., slot].set(jnp.int32(value))
+            out.append(leaf)
+        self.caches = jax.tree_util.tree_unflatten(treedef, out)
+
+    def _stage_mixed_admission(self, req: Request,
+                               grant: Optional[PrefixGrant] = None) -> None:
+        """Admission under mixed dispatch: run the COW fork and shared-prefix
+        accounting now, then mark the request mid-prefill — its replay is
+        staged through fused mixed dispatches (``_dispatch_mixed``), chunk
+        rows at a time, instead of the separate prefill loop."""
+        start0 = 0
+        if grant is not None:
+            if grant.fork is not None:
+                self._cow_fork(*grant.fork)
+            start0 = grant.start
+            self.stats.prefix_hit_tokens += start0
+            self.stats.shared_prefix_blocks += grant.shared_blocks
+        req.prefilling = True
+        req.prefill_pos = start0
+        self._slot_len[req.slot] = start0
+        self._reset_slot_pos(req.slot, start0)
+        if self.tracer.enabled:
+            self.tracer.flow_event("t", "request",
+                                   self._slot_track(req.slot), req.rid)
+
+    def _mixed_fn(self) -> Callable:
+        """Lazily-jitted mixed prefill+decode step.  One jit object; XLA
+        retraces per tile width Q, and the engine snaps Q to the next power
+        of two so the executable count is bounded by log2(chunk)+1."""
+        if self._mixed is None:
+            self._mixed = jax.jit(
+                make_serving_mixed_step(self.cfg, top_k=self.top_k,
+                                        sample=self.temperature > 0),
+                donate_argnums=(1,))
+        return self._mixed
+
+    def _dispatch_mixed(self) -> None:
+        """ONE fused dispatch over both populations: decode slots at
+        ``q_len = 1`` plus mid-prefill slots at ``q_len ≤ chunk``, packed by
+        ``Scheduler.pack_mixed`` under the ``mixed_budget`` row budget.
+
+        Decode rows emit exactly what the single-step path would have
+        emitted (the kernel's per-row online softmax makes each query row
+        independent, and right alignment puts every slot's last real token
+        at column Q-1); a prefill slot whose replay completes here gets its
+        first token from ``last_logits`` through the same host-side
+        ``_first_token`` path as the separate prefill — greedy mixed-on
+        streams are bit-identical to mixed-off."""
+        decode, parts = self.sched.pack_mixed(self.mixed_budget, self.chunk)
+        if not decode and not parts:
+            return
+        q_max = max([1] + [c for _, _, c in parts])
+        Q = 1 << (q_max - 1).bit_length()       # pow-2 tile widths, bounded
+        K = self.cfg.n_codebooks
+        tok = np.zeros((self.slots, K, Q) if K > 1 else (self.slots, Q),
+                       np.int32)
+        q_lens = np.zeros(self.slots, np.int32)
+        active = np.zeros(self.slots, bool)
+        dm = np.zeros(self.slots, bool)
+        for r in decode:
+            active[r.slot] = True
+            dm[r.slot] = True
+            q_lens[r.slot] = 1
+            # the pending token is host-resident in the stream — no device
+            # readback of _last_tok needed to build the tile
+            tok[r.slot, ..., -1] = np.asarray(r.generated[-1], np.int32)
+        for r, start, c in parts:
+            active[r.slot] = True
+            q_lens[r.slot] = c
+            tok[r.slot, ..., Q - c:] = np.asarray(
+                r.replay_tokens(), np.int32)[..., start:start + c]
+        t0 = self._now()            # engine clock: metrics ≡ stats ≡ trace
+        tables = self._refresh_tables()
+        key = jax.random.fold_in(self._sample_key, self.stats.decode_steps)
+        with self._annotate("mixed"):
+            nxt, last_logits, self.caches = self._mixed_fn()(
+                self.params, self.caches, jnp.asarray(tok),
+                jnp.asarray(self._slot_len), jnp.asarray(q_lens),
+                jnp.asarray(dm), jnp.asarray(active), tables, key,
+                jnp.float32(self.temperature))
+            host = np.asarray(nxt)                   # syncs the step
+            ll_host = np.asarray(last_logits) if parts else None
+        wall = self._now() - t0
+        dec_rows = len(decode)
+        pre_rows = sum(c for _, _, c in parts)
+        rows = dec_rows + pre_rows
+        # phase-attributed time: the dispatch is one wall, split across the
+        # decode/prefill ledgers proportionally to the rows each contributed
+        self.stats.decode_time += wall * dec_rows / rows
+        self.stats.prefill_time += wall * pre_rows / rows
+        self.metrics.observe("dispatch_mixed_s", wall)
+        self.stats.dispatches += 1
+        self.stats.host_syncs += 1
+        self.stats.mixed_dispatches += 1
+        self.stats.mixed_decode_rows += dec_rows
+        self.stats.mixed_prefill_rows += pre_rows
+        if self.tracer.enabled:
+            self.tracer.span(
+                "mixed", "dispatch", "dispatch", t0, wall,
+                args={"kind": "mixed", "q_tile": Q,
+                      "slots_active": int(active.sum()),
+                      "decode_rows": dec_rows, "prefill_rows": pre_rows,
+                      "tokens": dec_rows, "rows": rows, "host_syncs": 1,
+                      "odin_energy_mj": self.cost_model.energy_mj(rows)})
+        now = self._now()
+        if decode:
+            # the decode sampling-key schedule only advances when decode
+            # rows actually rode along (pure-prefill dispatches don't burn
+            # a fold_in index the separate path never would have)
+            self.stats.decode_steps += 1
+            self.stats.decode_dispatches += 1
+            self.stats.active_slot_steps += dec_rows
+            self.stats.slot_steps += self.slots
+            dmj = jnp.asarray(dm).reshape(
+                (self.slots,) + (1,) * (self._last_tok.ndim - 1))
+            self._last_tok = jnp.where(dmj, nxt, self._last_tok)
+            if self.spec_ngram:
+                # speculable ⇒ single codebook, so nxt is [slots, 1]
+                shifted = jnp.concatenate([self._hist[:, 1:], nxt], axis=1)
+                self._hist = jnp.where(jnp.asarray(dm)[:, None], shifted,
+                                       self._hist)
+        for r in decode:
+            self._slot_len[r.slot] += 1
+            self.stats.decode_tokens += 1
+            self._emit(r, host[r.slot, ..., 0], now)
+            if r.done:
+                self._complete(r, now)
+        for r, start, c in parts:
+            r.prefill_pos = start + c
+            self._slot_len[r.slot] = r.prefill_pos
+            self.stats.prefill_tokens += c
+            r.n_prefill_tokens += c
+            if r.prefill_pos < r.cached_len:
+                continue                            # more chunks to stage
+            self.sched.finish_prefill(r)
+            if r.n_generated == 0:
+                tok1 = self._first_token(ll_host[r.slot:r.slot + 1], r)
+                self._emit(r, tok1, now)
+                pending = tok1
+            else:
+                # readmitted after a recompute preemption: the pending token
+                # survived host-side, the replay only rebuilt the KV
+                pending = r.generated[-1]
+            self._set_last_tok(r.slot, pending)
+            if self.spec_ngram:
+                self._seed_hist(r)
+            if r.done:
+                self._complete(r, now)
 
     def step(self) -> bool:
         """One engine iteration; returns True while work remains.
@@ -889,7 +1115,15 @@ class ServingEngine:
                     flow=req.rid)
                 self.tracer.flow_event("t", "request", track, req.rid, ts=t0)
         for req in plan.admit:
-            self._prefill_request(req, now, plan.grants.get(req.rid))
+            if self.mixed and not req.extras:
+                # mixed dispatch: admission only stages the replay; the
+                # prompt runs through fused mixed dispatches below, chunk
+                # rows at a time, with decode slots riding along.  Requests
+                # carrying extras keep the separate path — the patch-embed
+                # overlay needs the whole replay in one dispatch.
+                self._stage_mixed_admission(req, plan.grants.get(req.rid))
+            else:
+                self._prefill_request(req, now, plan.grants.get(req.rid))
 
         # requests may finish straight out of prefill (max_new == 1)
         for req in list(self.sched.running.values()):
@@ -909,7 +1143,13 @@ class ServingEngine:
                                  "used": self.pool.used_blocks,
                                  "free": self.pool.free_blocks})
 
-        active_slots = sorted(self.sched.running)
+        # mid-prefill (staged) slots are excluded from every decode path —
+        # their cache holds only a replay prefix, so a decode row there
+        # would attend over unwritten KV
+        active_slots = sorted(
+            s for s, r in self.sched.running.items() if not r.prefilling)
+        mixed_pending = self.mixed and any(
+            r.prefilling for r in self.sched.running.values())
         spec_k = self.spec_ngram
         max_h = self.horizon
         if self.degrade is not None:
@@ -917,13 +1157,19 @@ class ServingEngine:
             max_h = self.degrade.horizon_cap(max_h)
         if nan_ev is not None and not active_slots:
             self.fault_plan.record(nan_ev, "skipped-idle")
-        if active_slots:
-            if nan_ev is not None:
-                # a poisoned step runs the guarded single-step kernel so the
-                # NaN is quarantined per-slot; greedy streams are horizon-
-                # invariant, so unfaulted co-batched slots stay bit-identical
-                self._decode_guarded_step(active_slots, nan_ev)
-            elif spec_k:
+        if active_slots and nan_ev is not None:
+            # a poisoned step runs the guarded single-step kernel so the
+            # NaN is quarantined per-slot; greedy streams are horizon-
+            # invariant, so unfaulted co-batched slots stay bit-identical.
+            # Mid-prefill slots sit this one step out (the guard has no
+            # mixed tile) and resume staging next step.
+            self._decode_guarded_step(active_slots, nan_ev)
+        elif mixed_pending:
+            # ONE dispatch carries decode rows and prefill-chunk rows; the
+            # horizon/spec fused paths resume once the prefill burst drains
+            self._dispatch_mixed()
+        elif active_slots:
+            if spec_k:
                 # speculation always rides the fused scan (h == 1 is one
                 # draft→verify→accept step); grant 0 ⇒ the pool cannot cover
                 # the worst-case K+1-row write span — plain single step
@@ -956,8 +1202,7 @@ class ServingEngine:
     def _decode_single_step(self, active_slots: List[int]) -> None:
         """One ``[slots, 1]`` decode dispatch (the horizon=1 parity baseline)."""
         trace = self.tracer.enabled
-        t0 = time.perf_counter()
-        t_before = self._now() if trace else 0.0
+        t0 = self._now()            # engine clock: metrics ≡ stats ≡ trace
         active = np.zeros(self.slots, bool)
         active[active_slots] = True
         tables = self._refresh_tables()  # growth may have extended tables
@@ -968,14 +1213,13 @@ class ServingEngine:
                 jnp.asarray(self._slot_len), jnp.asarray(active),
                 tables, key, jnp.float32(self.temperature))
             host = np.asarray(nxt)                   # syncs the step
-        wall = time.perf_counter() - t0
+        wall = self._now() - t0
         self.stats.decode_time += wall
         self.metrics.observe("dispatch_decode_s", wall)
         if trace:
             rows = len(active_slots)
             self.tracer.span(
-                "decode", "dispatch", "dispatch", t_before,
-                self._now() - t_before,
+                "decode", "dispatch", "dispatch", t0, wall,
                 args={"kind": "decode", "h": 1, "spec_k": 0,
                       "slots_active": rows, "tokens": rows, "rows": rows,
                       "host_syncs": 1,
@@ -1022,8 +1266,7 @@ class ServingEngine:
         same key schedule as the plain step, so unfaulted co-batched greedy
         streams stay bit-identical to a fault-free run."""
         trace = self.tracer.enabled
-        t0 = time.perf_counter()
-        t_before = self._now() if trace else 0.0
+        t0 = self._now()            # engine clock: metrics ≡ stats ≡ trace
         active = np.zeros(self.slots, bool)
         active[active_slots] = True
         poison = np.zeros(self.slots, bool)
@@ -1041,14 +1284,13 @@ class ServingEngine:
                 jnp.asarray(poison))
             host = np.asarray(nxt)                   # syncs the step
             badh = np.asarray(bad)
-        wall = time.perf_counter() - t0
+        wall = self._now() - t0
         self.stats.decode_time += wall
         self.metrics.observe("dispatch_decode_s", wall)
         if trace:
             rows = len(active_slots)
             self.tracer.span(
-                "decode", "dispatch", "dispatch", t_before,
-                self._now() - t_before,
+                "decode", "dispatch", "dispatch", t0, wall,
                 args={"kind": "decode", "h": 1, "spec_k": 0, "guarded": True,
                       "slots_active": rows, "tokens": rows, "rows": rows,
                       "host_syncs": 1,
@@ -1089,8 +1331,7 @@ class ServingEngine:
         timestamps are linearly interpolated over the dispatch's span *of the
         engine clock* (the host cannot observe inner-step boundaries — that
         is the point; an injected test clock stays self-consistent)."""
-        t0 = time.perf_counter()
-        t_before = self._now()
+        t_before = self._now()      # engine clock: metrics ≡ stats ≡ trace
         active = np.zeros(self.slots, bool)
         active[active_slots] = True
         rem = np.zeros(self.slots, np.int32)
@@ -1106,14 +1347,13 @@ class ServingEngine:
                 jnp.int32(self.stats.decode_steps),
                 jnp.int32(-1 if self.eos_id is None else self.eos_id))
             block, counts = jax.device_get((block, counts))  # ONE sync for h steps
-        wall = time.perf_counter() - t0
+        wall = self._now() - t_before
         self.stats.decode_time += wall
         self.metrics.observe("dispatch_decode_s", wall)
         if self.tracer.enabled:
             emitted = int(counts.sum())
             self.tracer.span(
-                "horizon", "dispatch", "dispatch", t_before,
-                self._now() - t_before,
+                "horizon", "dispatch", "dispatch", t_before, wall,
                 args={"kind": "horizon", "h": h, "spec_k": 0,
                       "slots_active": len(active_slots), "tokens": emitted,
                       "rows": emitted, "host_syncs": 1,
@@ -1125,7 +1365,7 @@ class ServingEngine:
         self.stats.active_slot_steps += int(counts.sum())
         self.stats.slot_steps += self.slots * h
         self._last_tok = last
-        span = self._now() - t_before            # engine-clock dispatch span
+        span = wall                              # engine-clock dispatch span
         for hh in range(h):                      # step-major: matches h=1 order
             t_h = t_before + (hh + 1) * span / h
             for s in active_slots:
@@ -1147,8 +1387,7 @@ class ServingEngine:
         over the dispatch's engine-clock span per inner step, and within a
         step across its accepted run."""
         K = self.spec_ngram
-        t0 = time.perf_counter()
-        t_before = self._now()
+        t_before = self._now()      # engine clock: metrics ≡ stats ≡ trace
         active = np.zeros(self.slots, bool)
         active[active_slots] = True
         rem = np.zeros(self.slots, np.int32)
@@ -1164,7 +1403,7 @@ class ServingEngine:
             block, counts = jax.device_get((block, counts))   # ONE sync
         self._last_tok = last
         self._hist = hist
-        wall = time.perf_counter() - t0
+        wall = self._now() - t_before
         self.stats.decode_time += wall
         self.metrics.observe("dispatch_decode_s", wall)
         self.stats.decode_steps += h
@@ -1189,8 +1428,7 @@ class ServingEngine:
                 self.sched.running[s].spec_overhead_rows += s_over
         if self.tracer.enabled:
             self.tracer.span(
-                "spec-horizon", "dispatch", "dispatch", t_before,
-                self._now() - t_before,
+                "spec-horizon", "dispatch", "dispatch", t_before, wall,
                 args={"kind": "spec-horizon", "h": h, "spec_k": K,
                       "slots_active": len(active_slots), "tokens": emitted,
                       "drafted": K * int(live.sum()),
@@ -1198,7 +1436,7 @@ class ServingEngine:
                       "rows": rows, "overhead_rows": rows - emitted,
                       "host_syncs": 1,
                       "odin_energy_mj": self.cost_model.energy_mj(rows)})
-        span = self._now() - t_before
+        span = wall
         last_t = {}
         for hh in range(h):                      # step-major: matches h=1 order
             for s in active_slots:
@@ -1275,7 +1513,9 @@ class ServingEngine:
                         summary=self.summary())
                 nxt = self.sched.next_arrival()
                 if nxt is not None and nxt > self._now():
-                    time.sleep(min(0.05, nxt - self._now()))
+                    # an injected ticking clock can advance between the
+                    # check above and this read — never sleep negative
+                    time.sleep(max(0.0, min(0.05, nxt - self._now())))
         return self.summary()
 
     def summary(self) -> Dict:

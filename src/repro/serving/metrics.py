@@ -51,6 +51,9 @@ class EngineStats:
     spec_drafted: int = 0                 # n-gram draft tokens verified
     spec_accepted: int = 0                # draft tokens accepted into streams
     spec_overhead_rows: int = 0           # verify rows computed beyond emitted
+    mixed_dispatches: int = 0             # fused prefill+decode launches
+    mixed_decode_rows: int = 0            # decode rows carried by mixed tiles
+    mixed_prefill_rows: int = 0           # prefill rows carried by mixed tiles
     swap_skipped_blocks: int = 0          # swap-out copies skipped (re-attach)
     jit_evictions: int = 0                # fused executables dropped (LRU)
     timeouts: int = 0                     # requests expired (deadline/queue)
@@ -228,6 +231,11 @@ def summarize(requests, stats: EngineStats, cost: Optional[OdinCostModel] = None
             "accepted": stats.spec_accepted,
             "accept_rate": stats.accept_rate,
             "overhead_rows": stats.spec_overhead_rows,
+        },
+        "mixed": {
+            "dispatches": stats.mixed_dispatches,
+            "decode_rows": stats.mixed_decode_rows,
+            "prefill_rows": stats.mixed_prefill_rows,
         },
         "jit_evictions": stats.jit_evictions,
         # terminal-state matrix: every request ends in exactly one of these

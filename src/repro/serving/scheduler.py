@@ -133,6 +133,13 @@ class Request:
     swap_block_ids: List[int] = field(default_factory=list)
     eos: bool = False                     # emitted the engine's eos_id
     ticket: object = None                 # SwapTicket while SWAPPED
+    # mixed-dispatch prefill progress: while ``prefilling`` the request's
+    # prompt replay is being staged through fused mixed dispatches and
+    # ``prefill_pos`` counts the replay rows already written (admission
+    # starts it at the prefix grant's ``start``).  The separate prefill
+    # path completes in one engine call and never sets ``prefilling``.
+    prefilling: bool = False
+    prefill_pos: int = 0
     n_prefill_tokens: int = 0             # includes recompute re-prefills
     spec_overhead_rows: int = 0           # verify rows beyond emitted tokens
     n_preempt_swap: int = 0
@@ -449,6 +456,12 @@ class Scheduler:
         # False stops registering new prompt chains (retention released)
         self.admission_hold: Optional[float] = None
         self.prefix_retain: bool = True
+        # mixed dispatch (engine-owned): defer prompt-chain registration to
+        # finish_prefill — registering at admission would let a later arrival
+        # alias blocks whose rows the staged prefill has not written yet
+        self.defer_prefix_register: bool = False
+        # round-robin cursor for decode rows under mixed-budget scarcity
+        self._mixed_rr: int = 0
         # preemption-victim policy hook: a key function over running requests
         # (max wins).  None keeps the default youngest-first ``(arrival,
         # rid)`` order; the front door installs a QoS-aware key that ranks
@@ -562,7 +575,10 @@ class Scheduler:
         dev_ids = list(req.block_table)     # snapshot for the swap-out copy
         swap_ids = None
         kept = 0
-        if self.swap_pool is not None:
+        # a mid-prefill request has written only ``prefill_pos`` of its
+        # ``cached_len`` rows — a swap-out would copy (and a resume restore)
+        # garbage for the unwritten tail, so force recompute instead
+        if self.swap_pool is not None and not req.prefilling:
             kept = self._kept_prefix(req)
             swap_ids = self.swap_pool.alloc(
                 self.swap_pool.blocks_for(req.cached_len) - kept)
@@ -582,6 +598,8 @@ class Scheduler:
             self.table_version += 1
             req.state = RequestState.QUEUED
             req.n_preempt_recompute += 1
+            req.prefilling = False
+            req.prefill_pos = 0
             heapq.heappush(self.waiting, (req.arrival, req.rid, req))
             plan.preempt.append((req, "recompute", None, old_slot, dev_ids))
         if self.tracer.enabled:
@@ -817,7 +835,7 @@ class Scheduler:
             if grant is not None:
                 plan.grants[req.rid] = grant
             if (self.prefix_cache is not None and not req.extras
-                    and self.prefix_retain):
+                    and self.prefix_retain and not self.defer_prefix_register):
                 self.prefix_cache.register(req)
             self._check_write_block(req)
             plan.admit.append(req)
@@ -835,6 +853,71 @@ class Scheduler:
                                     ts=now, args=args, flow=req.rid)
 
         return plan
+
+    # -- mixed prefill+decode packing ---------------------------------------
+
+    def pack_mixed(self, budget: int, chunk: int
+                   ) -> Tuple[List[Request], List[Tuple[Request, int, int]]]:
+        """Pack one fused dispatch under a total query-row ``budget``.
+
+        Returns ``(decode, parts)``: running slots that ride at q_len = 1
+        (their pending token decodes), and prefill assignments
+        ``(request, start, rows)`` — ``rows`` replay tokens starting at
+        replay offset ``start`` for each mid-prefill slot, capped at
+        ``chunk`` rows per slot per dispatch.
+
+        Fairness: decode rows are packed FIRST (Sarathi-style decode-
+        priority — steady-state TPOT never waits on a prompt), so with
+        ``budget ≥ running slots + 1`` no decode slot is ever skipped.
+        Under pathological scarcity (budget < decode population + 1) a
+        persistent round-robin cursor rotates which decode slots ride, so
+        no slot waits more than one rotation.  When any slot is
+        mid-prefill, one row is reserved for the oldest prefilling slot so
+        prefill always progresses ≥ 1 row per dispatch (TTFT cannot starve
+        behind decode either).
+
+        Pure bookkeeping — no allocation happens here: admission already
+        allocated the full replay footprint (``cached_len + 1`` rows), so
+        every prefill write row is table-covered.
+        """
+        running = sorted(self.running.values(),
+                         key=lambda r: (r.arrival, r.rid))
+        prefilling = [r for r in running if r.prefilling]
+        decoding = [r for r in running if not r.prefilling and not r.done]
+        rows_left = max(1, budget)
+        reserve = 1 if prefilling else 0
+        decode: List[Request] = []
+        if decoding:
+            cap = max(0, rows_left - reserve)
+            if len(decoding) <= cap:
+                decode = list(decoding)
+            elif cap:
+                order = sorted(decoding, key=lambda r: r.slot)
+                i0 = self._mixed_rr % len(order)
+                decode = [order[(i0 + i) % len(order)] for i in range(cap)]
+                self._mixed_rr = (i0 + cap) % len(order)
+            rows_left -= len(decode)
+        parts: List[Tuple[Request, int, int]] = []
+        for r in prefilling:
+            if rows_left <= 0:
+                break
+            c = min(chunk, r.cached_len - r.prefill_pos, rows_left)
+            if c <= 0:
+                continue
+            parts.append((r, r.prefill_pos, c))
+            rows_left -= c
+        return decode, parts
+
+    def finish_prefill(self, req: Request) -> None:
+        """A staged (mixed-dispatch) prefill wrote its last replay row.
+
+        Deferred prompt-chain registration happens here — the rows are now
+        physically resident, so later arrivals may alias them safely."""
+        req.prefilling = False
+        req.prefill_pos = req.cached_len
+        if (self.prefix_cache is not None and not req.extras
+                and self.prefix_retain):
+            self.prefix_cache.register(req)
 
     # -- horizon granting ---------------------------------------------------
 

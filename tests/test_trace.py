@@ -261,7 +261,9 @@ def test_engine_trace_spans_and_energy_attribution():
     obj = tracer.to_chrome()
     assert validate_chrome_trace(obj) == []
     kinds = {ev.name for ev in tracer.events() if ev.ph == "X"}
-    assert {"prefill-chunk", "horizon"} <= kinds
+    # phi4 is fully paged, so mixed dispatch is auto-on: prefill rides in
+    # "mixed" tiles; pure-decode ticks still use decode/horizon dispatches
+    assert {"mixed", "horizon"} <= kinds
     span_energy = sum((ev.args or {}).get("odin_energy_mj", 0.0)
                      for ev in tracer.events() if ev.ph == "X")
     assert span_energy == pytest.approx(summary["odin_total"]["energy_mj"],
@@ -271,6 +273,20 @@ def test_engine_trace_spans_and_energy_attribution():
         if ev.ph == "X" and ev.name in ("decode", "horizon", "spec-horizon"):
             assert {"kind", "h", "spec_k", "slots_active", "tokens", "rows",
                     "host_syncs", "odin_energy_mj"} <= set(ev.args)
+        if ev.ph == "X" and ev.name == "mixed":
+            assert {"kind", "q_tile", "slots_active", "tokens", "rows",
+                    "decode_rows", "prefill_rows", "host_syncs",
+                    "odin_energy_mj"} <= set(ev.args)
+
+    # the legacy separate-launch taxonomy survives under --no-mixed, with
+    # the same exact span-energy attribution
+    tracer, summary, _ = _traced_run(horizon=4, mixed=False)
+    kinds = {ev.name for ev in tracer.events() if ev.ph == "X"}
+    assert {"prefill-chunk", "horizon"} <= kinds and "mixed" not in kinds
+    span_energy = sum((ev.args or {}).get("odin_energy_mj", 0.0)
+                     for ev in tracer.events() if ev.ph == "X")
+    assert span_energy == pytest.approx(summary["odin_total"]["energy_mj"],
+                                        rel=1e-9)
 
 
 def test_engine_trace_lifecycle_ordering_and_flow_survives_preemption():
@@ -367,7 +383,9 @@ def test_engine_metrics_windows_and_histograms():
     m = summary["metrics"]
     assert m["window_s"] == 1.0
     hists = m["histograms"]
-    assert {"ttft_s", "dispatch_prefill_s", "dispatch_decode_s"} <= set(hists)
+    # mixed dispatch is auto-on for phi4: prefill rows ride in mixed tiles
+    # (dispatch_mixed_s); pure-decode ticks still observe dispatch_decode_s
+    assert {"ttft_s", "dispatch_mixed_s", "dispatch_decode_s"} <= set(hists)
     assert hists["ttft_s"]["count"] == len(summary["requests"])
     total_disp = sum(w["counters"].get("dispatches", 0) for w in m["windows"])
     assert total_disp == summary["dispatches"]
