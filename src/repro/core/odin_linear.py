@@ -117,10 +117,17 @@ def _rail_matmul(a_q, w_q, cfg: OdinConfig, luts=None):
     return dot.astype(jnp.float32)
 
 
-def odin_linear(x: jax.Array, w: jax.Array, cfg: OdinConfig = OdinConfig()) -> jax.Array:
+def odin_linear(x: jax.Array, w: jax.Array, cfg: OdinConfig = OdinConfig(),
+                drift_step: int = 0) -> jax.Array:
     """``x @ w`` under the configured ODIN execution mode.
 
     x: [..., K] activations; w: [K, N] weights.  Returns fp32 [..., N].
+
+    ``drift_step`` keys the PCRAM drift-noise excursion in *time*: real
+    resistance drift evolves between reads, so each dispatch should see a
+    fresh perturbation pattern, not the same frozen one.  Callers fold their
+    step counter in (a traced int32 is fine under jit); the default 0
+    reproduces the old per-call-identical behavior for a fixed seed.
     """
     if cfg.mode == "exact":
         return jnp.matmul(x, w)
@@ -149,7 +156,10 @@ def odin_linear(x: jax.Array, w: jax.Array, cfg: OdinConfig = OdinConfig()) -> j
 
     y = out * (aq.scale * wq.scale)
     if cfg.drift_noise > 0.0:
-        key = jax.random.PRNGKey(cfg.drift_seed)
+        # fold the step counter into the key so the excursion pattern moves
+        # over time like real drift (PRNGKey(seed) alone froze it per call)
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.drift_seed),
+                                 drift_step)
         y = y * (1.0 + cfg.drift_noise
                  * jax.random.normal(key, y.shape, jnp.float32))
     return y.reshape(*lead, w.shape[-1]).astype(jnp.float32)

@@ -41,8 +41,8 @@ from repro.launch import specs as specs_mod
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import lm, registry
 from repro.nn import module as nnmod
-from repro.serving import (SCENARIOS, FaultPlan, Request, ServingEngine,
-                           Tracer, make_requests)
+from repro.serving import (SCENARIOS, FaultPlan, ReliabilityConfig, Request,
+                           ServingEngine, Tracer, make_requests)
 
 __all__ = ["serve", "serve_static", "serve_listen", "main"]
 
@@ -245,6 +245,27 @@ def main():
     ap.add_argument("--degrade", action="store_true",
                     help="enable the graceful-degradation ladder (spec off → "
                          "horizon shrink → prefix release → admission denial)")
+    ap.add_argument("--reliability", action="store_true",
+                    help="enable the PCRAM reliability layer with defaults "
+                         "(wear-leveled allocation; no endurance budget, no "
+                         "scrub unless the flags below say so)")
+    ap.add_argument("--endurance-budget", type=int, default=None,
+                    help="per-block PCRAM write budget in cache rows; a block "
+                         "crossing it is drained (contents copied, tables "
+                         "remapped) and retired (implies --reliability)")
+    ap.add_argument("--no-wear-leveling", action="store_true",
+                    help="keep the seed LIFO free-list order instead of "
+                         "min-wear allocation (only meaningful with the "
+                         "reliability layer on)")
+    ap.add_argument("--scrub-rate", type=int, default=0, metavar="N",
+                    help="drift-refresh scrubber: rewrite up to N oldest-"
+                         "written resident blocks per step once past the "
+                         "drift deadline (implies --reliability; needs "
+                         "--drift-deadline-ms)")
+    ap.add_argument("--drift-deadline-ms", type=float, default=None,
+                    help="resistance-drift deadline: a resident block older "
+                         "than this since its last write is due for a scrub "
+                         "rewrite (implies --reliability)")
     ap.add_argument("--fault-plan", default=None, metavar="PATH",
                     help="seeded fault-injection plan (JSON, see repro.serving"
                          ".faults.FaultPlan); scenario mode only — faults are "
@@ -275,8 +296,19 @@ def main():
                  "test-mode only)")
     cfg = registry.get_smoke(args.arch) if args.smoke else registry.get_config(args.arch)
 
+    reliability = None
+    if (args.reliability or args.endurance_budget is not None
+            or args.scrub_rate or args.drift_deadline_ms is not None):
+        reliability = ReliabilityConfig(
+            endurance_budget=args.endurance_budget,
+            wear_leveling=not args.no_wear_leveling,
+            scrub_rate=args.scrub_rate,
+            drift_deadline_s=(args.drift_deadline_ms / 1e3
+                              if args.drift_deadline_ms is not None else None))
+
     tracer = Tracer(capacity=args.trace_capacity) if args.trace_out else None
     obs_kw = {"tracer": tracer, "metrics_window": args.metrics_window,
+              "reliability": reliability,
               "xla_annotations": args.xla_annotations,
               "deadline_s": (args.deadline_ms / 1e3
                              if args.deadline_ms is not None else None),

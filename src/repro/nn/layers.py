@@ -25,15 +25,19 @@ def linear_spec(d_in: int, d_out: int, axes: Tuple[Optional[str], Optional[str]]
     return ParamSpec((d_in, d_out), axes, dtype, init="fan_in", scale=scale)
 
 
-def linear(x: jax.Array, w: jax.Array, odin: Optional[OdinConfig] = None) -> jax.Array:
+def linear(x: jax.Array, w: jax.Array, odin: Optional[OdinConfig] = None,
+           drift_step: int = 0) -> jax.Array:
     """``x @ w`` routed through the configured ODIN execution mode.
 
     ``exact`` stays in the compute dtype (bf16 on TPU ⇒ MXU); ``int8``/``sc``
-    run the paper's quantized pipeline and cast back.
+    run the paper's quantized pipeline and cast back.  ``drift_step`` keys
+    the PCRAM drift-noise pattern in time (traced ints are fine under jit);
+    0 keeps the excursion fixed per seed.
     """
     if odin is None or odin.mode == "exact":
         return jnp.matmul(x, w.astype(x.dtype))
-    y = odin_linear(x.astype(jnp.float32), w.astype(jnp.float32), odin)
+    y = odin_linear(x.astype(jnp.float32), w.astype(jnp.float32), odin,
+                    drift_step=drift_step)
     return y.astype(x.dtype)
 
 

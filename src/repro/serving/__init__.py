@@ -11,6 +11,7 @@ The serving substrate over the repo's compiled prefill/decode steps:
 * :mod:`repro.serving.workload`  — synthetic open-loop arrival generators
 * :mod:`repro.serving.faults`    — seeded fault-injection plans + typed errors
 * :mod:`repro.serving.degrade`   — load-shedding ladder (graceful degradation)
+* :mod:`repro.serving.reliability` — PCRAM endurance/wear/scrub policy knobs
 * :mod:`repro.serving.frontdoor` — asyncio streaming front door (backpressure,
   per-tenant QoS, typed rejections, SSE server)
 
@@ -36,6 +37,7 @@ from repro.serving.faults import (FAULT_SITES, EngineStallError, FaultEvent,
 from repro.serving.frontdoor import (DoneEvent, FrontDoor, HeartbeatEvent,
                                      TokenBucket, TokenEvent, run_server)
 from repro.serving.metrics import EngineStats, OdinCostModel, summarize
+from repro.serving.reliability import ReliabilityConfig, wear_gini
 from repro.serving.scheduler import (TERMINAL_STATES, PrefixCache, PrefixGrant,
                                      Request, RequestState, Scheduler,
                                      StepPlan)
@@ -55,6 +57,7 @@ __all__ = [
     "FrontDoor", "TokenBucket", "TokenEvent", "HeartbeatEvent", "DoneEvent",
     "run_server",
     "DegradationController", "DegradeConfig", "DEGRADE_LEVELS",
+    "ReliabilityConfig", "wear_gini",
     "Tracer", "NullTracer", "NULL_TRACER", "LogHistogram", "MetricsRegistry",
     "chrome_trace", "validate_chrome_trace",
     "SCENARIOS", "WorkloadSpec", "make_requests", "poisson_arrivals",

@@ -35,10 +35,11 @@ Two tiers, mirroring the classic paged-KV serving design:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.nn.attention import POOL_LEAVES
 from repro.serving.faults import SwapCopyError
@@ -80,16 +81,42 @@ class BlockPool:
     asks it to release blocks before failing, so cached prefixes are evicted
     lazily under allocation pressure instead of eagerly on request
     completion.
+
+    **PCRAM reliability** (PR 10): the pool is the physical PCRAM, so it
+    carries per-block *write-endurance* accounting — ``record_writes`` bumps
+    a per-block wear counter (rows written) and a last-write wall clock, a
+    host-side mirror of device writes derived from the scheduler/StepPlan
+    bookkeeping.  ``policy="min_wear"`` orders the free list by a
+    wear-then-age score so allocation always picks the least-worn block
+    (ties: oldest-freed first), narrowing the wear distribution vs. the seed
+    LIFO order.  Blocks may be *retired* (bad-block management):
+    ``retire_free`` pulls a free block out of circulation, ``retire_used``
+    swaps a referenced block for a fresh one (the caller copies contents and
+    remaps tables).  Retired blocks shrink :attr:`usable_blocks`; the
+    conservation law becomes free ∪ referenced ∪ retired == pool.
     """
 
-    def __init__(self, n_blocks: int, block_size: int):
+    def __init__(self, n_blocks: int, block_size: int, *,
+                 policy: str = "lifo", endurance_budget: Optional[int] = None):
         if n_blocks < 0 or block_size <= 0:
             raise ValueError((n_blocks, block_size))
+        if policy not in ("lifo", "min_wear"):
+            raise ValueError(f"unknown alloc policy {policy!r}")
         self.n_blocks = n_blocks
         self.block_size = block_size
+        self.policy = policy
+        self.endurance_budget = endurance_budget
         self._free: List[int] = list(range(n_blocks - 1, -1, -1))
         self._refs: Dict[int, int] = {}
         self.reclaimer = None
+        # per-block endurance accounting (host mirror of device writes)
+        self.wear = np.zeros(n_blocks, np.int64)        # cache rows written
+        self.last_write = np.full(n_blocks, -1.0)       # wall clock, -1 ⇒ never
+        self.total_writes = 0                           # monotone row counter
+        self.retired: set = set()                       # bad blocks, out of play
+        self._freed_seq = np.zeros(n_blocks, np.int64)  # age tiebreak for min_wear
+        self._seq = 0
+        self._free_dirty = False
         # armed fault injection: the next N non-empty allocs fail (None
         # return, pool untouched) regardless of headroom — exercises every
         # caller's exhaustion fallback at moments the headroom math says are
@@ -112,6 +139,12 @@ class BlockPool:
         """Blocks an ``alloc`` could obtain right now: free + reclaimable."""
         extra = self.reclaimer.reclaimable() if self.reclaimer is not None else 0
         return len(self._free) + extra
+
+    @property
+    def usable_blocks(self) -> int:
+        """Total capacity net of retired bad blocks — what admission and
+        horizon grants must size against once retirement shrinks the pool."""
+        return self.n_blocks - len(self.retired)
 
     def refs(self, bid: int) -> int:
         """Current claim count on block ``bid`` (0 ⇒ free or out of range)."""
@@ -139,6 +172,12 @@ class BlockPool:
             self.reclaimer.reclaim(n - len(self._free))
         if n > len(self._free):
             return None
+        if self.policy == "min_wear" and self._free_dirty:
+            # lazy re-sort: pop() must yield the least-worn free block, ties
+            # broken oldest-freed-first (the age half of the hybrid score)
+            self._free.sort(key=lambda b: (self.wear[b], self._freed_seq[b]),
+                            reverse=True)
+            self._free_dirty = False
         ids = [self._free.pop() for _ in range(n)]
         for b in ids:
             self._refs[b] = 1
@@ -165,6 +204,9 @@ class BlockPool:
             if self._refs[b] == 0:
                 del self._refs[b]
                 self._free.append(b)
+                self._seq += 1
+                self._freed_seq[b] = self._seq
+                self._free_dirty = True
                 released += 1
         if ids and self.tracer.enabled:
             self.tracer.instant("release", "pool", "pool",
@@ -216,6 +258,70 @@ class BlockPool:
             return False
         table.extend(got)
         return True
+
+    def record_writes(self, pairs: Iterable[Tuple[int, int]],
+                      now: float = 0.0) -> int:
+        """Bill device writes to the endurance accounting.
+
+        ``pairs`` is ``(block_id, rows_written)`` — the host-side mirror of a
+        dispatch's KV scatters / block copies.  Bumps per-block wear and the
+        last-write clock; returns total rows billed.  Writes to retired
+        blocks are a bookkeeping bug upstream — rejected loudly.
+        """
+        rows = 0
+        for bid, n in pairs:
+            if n <= 0:
+                continue
+            if bid in self.retired:
+                raise ValueError(f"write billed to retired block {bid}")
+            self.wear[bid] += n
+            self.last_write[bid] = now
+            rows += n
+        self.total_writes += rows
+        return rows
+
+    def over_budget(self) -> List[int]:
+        """Non-retired blocks whose wear has crossed the endurance budget."""
+        if self.endurance_budget is None:
+            return []
+        worn = np.flatnonzero(self.wear >= self.endurance_budget)
+        return [int(b) for b in worn if b not in self.retired]
+
+    def retire_free(self, bid: int) -> None:
+        """Retire a block that currently sits on the free list."""
+        if bid in self.retired:
+            return
+        if bid in self._refs:
+            raise ValueError(f"retire_free of referenced block {bid}")
+        self._free.remove(bid)
+        self.retired.add(bid)
+        if self.tracer.enabled:
+            self.tracer.instant("retire", "pool", "pool",
+                                args={"block": bid, "wear": int(self.wear[bid]),
+                                      "usable": self.usable_blocks})
+
+    def retire_used(self, bid: int) -> Optional[int]:
+        """Retire a *referenced* block: allocate a replacement, transfer the
+        refcount claims to it, and retire ``bid``.  Returns the replacement
+        id (the caller must copy contents and remap every table that held
+        ``bid``), or None when no replacement block is available — ``bid``
+        stays live and the caller retries later."""
+        if bid in self.retired:
+            return None
+        if bid not in self._refs:
+            raise ValueError(f"retire_used of unreferenced block {bid}")
+        got = self.alloc(1)
+        if got is None:
+            return None
+        new = got[0]
+        self._refs[new] = self._refs.pop(bid)
+        self.retired.add(bid)
+        if self.tracer.enabled:
+            self.tracer.instant("retire", "pool", "pool",
+                                args={"block": bid, "remap_to": new,
+                                      "wear": int(self.wear[bid]),
+                                      "usable": self.usable_blocks})
+        return new
 
     def arm_alloc_failures(self, n: int = 1) -> None:
         """Fault injection: make the next ``n`` non-empty allocations fail

@@ -46,7 +46,11 @@ class DegradeConfig:
     ``queue_hi``/``queue_lo`` bound the *arrived* waiting-queue depth;
     ``churn_hi`` is preemptions-per-observation that count as pressure;
     ``accept_lo`` treats a draining speculative accept rate under mild
-    pool pressure as pressure too (verify rows are pure overhead then).
+    pool pressure as pressure too (verify rows are pure overhead then);
+    ``retired_hi`` is the PCRAM bad-block fraction (retired/total) above
+    which sustained capacity loss counts as pressure while the surviving
+    pool is actually loaded — a retirement storm walks the ladder to
+    admission denial instead of crashing into exhaustion.
     """
     pool_hi: float = 0.85
     pool_lo: float = 0.55
@@ -54,6 +58,7 @@ class DegradeConfig:
     queue_lo: int = 0
     churn_hi: int = 1
     accept_lo: float = 0.25
+    retired_hi: float = 0.25
     up_steps: int = 2
     down_steps: int = 6
     min_horizon: int = 2
@@ -86,7 +91,8 @@ class DegradationController:
 
     def observe(self, now: float, *, pool_frac: float, queue_depth: int,
                 churn: int, accept_rate: Optional[float] = None,
-                est_step_time: float = 0.0, active: int = 0) -> int:
+                est_step_time: float = 0.0, active: int = 0,
+                retired_frac: float = 0.0) -> int:
         """Feed one step's observables; returns the (possibly new) level.
 
         ``accept_rate`` is None when no drafting happened this window.
@@ -95,6 +101,10 @@ class DegradationController:
         reads as calm no matter how deep its queue — otherwise admission
         denial would deadlock (deny ⇒ nothing runs ⇒ queue never drains ⇒
         deny forever).  The restore path is the liveness guarantee.
+        ``retired_frac`` is the PCRAM bad-block fraction — sustained
+        retirement counts as pressure only while the surviving pool carries
+        real load (``pool_frac >= pool_lo``), so a mostly-idle engine with
+        old scars stays calm and can still restore.
         """
         c = self.cfg
         self._est_step_time = est_step_time
@@ -102,6 +112,8 @@ class DegradationController:
                     or (queue_depth >= c.queue_hi and active > 0)
                     or churn > c.churn_hi
                     or (accept_rate is not None and accept_rate < c.accept_lo
+                        and pool_frac >= c.pool_lo)
+                    or (retired_frac >= c.retired_hi
                         and pool_frac >= c.pool_lo))
         calm = (pool_frac <= c.pool_lo and churn == 0
                 and (queue_depth <= c.queue_lo or active == 0))

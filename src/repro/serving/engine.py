@@ -74,6 +74,7 @@ from repro.serving.degrade import DegradationController, DegradeConfig
 from repro.serving.faults import (EngineStallError, FaultPlan, ShuttingDown,
                                   SwapCopyError)
 from repro.serving.metrics import EngineStats, OdinCostModel, summarize
+from repro.serving.reliability import ReliabilityConfig
 from repro.serving.scheduler import (PrefixCache, PrefixGrant, Request,
                                      RequestState, Scheduler)
 from repro.serving.trace import NULL_TRACER, MetricsRegistry
@@ -204,6 +205,16 @@ class ServingEngine:
         (speculation off → horizon shrunk → prefix retention released →
         admission denial with structured retry-after), restoring in
         reverse under hysteresis.  None disables (no per-step cost).
+    reliability : PCRAM reliability layer — ``True`` for defaults
+        (wear-leveled allocation, no endurance budget, no scrub), a
+        :class:`~repro.serving.reliability.ReliabilityConfig` for full
+        control, or None/False (off).  Per-block write-endurance accounting
+        in the pool is always on (host-side bookkeeping); with a config
+        attached the engine additionally wear-levels allocation, drains and
+        retires blocks that cross the endurance budget (or are hit by a
+        ``stuck_at`` fault), and runs the drift-refresh scrubber — all via
+        block copies of identical bytes, so greedy streams stay
+        bit-identical with reliability on vs. off.
     """
 
     def __init__(self, cfg: ModelConfig, *, slots: int, max_len: int,
@@ -227,7 +238,8 @@ class ServingEngine:
                  queue_timeout_s: Optional[float] = None,
                  fault_plan: Optional[FaultPlan] = None,
                  nan_guard: Optional[bool] = None,
-                 degrade=None):
+                 degrade=None,
+                 reliability=None):
         if odin_mode is not None:
             cfg = cfg.with_overrides(odin_mode=odin_mode)
         if max_len % block_size:
@@ -318,7 +330,29 @@ class ServingEngine:
                     "a verify tile may overwrite ring rows up to K past the "
                     "committed length")
 
-        self.pool = BlockPool(n_blocks, block_size)
+        # ---- PCRAM reliability layer --------------------------------------
+        # True → defaults (wear-leveled allocation, no budget, no scrub);
+        # ReliabilityConfig → as given; None/False → off.  The wear
+        # *accounting* in the pool is always on (pure host bookkeeping) so
+        # the bench can compare allocator policies; budget-driven retirement
+        # and the drift scrubber only run with a config attached.
+        if reliability is None or reliability is False:
+            self.reliability: Optional[ReliabilityConfig] = None
+        elif reliability is True:
+            self.reliability = ReliabilityConfig()
+        else:
+            self.reliability = reliability
+        rel = self.reliability
+        # blocks flagged bad (stuck-at faults, failed retirements) awaiting
+        # drain+retire by the sweep — processed even with reliability off so
+        # an injected stuck_at fault is always contained
+        self._pending_bad: List[int] = []
+        self._gauge_tick = 0
+        self.pool = BlockPool(
+            n_blocks, block_size,
+            policy=("min_wear" if rel is not None and rel.wear_leveling
+                    else "lifo"),
+            endurance_budget=rel.endurance_budget if rel is not None else None)
         # prefix sharing needs the block pool to BE the whole model state:
         # every cache leaf either lives in the pool or is the per-slot `pos`
         # counter the tail prefill re-derives.  Any dense KV row or recurrent
@@ -474,7 +508,11 @@ class ServingEngine:
                 "spec_accepted": st.spec_accepted,
                 "spec_overhead_rows": st.spec_overhead_rows,
                 "decode_time_s": st.decode_time,
-                "prefill_time_s": st.prefill_time}
+                "prefill_time_s": st.prefill_time,
+                "pool_writes": st.pool_writes,
+                "retired_blocks": st.retired_blocks,
+                "scrub_copies": st.scrub_copies,
+                "scrub_rows": st.scrub_rows}
 
     def _set_last_tok(self, slot: int, tok) -> None:
         tok = jnp.asarray(tok, jnp.int32).reshape(self._last_tok.shape[1:])
@@ -688,6 +726,26 @@ class ServingEngine:
             elif ev.site == "clock_skew":
                 self._skew += ev.skew_s
                 self.fault_plan.record(ev, "applied", skew_s=ev.skew_s)
+            elif ev.site == "stuck_at":
+                # one PCRAM block develops a stuck-at cell: flag it for the
+                # reliability sweep to drain+retire before the next dispatch
+                if self.pool.n_blocks == 0:
+                    self.fault_plan.record(ev, "skipped-empty-pool")
+                else:
+                    bid = ev.slot % self.pool.n_blocks
+                    if bid in self.pool.retired:
+                        self.fault_plan.record(ev, "already-retired", block=bid)
+                    else:
+                        self._pending_bad.append(bid)
+                        self.fault_plan.record(ev, "flagged", block=bid)
+            elif ev.site == "wear_exhaustion":
+                # the count most-worn live blocks burn through their
+                # remaining endurance at once — a retirement storm
+                order = np.argsort(self.pool.wear, kind="stable")[::-1]
+                picked = [int(b) for b in order
+                          if int(b) not in self.pool.retired][:ev.count]
+                self._pending_bad.extend(picked)
+                self.fault_plan.record(ev, "flagged", blocks=picked)
             elif ev.site == "nan_logits":
                 if self._nan_guard:
                     nan_ev = ev
@@ -713,12 +771,16 @@ class ServingEngine:
         self._spec_mark = (self.stats.spec_drafted, self.stats.spec_accepted)
         ctl.observe(
             now,
-            pool_frac=self.pool.used_blocks / max(1, self.pool.n_blocks),
+            # occupancy over the SURVIVING capacity: retirement shrinks the
+            # denominator, so sustained bad-block loss reads as pressure
+            # through the same pool_frac trigger load always has
+            pool_frac=self.pool.used_blocks / max(1, self.pool.usable_blocks),
             queue_depth=sum(1 for a, _, _ in self.sched.waiting if a <= now),
             churn=churn,
             accept_rate=(d_acc / d_draft) if d_draft else None,
             est_step_time=self._est_step_time(),
-            active=len(self.sched.running))
+            active=len(self.sched.running),
+            retired_frac=len(self.pool.retired) / max(1, self.pool.n_blocks))
         self.sched.admission_hold = (ctl.retry_after(now)
                                      if ctl.deny_admission else None)
         self.sched.prefix_retain = not ctl.release_prefix
@@ -763,10 +825,148 @@ class ServingEngine:
             out.append(leaf)
         self.caches = jax.tree_util.tree_unflatten(treedef, out)
         self.stats.cow_forks += 1
+        # endurance: the fork physically programs a full block at dst
+        self.pool.record_writes([(dst, self.block_size)], self._now())
+        self.stats.pool_writes = self.pool.total_writes
         if self.tracer.enabled:
             self.tracer.span("cow-copy", "dispatch", "pool", t0,
                              self._now() - t0,
                              args={"kind": "cow-copy", "src": src, "dst": dst})
+
+    # ------------------------------------------------- PCRAM reliability
+
+    def _record_writes(self, req: Request, start: int, rows: int,
+                       now: float) -> None:
+        """Host-side endurance mirror of one dispatch's KV writes: bill rows
+        ``[start, start+rows)`` of the request's sequence to the pool blocks
+        its table maps them to.  Rows past the table's span are parked on
+        the kernel's write-off block (never a real pool block) — skipped."""
+        if rows <= 0:
+            return
+        bs = self.block_size
+        table = req.block_table
+        pairs = []
+        row = start
+        end = min(start + rows, self.max_len)
+        while row < end:
+            bi = row // bs
+            if bi >= len(table):
+                break                       # write-off parking, not PCRAM
+            n = min(end, (bi + 1) * bs) - row
+            pairs.append((table[bi], n))
+            row += n
+        if pairs:
+            self.pool.record_writes(pairs, now)
+            self.stats.pool_writes = self.pool.total_writes
+
+    def _update_wear_gauges(self) -> None:
+        if self.pool.n_blocks:
+            self.stats.wear_p99 = float(np.percentile(self.pool.wear, 99))
+            self.stats.wear_max = int(self.pool.wear.max())
+
+    def _maybe_update_wear_gauges(self) -> None:
+        """Per-step gauge refresh, throttled: wear moves by at most one
+        block's worth of rows per dispatch, but the percentile scan costs
+        more than the rest of the sweep — every 16th sweep tracks it
+        closely enough, and ``summary()`` recomputes exactly at read time."""
+        self._gauge_tick = (self._gauge_tick + 1) % 16
+        if self._gauge_tick == 0:
+            self._update_wear_gauges()
+
+    def _block_rewrite(self, pairs: List[Tuple[int, int]], kind: str,
+                       now: float) -> None:
+        """Execute block copies on the physical store and bill them: each
+        ``(src, dst)`` pair copies identical bytes (``src == dst`` for a
+        drift refresh in place), costs one block of PCRAM writes at the
+        destination, and is traced as a ``scrub`` span carrying its ODIN
+        energy — the rows land in the ``scrub`` phase of ``odin_phases``,
+        so span energies still sum exactly to ``odin_total``."""
+        if not pairs:
+            return
+        t0 = self._now()
+        # identity pairs (drift refresh in place) are byte no-ops on the
+        # functional cache arrays — executing them would copy whole pool
+        # leaves per sweep, an O(pool) simulation artifact with no modeled
+        # counterpart.  The physical PCRAM rewrite they represent is billed
+        # below (wear, energy, trace) exactly as if the scatter had run.
+        moves = [(s, d) for s, d in pairs if s != d]
+        if self.paged and moves:
+            src = jnp.asarray([s for s, _ in moves], jnp.int32)
+            dst = jnp.asarray([d for _, d in moves], jnp.int32)
+            flat, treedef = jax.tree_util.tree_flatten_with_path(self.caches)
+            out = []
+            for path, leaf in flat:
+                if _leaf_name(path) in POOL_LEAVES:
+                    leaf = leaf.at[:, dst].set(leaf[:, src])
+                out.append(leaf)
+            self.caches = jax.tree_util.tree_unflatten(treedef, out)
+        rows = len(pairs) * self.block_size
+        self.pool.record_writes([(d, self.block_size) for _, d in pairs], now)
+        self.stats.pool_writes = self.pool.total_writes
+        self.stats.scrub_copies += len(pairs)
+        self.stats.scrub_rows += rows
+        if self.tracer.enabled:
+            self.tracer.span(
+                "scrub", "dispatch", "pool", t0, self._now() - t0,
+                args={"kind": kind, "blocks": len(pairs), "rows": rows,
+                      "odin_energy_mj": self.cost_model.energy_mj(rows)})
+
+    def _reliability_sweep(self, now: float) -> None:
+        """Bad-block retirement + drift-refresh scrubbing, run between the
+        fault sweep and ``plan()`` so no dispatch is in flight while block
+        ids move.  Retirement drains each bad block through a block copy,
+        remaps every live claim (tables, kept prefixes, prefix cache) and
+        shrinks the usable pool; requests the surviving capacity can never
+        hold again are failed typed (``capacity``) instead of livelocking
+        admission.  Copies move identical bytes, so greedy streams stay
+        bit-identical with reliability on vs. off."""
+        rel = self.reliability
+        bad = list(self._pending_bad)
+        if rel is not None and rel.endurance_budget is not None:
+            bad.extend(self.pool.over_budget())
+        if bad:
+            bad = sorted(set(bad))
+            copies = self.sched.retire_blocks(bad)
+            self._pending_bad = [b for b in bad if b not in self.pool.retired]
+            self._block_rewrite(copies, "retire-drain", now)
+            self.stats.retired_blocks = len(self.pool.retired)
+            if self.tracer.enabled and copies:
+                self.tracer.counter(
+                    "retired blocks", "pool",
+                    {"retired": len(self.pool.retired),
+                     "usable": self.pool.usable_blocks})
+            # capacity containment: a request whose full footprint no longer
+            # fits the surviving pool can never finish — one typed terminal
+            # state now beats an admission livelock forever
+            usable = self.pool.usable_blocks
+            for req in self._all_live():
+                if self.pool.blocks_for(req.prompt_len + req.max_new) > usable:
+                    self._finalize(req, RequestState.FAILED, "capacity", now)
+        if rel is not None and rel.scrub_enabled:
+            self._scrub(now, rel)
+        self._maybe_update_wear_gauges()
+
+    def _scrub(self, now: float, rel: ReliabilityConfig) -> None:
+        """Drift refresh: rewrite the oldest-written resident blocks in
+        place (identical bytes — PCRAM re-SET/RESET restores the analog
+        level before drift crosses the read margin), at most ``scrub_rate``
+        blocks per step, once their last write is older than the drift
+        deadline."""
+        lw = self.pool.last_write
+        cand = np.flatnonzero((lw >= 0) & (now - lw >= rel.drift_deadline_s))
+        due = [int(b) for b in cand
+               if self.pool.refs(int(b)) > 0 and int(b) not in self.pool.retired]
+        if not due:
+            return
+        due.sort(key=lambda b: lw[b])
+        batch = due[:rel.scrub_rate]
+        self._block_rewrite([(b, b) for b in batch], "drift-refresh", now)
+
+    def _all_live(self) -> List[Request]:
+        live = [r for _, _, r in self.sched.waiting]
+        live += list(self.sched.swapped)
+        live += list(self.sched.running.values())
+        return [r for r in live if not r.terminal]
 
     def _prefill_request(self, req: Request, now: float,
                          grant: Optional[PrefixGrant] = None) -> None:
@@ -858,6 +1058,9 @@ class ServingEngine:
                 off += dur
                 pos += c
         self._slot_len[req.slot] = ntok
+        # endurance mirror: the replay scattered rows [start0, ntok) into
+        # the request's blocks (shared prefix rows were read, not written)
+        self._record_writes(req, start0, ntok - start0, self._now())
         if fresh:
             tok = self._first_token(ll, req)                   # [] or [K]
             self._emit(req, tok, self._now())
@@ -1000,12 +1203,14 @@ class ServingEngine:
                 self._hist = jnp.where(jnp.asarray(dm)[:, None], shifted,
                                        self._hist)
         for r in decode:
+            self._record_writes(r, int(self._slot_len[r.slot]), 1, now)
             self._slot_len[r.slot] += 1
             self.stats.decode_tokens += 1
             self._emit(r, host[r.slot, ..., 0], now)
             if r.done:
                 self._complete(r, now)
         for r, start, c in parts:
+            self._record_writes(r, start, c, now)
             r.prefill_pos = start + c
             self._slot_len[r.slot] = r.prefill_pos
             self.stats.prefill_tokens += c
@@ -1043,6 +1248,12 @@ class ServingEngine:
         if self.fault_plan is not None:
             nan_ev = self._apply_faults(now)
             now = self._now()              # clock skew may have moved it
+        # PCRAM reliability sweep: retire flagged/over-budget blocks and run
+        # the drift scrubber BEFORE planning, so block ids never move under
+        # an in-flight dispatch.  Pending stuck-at blocks are processed even
+        # with reliability off — fault containment is not optional.
+        if self._pending_bad or self.reliability is not None:
+            self._reliability_sweep(now)
         plan = self.sched.plan(now)
 
         trace = self.tracer.enabled
@@ -1100,6 +1311,16 @@ class ServingEngine:
                         args={"rid": req.rid, "direction": "in"},
                         flow=req.rid)
                 continue
+            # endurance mirror: the restore programmed one full block per
+            # copied-in device block (retained kept-prefix blocks were never
+            # copied — no wear there)
+            skip = req.ticket.skip_blocks
+            nbl = min(len(req.ticket.block_ids), len(req.block_table) - skip)
+            if nbl > 0:
+                self.pool.record_writes(
+                    [(b, self.block_size)
+                     for b in req.block_table[skip:skip + nbl]], self._now())
+                self.stats.pool_writes = self.pool.total_writes
             self.store.pool.free(req.ticket.block_ids)
             req.ticket = None
             self._slot_len[req.slot] = req.cached_len
@@ -1240,6 +1461,7 @@ class ServingEngine:
         now = self._now()
         for s in active_slots:
             req = self.sched.running[s]
+            self._record_writes(req, int(self._slot_len[s]), 1, now)
             self._slot_len[s] += 1
             self.stats.decode_tokens += 1
             self._emit(req, host[s, ..., 0], now)
@@ -1309,6 +1531,9 @@ class ServingEngine:
         now = self._now()
         for s in active_slots:
             req = self.sched.running[s]
+            # the forward wrote this slot's KV row whether or not the logit
+            # readout was poisoned — wear is physical, bill it either way
+            self._record_writes(req, int(self._slot_len[s]), 1, now)
             if badh[s]:
                 # quarantine: only the poisoned request fails; its garbage
                 # token never enters a stream and the slot is re-admittable
@@ -1365,6 +1590,12 @@ class ServingEngine:
         self.stats.active_slot_steps += int(counts.sum())
         self.stats.slot_steps += self.slots * h
         self._last_tok = last
+        now_w = self._now()
+        for s in active_slots:
+            # endurance mirror: the scan wrote counts[s] KV rows for this
+            # slot starting at its pre-dispatch length
+            self._record_writes(self.sched.running[s],
+                                int(self._slot_len[s]), int(counts[s]), now_w)
         span = wall                              # engine-clock dispatch span
         for hh in range(h):                      # step-major: matches h=1 order
             t_h = t_before + (hh + 1) * span / h
@@ -1436,6 +1667,18 @@ class ServingEngine:
                       "rows": rows, "overhead_rows": rows - emitted,
                       "host_syncs": 1,
                       "odin_energy_mj": self.cost_model.energy_mj(rows)})
+        now_w = self._now()
+        for s in active_slots:
+            # endurance mirror: every live inner step wrote a K+1-row verify
+            # tile at the slot's running position (rejected rows were
+            # physically written before rollback — their wear is real), and
+            # the position advanced by the accepted count
+            pos = int(self._slot_len[s])
+            for hh in range(h):
+                if live[s, hh]:
+                    self._record_writes(self.sched.running[s], pos, K + 1,
+                                        now_w)
+                    pos += int(counts[s, hh])
         span = wall
         last_t = {}
         for hh in range(h):                      # step-major: matches h=1 order
@@ -1520,6 +1763,8 @@ class ServingEngine:
 
     def summary(self) -> Dict:
         done = self._all_requests()
+        self._update_wear_gauges()
+        self.stats.retired_blocks = len(self.pool.retired)
         self.metrics.flush(self._now(), self._counter_snapshot())
         out = summarize(done, self.stats, self.cost_model,
                         registry=self.metrics)

@@ -19,6 +19,13 @@ site           what fires
                FAILED while co-batched slots keep bit-identical streams
 ``clock_skew`` the engine clock jumps by ``skew_s`` (negative jumps are
                clamped by the engine's monotone guard)
+``stuck_at``   one PCRAM block (``slot`` modulo the pool size) develops a
+               stuck-at cell fault — the reliability sweep must drain and
+               retire it before the next dispatch touches it
+``wear_exhaustion``
+               the ``count`` most-worn live blocks burn through their
+               remaining endurance at once — a retirement storm that must
+               walk the degradation ladder, never crash the pool
 =============  ==============================================================
 
 The plan is pure data (numpy only, no serving imports) so it can be
@@ -44,7 +51,8 @@ __all__ = [
     "ShuttingDown",
 ]
 
-FAULT_SITES = ("alloc", "swap_out", "swap_in", "nan_logits", "clock_skew")
+FAULT_SITES = ("alloc", "swap_out", "swap_in", "nan_logits", "clock_skew",
+               "stuck_at", "wear_exhaustion")
 
 
 class SwapCopyError(RuntimeError):
@@ -98,9 +106,11 @@ class ShuttingDown(Overloaded):
 class FaultEvent:
     """One scheduled fault: ``site`` fires at engine step ``step``.
 
-    ``count`` arms multi-shot sites (alloc/swap counters); ``slot`` picks
-    the poisoned slot for ``nan_logits`` (taken modulo the live slot count
-    at fire time); ``skew_s`` is the clock jump for ``clock_skew``.
+    ``count`` arms multi-shot sites (alloc/swap counters) and picks how many
+    worn blocks ``wear_exhaustion`` burns out; ``slot`` picks the poisoned
+    slot for ``nan_logits`` (taken modulo the live slot count at fire time)
+    and doubles as the bad-block selector for ``stuck_at`` (modulo the pool
+    size); ``skew_s`` is the clock jump for ``clock_skew``.
     """
     site: str
     step: int

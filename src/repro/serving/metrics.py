@@ -65,6 +65,12 @@ class EngineStats:
     faults_injected: int = 0              # fault events applied from the plan
     degrade_level: int = 0                # ladder level at last observation
     degrade_transitions: int = 0          # ladder moves (escalate + restore)
+    pool_writes: int = 0                  # cache rows written to PCRAM blocks
+    retired_blocks: int = 0               # bad blocks retired from the pool
+    scrub_copies: int = 0                 # blocks rewritten (scrub + retire drain)
+    scrub_rows: int = 0                   # cache rows those rewrites moved
+    wear_p99: float = 0.0                 # p99 of the per-block wear counters
+    wear_max: int = 0                     # most-worn block's write count
 
     @property
     def occupancy(self) -> float:
@@ -255,6 +261,16 @@ def summarize(requests, stats: EngineStats, cost: Optional[OdinCostModel] = None
             "level": stats.degrade_level,
             "transitions": stats.degrade_transitions,
         },
+        # PCRAM reliability: endurance accounting, bad-block retirement, and
+        # the drift-refresh scrubber's copy traffic
+        "reliability": {
+            "pool_writes": stats.pool_writes,
+            "retired_blocks": stats.retired_blocks,
+            "scrub_copies": stats.scrub_copies,
+            "scrub_rows": stats.scrub_rows,
+            "wear_p99": stats.wear_p99,
+            "wear_max": stats.wear_max,
+        },
         # raw counter mirror: keys pinned to the EngineStats dataclass fields
         # (tests/test_trace.py), so new counters surface here automatically
         "engine_stats": dataclasses.asdict(stats),
@@ -294,12 +310,15 @@ def summarize(requests, stats: EngineStats, cost: Optional[OdinCostModel] = None
         out["metrics"] = registry.summary()
     if cost is not None:
         # phase-attributed energy: rejected speculative rows are verify
-        # overhead, not free — odin_total is the sum of the three phases and
-        # (by construction) of every dispatch span's energy bill in a trace.
+        # overhead, not free — and neither are the reliability layer's block
+        # rewrites (drift-refresh scrub + retirement drains), which SET/RESET
+        # real PCRAM rows.  odin_total is the sum of the phases and (by
+        # construction) of every dispatch span's energy bill in a trace.
         phases = {
             "prefill": stats.prefill_tokens,
             "decode": stats.decode_tokens,
             "spec_verify_overhead": stats.spec_overhead_rows,
+            "scrub": stats.scrub_rows,
         }
         out["odin_phases"] = {
             name: {"rows": rows, "energy_mj": cost.energy_mj(rows)}

@@ -484,10 +484,10 @@ class Scheduler:
         if total > self.max_len:
             raise ValueError(
                 f"request {req.rid}: prompt+max_new = {total} exceeds max_len {self.max_len}")
-        if self.pool.blocks_for(total) > self.pool.n_blocks:
+        if self.pool.blocks_for(total) > self.pool.usable_blocks:
             raise ValueError(
                 f"request {req.rid}: needs {self.pool.blocks_for(total)} blocks, "
-                f"pool has {self.pool.n_blocks}")
+                f"pool has {self.pool.usable_blocks} usable")
         if req.max_new < 1:
             raise ValueError(f"request {req.rid}: max_new must be >= 1")
         heapq.heappush(self.waiting, (req.arrival, req.rid, req))
@@ -539,6 +539,84 @@ class Scheduler:
         req.state = state
         req.finish_reason = reason
         req.t_done = now
+
+    # -- PCRAM bad-block retirement -----------------------------------------
+
+    def retire_blocks(self, bad: List[int]) -> List[Tuple[int, int]]:
+        """Retire bad device blocks, remapping every live claim.
+
+        For each block: free → pulled straight off the free list; held only
+        by the prefix cache → the cached chain node is evicted first (its
+        content is reconstructible from tokens, no copy owed); referenced →
+        a replacement block is allocated, the refcount claims transfer, and
+        every holder (running block tables, swapped requests' kept-prefix
+        claims, the prefix-cache node) is remapped to the replacement.
+
+        Returns ``(old, new)`` pairs whose *contents the caller must copy*
+        on the physical store before the next dispatch reads them — called
+        by the engine's reliability sweep ahead of ``plan()``, so no
+        dispatch is in flight while ids move.  A referenced block with no
+        replacement available is left live (not retired); the caller retries
+        on a later sweep once pressure clears.
+
+        The returned pairs are safe to apply as ONE batched copy: free bad
+        blocks are retired first (so they can never be handed out as a
+        replacement), and a bad block that still ends up as a replacement
+        destination (cache eviction inside ``retire_used``'s alloc can
+        re-free one mid-loop) is deferred to a later call instead of being
+        retired now — a chained ``a→b, b→c`` copy in a single scatter would
+        hand ``c`` the *old* bytes of ``b``.
+        """
+        cache = self.prefix_cache
+        copies: List[Tuple[int, int]] = []
+        remapped = False
+        # pass 1: unreferenced (and cache-only) bad blocks leave the free
+        # list before any replacement allocation can pick them up
+        deferred = []
+        for bid in bad:
+            if bid in self.pool.retired:
+                continue
+            refs = self.pool.refs(bid)
+            if refs == 0:
+                self.pool.retire_free(bid)
+            elif cache is not None and cache.holds(bid) and refs == 1:
+                # cache-only claim: evict (frees the block), then retire —
+                # the chain rebuilds from tokens on the next matching prompt
+                cache._evict(cache._nodes[cache._by_block[bid]])
+                self.pool.retire_free(bid)
+            else:
+                deferred.append(bid)
+        # pass 2: referenced bad blocks drain through a replacement
+        dsts: set = set()
+        for bid in deferred:
+            if bid in dsts:
+                continue                    # became a replacement: next sweep
+            if self.pool.refs(bid) == 0:
+                # lost its claims mid-loop (eviction re-freed it)
+                self.pool.retire_free(bid)
+                continue
+            new = self.pool.retire_used(bid)
+            if new is None:
+                continue                    # no replacement yet: retry later
+            dsts.add(new)
+            for req in self.running.values():
+                for i, b in enumerate(req.block_table):
+                    if b == bid:
+                        req.block_table[i] = new
+                        remapped = True
+            for req in self.swapped:
+                for i, b in enumerate(req.kept_blocks):
+                    if b == bid:
+                        req.kept_blocks[i] = new
+                        remapped = True
+            if cache is not None and cache.holds(bid):
+                key = cache._by_block.pop(bid)
+                cache._by_block[new] = key
+                cache._nodes[key].block_id = new
+            copies.append((bid, new))
+        if remapped or copies:
+            self.table_version += 1
+        return copies
 
     # -- planning -----------------------------------------------------------
 
@@ -987,7 +1065,7 @@ class Scheduler:
         while h > 1 and extra_blocks(h) > self.pool.available_blocks:
             h //= 2
         if spec_k and (extra_blocks(h) > self.pool.available_blocks or any(
-                self.pool.blocks_for(rows_for(r, h)) > self.pool.n_blocks
+                self.pool.blocks_for(rows_for(r, h)) > self.pool.usable_blocks
                 for r in running)):
             h = 0                           # this step cannot verify a draft
         grew = False

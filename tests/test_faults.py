@@ -252,6 +252,11 @@ def test_chaos_sweep_covers_fault_sites():
     assert hits["alloc_armed"] > 0
     assert hits["swap_out_fault"] > 0
     assert hits["swap_in_fault"] > 0
+    # PCRAM bad-block arms: stuck-at flags, wear-exhaustion burns, and at
+    # least some retirements that had to drain+remap a *live* block
+    assert hits["retire_stuck"] > 0
+    assert hits["retire_worn"] > 0
+    assert hits["retire_remap"] > 0
 
 
 # ---------------------------------------------------------------------------

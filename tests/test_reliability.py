@@ -1,0 +1,348 @@
+"""PCRAM reliability layer: wear accounting, wear-leveling, retirement, scrub.
+
+Four layers, cheapest first:
+
+* pure-python units — ``ReliabilityConfig`` validation, :func:`wear_gini`,
+  ``BlockPool`` wear accounting / ``min_wear`` allocation order /
+  retire_free / retire_used / over_budget;
+* scheduler bookkeeping — ``retire_blocks`` drains and remaps every claim
+  class (running tables, swapped ``kept_blocks``, prefix-cache chains) and
+  the free/referenced/retired partition stays conserved;
+* allocator-policy property — under a churny alloc/free workload the
+  ``min_wear`` free-list order provably narrows the wear distribution
+  (Gini) vs. the seed LIFO order;
+* engine end-to-end (jax) — the stack's signature invariant: greedy token
+  streams are **bit-identical** with reliability on vs. off (wear-leveling,
+  budget-driven retirement, drift scrubbing — all of it), stuck_at /
+  wear_exhaustion faults are contained with every request terminal, and a
+  retirement storm walks capacity pressure into the degradation ladder
+  instead of crashing into pool exhaustion.
+"""
+import numpy as np
+import pytest
+
+from serving_harness import materialize, mixed_spec, run_workload
+
+from repro.core.odin_linear import OdinConfig, odin_linear
+from repro.serving import (DegradationController, DegradeConfig, FaultEvent,
+                           FaultPlan, ReliabilityConfig, Request, RequestState,
+                           Scheduler, wear_gini)
+from repro.serving.blocks import BlockPool
+from repro.serving.scheduler import PrefixCache
+
+
+# ---------------------------------------------------------------------------
+# config + wear_gini units
+# ---------------------------------------------------------------------------
+
+def test_reliability_config_validation_and_scrub_gate():
+    rel = ReliabilityConfig()
+    assert rel.wear_leveling and rel.endurance_budget is None
+    assert not rel.scrub_enabled                    # rate 0 ⇒ off
+    assert not ReliabilityConfig(scrub_rate=4).scrub_enabled   # no deadline
+    assert not ReliabilityConfig(drift_deadline_s=1.0).scrub_enabled
+    assert ReliabilityConfig(scrub_rate=1, drift_deadline_s=1.0).scrub_enabled
+    with pytest.raises(ValueError):
+        ReliabilityConfig(endurance_budget=0)
+    with pytest.raises(ValueError):
+        ReliabilityConfig(scrub_rate=-1)
+    with pytest.raises(ValueError):
+        ReliabilityConfig(drift_deadline_s=0.0)
+
+
+def test_wear_gini_units():
+    assert wear_gini([]) == 0.0
+    assert wear_gini([0, 0, 0]) == 0.0              # all-zero reads as even
+    assert wear_gini([5, 5, 5, 5]) == pytest.approx(0.0)
+    # all writes on one block of n → G = (n-1)/n
+    assert wear_gini([0, 0, 0, 12]) == pytest.approx(0.75)
+    even, skewed = [4, 5, 6, 5], [0, 1, 2, 17]
+    assert wear_gini(even) < wear_gini(skewed)
+
+
+# ---------------------------------------------------------------------------
+# BlockPool wear accounting + retirement units
+# ---------------------------------------------------------------------------
+
+def test_pool_record_writes_and_budget():
+    pool = BlockPool(4, 8, endurance_budget=10)
+    assert pool.record_writes([(0, 3), (1, 4), (0, 2)], now=1.5) == 9
+    assert pool.wear[0] == 5 and pool.wear[1] == 4 and pool.wear[2] == 0
+    assert pool.last_write[0] == 1.5 and pool.last_write[2] == -1.0
+    assert pool.total_writes == 9
+    assert pool.over_budget() == []
+    pool.record_writes([(0, 5)], now=2.0)
+    assert pool.over_budget() == [0]
+    # zero/negative row counts are ignored, not billed
+    assert pool.record_writes([(3, 0)], now=3.0) == 0
+    assert pool.last_write[3] == -1.0
+
+
+def test_pool_retire_free_and_used_conserve_partition():
+    pool = BlockPool(6, 8)
+    ids = pool.alloc(2)
+    pool.retire_free(next(b for b in range(6) if b not in ids))
+    assert pool.usable_blocks == 5
+    new = pool.retire_used(ids[0])
+    assert new is not None and new not in ids
+    assert pool.refs(new) == 1 and pool.refs(ids[0]) == 0
+    free, refs = pool.snapshot()
+    assert len(free) + len(refs) + len(pool.retired) == pool.n_blocks
+    assert not (set(free) | set(refs)) & pool.retired
+    # refcount transfers wholesale, not reset
+    pool.share([ids[1]])
+    new2 = pool.retire_used(ids[1])
+    assert pool.refs(new2) == 2
+    with pytest.raises(ValueError):
+        pool.record_writes([(ids[0], 1)])           # write to retired block
+    with pytest.raises(ValueError):
+        pool.retire_free(new)                       # still referenced
+    # pool exhausted ⇒ retire_used returns None and the block stays live
+    pool2 = BlockPool(1, 8)
+    [b] = pool2.alloc(1)
+    assert pool2.retire_used(b) is None
+    assert pool2.refs(b) == 1 and not pool2.retired
+
+
+def test_min_wear_policy_allocates_least_worn_first():
+    pool = BlockPool(4, 8, policy="min_wear")
+    ids = pool.alloc(4)
+    pool.record_writes([(0, 9), (1, 1), (2, 5), (3, 3)])
+    pool.free(ids)
+    assert pool.alloc(4) == [1, 3, 2, 0]            # ascending wear
+    # tie on wear → oldest-freed first
+    pool = BlockPool(3, 8, policy="min_wear")
+    ids = pool.alloc(3)
+    for b in (2, 0, 1):
+        pool.free([b])
+    assert pool.alloc(3) == [2, 0, 1]
+
+
+def test_min_wear_narrows_gini_vs_lifo_under_churn():
+    """The allocator-policy property the bench gates on: a churny
+    alloc/free workload concentrates writes on LIFO's hot top-of-stack
+    blocks, while min-wear rotation spreads them."""
+    def churn(policy, seed=0):
+        rng = np.random.default_rng(seed)
+        pool = BlockPool(32, 8, policy=policy)
+        held = []
+        for t in range(2000):
+            if held and rng.random() < 0.5:
+                ids = held.pop(int(rng.integers(0, len(held))))
+                pool.free(ids)
+            else:
+                got = pool.alloc(int(rng.integers(1, 4)))
+                if got is None:
+                    continue
+                pool.record_writes([(b, pool.block_size) for b in got],
+                                   now=float(t))
+                held.append(got)
+        return wear_gini(pool.wear)
+
+    g_lifo, g_wl = churn("lifo"), churn("min_wear")
+    assert g_wl < g_lifo, (g_wl, g_lifo)
+    assert g_wl < 0.5 * g_lifo                      # decisively narrower
+
+
+# ---------------------------------------------------------------------------
+# scheduler retirement: drain + remap every claim class
+# ---------------------------------------------------------------------------
+
+def _mini_sched(n_blocks=8, bs=4, slots=2, max_len=32, cache=True):
+    pool = BlockPool(n_blocks, bs)
+    pc = PrefixCache(pool, bs) if cache else None
+    sched = Scheduler(slots, pool, max_len, prefix_cache=pc)
+    return pool, pc, sched
+
+
+def test_retire_blocks_remaps_running_table():
+    pool, _, sched = _mini_sched(cache=False)
+    req = Request(rid=0, prompt=np.arange(6, dtype=np.int32), max_new=4,
+                  arrival=0.0)
+    sched.submit(req)
+    sched.plan(0.0)
+    assert req.slot is not None and req.block_table
+    bid = req.block_table[0]
+    v0 = sched.table_version
+    copies = sched.retire_blocks([bid])
+    assert copies and copies[0][0] == bid
+    new = copies[0][1]
+    assert req.block_table[0] == new and bid not in req.block_table
+    assert bid in pool.retired and pool.refs(new) == 1
+    assert sched.table_version > v0                 # device mirror refresh
+    # idempotent: retiring an already-retired block is a no-op
+    assert sched.retire_blocks([bid]) == []
+
+
+def test_retire_blocks_evicts_cache_only_chain_without_copy():
+    pool, pc, sched = _mini_sched()
+    req = Request(rid=0, prompt=np.arange(8, dtype=np.int32), max_new=2,
+                  arrival=0.0)
+    sched.submit(req)
+    sched.plan(0.0)
+    req.generated.extend(np.int32(i) for i in range(2))
+    sched.complete(req, 1.0)
+    held = pc.held_blocks()
+    assert held                                     # chain retained past life
+    bid = held[0]
+    copies = sched.retire_blocks([bid])
+    assert copies == []                             # evicted, nothing to drain
+    assert bid in pool.retired and not pc.holds(bid)
+    free, refs = pool.snapshot()
+    assert len(free) + len(refs) + len(pool.retired) == pool.n_blocks
+
+
+def test_retire_blocks_remaps_shared_cache_and_table_claim():
+    """A block shared between a running table and the prefix cache keeps
+    both claims on the replacement block."""
+    pool, pc, sched = _mini_sched()
+    prompt = np.arange(8, dtype=np.int32)
+    r0 = Request(rid=0, prompt=prompt, max_new=2, arrival=0.0)
+    sched.submit(r0)
+    sched.plan(0.0)
+    shared = [b for b in r0.block_table if pc.holds(b)]
+    assert shared                                   # prompt chain is cached
+    bid = shared[0]
+    refs_before = pool.refs(bid)
+    assert refs_before >= 2                         # table + cache claims
+    [(src, new)] = sched.retire_blocks([bid])
+    assert src == bid
+    assert pool.refs(new) == refs_before
+    assert new in r0.block_table and pc.holds(new) and not pc.holds(bid)
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder: retirement pressure
+# ---------------------------------------------------------------------------
+
+def test_degrade_retired_frac_is_a_pressure_input():
+    ctl = DegradationController(DegradeConfig(up_steps=2, retired_hi=0.25))
+    # scarred but idle pool (below pool_lo): calm, never escalates
+    for t in range(6):
+        assert ctl.observe(float(t), pool_frac=0.2, queue_depth=0, churn=0,
+                           retired_frac=0.5) == 0
+    # scarred AND loaded: escalates after up_steps
+    levels = [ctl.observe(10.0 + t, pool_frac=0.6, queue_depth=0, churn=0,
+                          retired_frac=0.3) for t in range(4)]
+    assert levels[-1] >= 1
+
+
+# ---------------------------------------------------------------------------
+# drift-noise time keying (satellite: OdinConfig.drift_noise)
+# ---------------------------------------------------------------------------
+
+def test_drift_noise_keyed_by_step():
+    import jax
+    k = jax.random.PRNGKey(3)
+    x = jax.random.normal(k, (4, 32))
+    w = jax.random.normal(jax.random.fold_in(k, 1), (32, 16))
+    cfg = OdinConfig(mode="int8", drift_noise=0.05, drift_seed=7)
+    y0a = np.asarray(odin_linear(x, w, cfg, drift_step=0))
+    y0b = np.asarray(odin_linear(x, w, cfg, drift_step=0))
+    y1 = np.asarray(odin_linear(x, w, cfg, drift_step=1))
+    default = np.asarray(odin_linear(x, w, cfg))
+    assert np.array_equal(y0a, y0b)                 # deterministic per step
+    assert np.array_equal(y0a, default)             # default step is 0
+    assert not np.array_equal(y0a, y1)              # pattern moves in time
+    base = np.asarray(odin_linear(x, w, OdinConfig(mode="int8")))
+    assert np.allclose(base, y1, rtol=0.3, atol=1.0)  # still a perturbation
+
+
+# ---------------------------------------------------------------------------
+# engine end-to-end (jax)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def phi4_setup():
+    return materialize("phi4-mini-3.8b")
+
+
+def test_engine_streams_bit_identical_reliability_on_off(phi4_setup):
+    """The tentpole invariant: wear-leveled allocation, budget-driven
+    retirement AND drift scrubbing only move identical bytes between
+    physical block ids — every greedy stream and terminal state is
+    bit-identical to the reliability-off run."""
+    cfg, params = phi4_setup
+    spec = mixed_spec(5, gen_buckets=(8, 24))
+    base, s0 = run_workload(cfg, params, spec=spec, seed=7, n_blocks=20,
+                            swap_blocks=24, horizon=4)
+    rel = ReliabilityConfig(endurance_budget=48, wear_leveling=True,
+                            scrub_rate=2, drift_deadline_s=0.02)
+    streams, s1 = run_workload(cfg, params, spec=spec, seed=7, n_blocks=20,
+                               swap_blocks=24, horizon=4, reliability=rel)
+    assert streams == base
+    assert {r["rid"]: r["state"] for r in s1["requests"]} == \
+           {r["rid"]: r["state"] for r in s0["requests"]}
+    r = s1["reliability"]
+    assert r["pool_writes"] > 0
+    assert r["scrub_rows"] == s1["odin_phases"]["scrub"]["rows"]
+    # the baseline run bills wear too (accounting is always on) but never
+    # scrubs or retires
+    assert s0["reliability"]["pool_writes"] > 0
+    assert s0["reliability"]["scrub_rows"] == 0
+    assert s0["reliability"]["retired_blocks"] == 0
+
+
+def test_engine_budget_retirement_drains_and_stays_identical(phi4_setup):
+    """A tight endurance budget forces mid-run retirement of live blocks;
+    streams still match and the pool partition survives."""
+    cfg, params = phi4_setup
+    spec = mixed_spec(4, gen_buckets=(16, 32))
+    base, _ = run_workload(cfg, params, spec=spec, seed=3, n_blocks=24)
+    # wear-leveling OFF keeps wear concentrated on the LIFO hot blocks so a
+    # mid-range budget retires a few of them without a capacity storm
+    rel = ReliabilityConfig(endurance_budget=12, wear_leveling=False)
+    streams, s = run_workload(cfg, params, spec=spec, seed=3, n_blocks=24,
+                              reliability=rel)
+    assert streams == base
+    assert s["reliability"]["retired_blocks"] > 0
+    assert s["reliability"]["scrub_copies"] > 0     # retire-drain copies
+    assert s["terminal"].get("done", 0) == 4
+
+
+def test_engine_stuck_at_fault_contained_and_remapped(phi4_setup):
+    """A stuck_at fault on a live block retires it before the next dispatch;
+    the victim's stream is unperturbed (identical bytes moved)."""
+    cfg, params = phi4_setup
+    spec = mixed_spec(4, gen_buckets=(16, 24))
+    base, _ = run_workload(cfg, params, spec=spec, seed=11)
+    plan = FaultPlan(events=(FaultEvent(site="stuck_at", step=6, slot=1),
+                             FaultEvent(site="stuck_at", step=9, slot=5)))
+    streams, s = run_workload(cfg, params, spec=spec, seed=11,
+                              fault_plan=plan)
+    assert streams == base
+    assert s["reliability"]["retired_blocks"] >= 1
+    assert sum(s["terminal"].values()) == 4
+
+
+def test_engine_wear_exhaustion_storm_all_terminal(phi4_setup):
+    """A wear_exhaustion burst retires the most-worn blocks at once; every
+    request still reaches exactly one terminal state (capacity-failed
+    requests are typed, not livelocked) and nothing escapes step()."""
+    cfg, params = phi4_setup
+    spec = mixed_spec(5, gen_buckets=(8, 24))
+    plan = FaultPlan(events=(FaultEvent(site="wear_exhaustion", step=4,
+                                        count=4),
+                             FaultEvent(site="wear_exhaustion", step=8,
+                                        count=4)))
+    streams, s = run_workload(cfg, params, spec=spec, seed=2, n_blocks=14,
+                              swap_blocks=24, fault_plan=plan, degrade=True)
+    assert sum(s["terminal"].values()) == 5
+    assert s["reliability"]["retired_blocks"] > 0
+    failed = [r for r in s["requests"] if r["state"] == "failed"]
+    assert all(r["finish_reason"] == "capacity" for r in failed)
+
+
+def test_engine_retirement_storm_engages_degradation_ladder(phi4_setup):
+    """Sustained retirement under load is a pressure input: the ladder must
+    leave ``normal`` before the pool exhausts."""
+    cfg, params = phi4_setup
+    spec = mixed_spec(6, gen_buckets=(16, 32))
+    events = tuple(FaultEvent(site="wear_exhaustion", step=st, count=2)
+                   for st in (3, 5, 7, 9))
+    _, s = run_workload(cfg, params, spec=spec, seed=4, n_blocks=16,
+                        swap_blocks=24, fault_plan=events and
+                        FaultPlan(events=events), degrade=True)
+    assert sum(s["terminal"].values()) == 6
+    assert s["reliability"]["retired_blocks"] > 0
+    assert s["degradation"]["transitions"] > 0

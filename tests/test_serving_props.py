@@ -7,9 +7,10 @@ no jax), checking after every step that
 * every block's refcount equals the number of running tables referencing it
   plus the prefix cache's claim plus any swapped request's retained
   (sharing-aware swap) claims,
-* no block is simultaneously free and referenced,
-* total pool accounting is conserved (free + referenced == n_blocks, on the
-  device AND the swap tier),
+* no block is simultaneously free and referenced (or retired and either),
+* total pool accounting is conserved (free ∪ referenced ∪ retired
+  partitions the pool on the device tier; free + referenced == n_blocks on
+  the swap tier),
 * tables never alias a block twice, always cover their request's cached
   rows, and every block the next decode dispatch may write (the full
   ``write_span`` under speculative emission) is table-exclusive,
@@ -93,10 +94,14 @@ class PoolInvariantDriver:
         self.all_reqs = []
         self.t = 0
         # chaos mode: a seeded rng injects cancellations, allocation
-        # failures, and swap copy faults at the same seams the engine's
-        # fault plan hits — the invariants must hold through ALL of them
+        # failures, swap copy faults, and PCRAM bad-block retirements
+        # (stuck-at flags + wear-exhaustion burns against a tight endurance
+        # budget) at the same seams the engine's fault plan hits — the
+        # invariants must hold through ALL of them
         self.chaos = chaos_rng
         self.chaos_hits = collections.Counter()
+        if chaos_rng is not None:
+            self.pool.endurance_budget = 64
 
     def submit_spec(self, rid: int, spec: ReqSpec) -> Request:
         bank = self.banks[spec.group] if self.banks else []
@@ -111,6 +116,12 @@ class PoolInvariantDriver:
     def _emit(self, req: Request) -> None:
         # deterministic token stream: replays hash to the same replay tokens
         req.generated.append(np.int32((req.rid * 31 + req.n_generated * 7) % 5))
+        # bill the decode write to the endurance accounting, like the engine
+        # does for every device KV scatter — record_writes raises loudly if
+        # a retirement remap ever left a table pointing at a retired block
+        bi = (req.cached_len - 1) // self.pool.block_size
+        if 0 <= bi < len(req.block_table):
+            self.pool.record_writes([(req.block_table[bi], 1)], float(self.t))
 
     def step(self) -> None:
         if self.chaos is not None:
@@ -179,6 +190,31 @@ class PoolInvariantDriver:
         if self.chaos.random() < 0.15:
             self.pool.arm_alloc_failures(int(self.chaos.integers(1, 3)))
             self.chaos_hits["alloc_armed"] += 1
+        # PCRAM bad-block chaos: stuck-at flags and wear-exhaustion burns,
+        # both landing in the same retire_blocks drain/remap path the engine
+        # uses.  Retirement is capacity-bounded: never shrink usable_blocks
+        # below what the largest still-live request needs, or the scheduler
+        # (correctly) can never drain the queue.
+        need = max((self.pool.blocks_for(len(r.prompt) + r.max_new)
+                    for r in self.all_reqs if not r.terminal), default=0)
+        headroom = self.pool.usable_blocks - max(need, 1)
+        if headroom >= 1 and self.chaos.random() < 0.15:
+            bid = int(self.chaos.integers(0, self.pool.n_blocks))
+            if bid not in self.pool.retired:
+                copies = self.sched.retire_blocks([bid])
+                self.chaos_hits["retire_stuck"] += 1
+                self.chaos_hits["retire_remap"] += len(copies)
+        if headroom >= 1 and self.chaos.random() < 0.1:
+            live = [b for b in range(self.pool.n_blocks)
+                    if b not in self.pool.retired]
+            bid = live[int(self.chaos.integers(0, len(live)))]
+            self.pool.record_writes([(bid, self.pool.endurance_budget)],
+                                    float(self.t))
+            worn = self.pool.over_budget()
+            assert bid in worn
+            copies = self.sched.retire_blocks(worn[:1])
+            self.chaos_hits["retire_worn"] += 1
+            self.chaos_hits["retire_remap"] += len(copies)
 
     def run(self, specs, max_steps: int = 3000) -> None:
         for rid, spec in enumerate(specs):
@@ -215,12 +251,16 @@ class PoolInvariantDriver:
         for r in self.sched.swapped:     # sharing-aware swap retained claims
             counts.update(r.kept_blocks)
         # every refcount equals the number of tables referencing the block
-        # (plus the cache's and swapped-retained claims); nothing referenced
-        # is free; conservation
+        # (plus the cache's and swapped-retained claims); free / referenced /
+        # retired partition the pool (pairwise disjoint, conserved in total)
+        retired = self.pool.retired
         assert dict(counts) == refs, (dict(counts), refs)
         assert not (set(free) & set(refs))
+        assert not (set(free) & retired)
+        assert not (set(refs) & retired)
         assert len(free) == len(set(free))
-        assert len(free) + len(refs) == self.pool.n_blocks
+        assert len(free) + len(refs) + len(retired) == self.pool.n_blocks
+        assert self.pool.usable_blocks == self.pool.n_blocks - len(retired)
         bs = self.pool.block_size
         for r in self.sched.running.values():
             assert len(r.block_table) == len(set(r.block_table))
@@ -232,6 +272,9 @@ class PoolInvariantDriver:
             last = (r.cached_len + self.sched.write_span - 1) // bs
             for idx in range(first, min(last + 1, len(r.block_table))):
                 wb = r.block_table[idx]
+                # never write into a retired (bad) block — retirement must
+                # have remapped every live table before the next dispatch
+                assert wb not in retired
                 held = 1 if (self.cache is not None
                              and self.cache.holds(wb)) else 0
                 assert self.pool.refs(wb) - held == 1

@@ -18,9 +18,9 @@ import pytest
 from serving_harness import materialize, mixed_spec, run_workload
 
 from repro.serving import (NULL_TRACER, EngineStats, LogHistogram,
-                           MetricsRegistry, NullTracer, Request, ServingEngine,
-                           Tracer, chrome_trace, make_requests, summarize,
-                           validate_chrome_trace)
+                           MetricsRegistry, NullTracer, ReliabilityConfig,
+                           Request, ServingEngine, Tracer, chrome_trace,
+                           make_requests, summarize, validate_chrome_trace)
 
 
 # ---------------------------------------------------------------------------
@@ -375,7 +375,42 @@ def test_engine_stats_fields_all_reported_in_summary():
     _, summary, _ = _traced_run()
     fields = {f.name for f in dataclasses.fields(EngineStats)}
     assert set(summary["engine_stats"]) == fields
+    # the PCRAM reliability counters ride in EngineStats and must therefore
+    # be in the mirror too — plus their curated summary section
+    assert {"pool_writes", "retired_blocks", "scrub_copies", "scrub_rows",
+            "wear_p99", "wear_max"} <= fields
+    assert set(summary["reliability"]) == {
+        "pool_writes", "retired_blocks", "scrub_copies", "scrub_rows",
+        "wear_p99", "wear_max"}
     json.dumps(summary, allow_nan=False)
+
+
+def test_reliability_scrub_phase_energy_attribution_exact():
+    """With the drift scrubber on, scrub rows join ``odin_phases`` as their
+    own phase, phase rows/energy still sum exactly to ``odin_total``, and
+    every scrub span carries its own ODIN bill so trace-span energies stay
+    an exact partition of the run's total."""
+    tracer, summary, _ = _traced_run(
+        horizon=4,
+        reliability=ReliabilityConfig(scrub_rate=2, drift_deadline_s=0.02))
+    rel = summary["reliability"]
+    assert rel["pool_writes"] > 0 and rel["scrub_rows"] > 0
+    phases = summary["odin_phases"]
+    assert phases["scrub"]["rows"] == rel["scrub_rows"]
+    assert sum(p["rows"] for p in phases.values()) == summary["odin_total"]["tokens"]
+    assert sum(p["energy_mj"] for p in phases.values()) == pytest.approx(
+        summary["odin_total"]["energy_mj"])
+    span_energy = sum((ev.args or {}).get("odin_energy_mj", 0.0)
+                      for ev in tracer.events() if ev.ph == "X")
+    assert span_energy == pytest.approx(summary["odin_total"]["energy_mj"],
+                                        rel=1e-9)
+    scrubs = [ev for ev in tracer.events()
+              if ev.ph == "X" and ev.name == "scrub"]
+    assert scrubs
+    assert all({"kind", "blocks", "rows", "odin_energy_mj"} <= set(ev.args)
+               for ev in scrubs)
+    assert {ev.args["kind"] for ev in scrubs} <= {"drift-refresh",
+                                                  "retire-drain"}
 
 
 def test_engine_metrics_windows_and_histograms():
